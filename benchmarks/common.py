@@ -1,0 +1,61 @@
+"""Shared benchmark scaffolding: tiny model fixture, jitter models, CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import TINY_ARCHS
+from repro.models.api import make_model
+
+CSV_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    CSV_ROWS.append(row)
+    print(row, flush=True)
+
+
+def bench_model(arch: str = "qwen2-1.5b", seed: int = 0):
+    api = make_model(TINY_ARCHS[arch])
+    params = api.init_params(jax.random.PRNGKey(seed))
+    return api, params
+
+
+def bench_serve_config(**kw) -> ServeConfig:
+    base = dict(num_slots=16, max_prompt_len=32, max_new_tokens=16,
+                decode_batch=8, window=24, admit_per_step=4,
+                page_size=8, num_pages=128, eos_token=-1)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def make_jitter(mean_s: float, seed: int = 0) -> Callable[[], None]:
+    """Deterministic lognormal host-delay model. mean_s=0 -> no-op.
+
+    Models the paper's §3.2 observation: under colocation every host-side
+    operation inflates (attention dispatch +104%, cudaLaunchKernel +115%,
+    KV-cache dispatch +172%) because of LLC/TLB contention."""
+    if mean_s <= 0:
+        return lambda: None
+    rng = np.random.default_rng(seed)
+
+    def jitter():
+        # lognormal with the requested mean, sigma=0.5 (moderate tail)
+        sigma = 0.5
+        mu = np.log(mean_s) - sigma ** 2 / 2
+        time.sleep(float(rng.lognormal(mu, sigma)))
+
+    return jitter
+
+
+def submit_trace_to_host(host, prompts, outs, arrivals_steps):
+    """Submit with arrival tickets; returns slots."""
+    slots = []
+    for p, o, a in zip(prompts, outs, arrivals_steps):
+        slots.append(host.submit(list(p), max_new=int(o), arrival=int(a)))
+    return slots

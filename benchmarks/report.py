@@ -1,0 +1,59 @@
+"""Generate the EXPERIMENTS.md §Roofline table + §Perf comparison from the
+dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.report [--markdown]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_all():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r):
+    rl = r["roofline"]
+    hlo_total = r["cost"].get("flops", 0) * r["chips"]
+    useful = rl["model_flops_total"] / hlo_total if hlo_total else float("nan")
+    mem = rl.get("memory_s", 0)
+    raw = rl.get("memory_raw_s", mem)
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rl['compute_s']*1e3:.2f} | {mem*1e3:.1f} | "
+            f"{rl['collective_s']*1e3:.2f} | "
+            f"{rl['bottleneck'].replace('_s','')} | {useful:.2f} | "
+            f"{r.get('tag') or '-'} |")
+
+
+def main():
+    recs = load_all()
+    print("| arch | shape | mesh | compute ms | memory ms | collective ms | "
+          "bottleneck | useful | tag |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    skips = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            skips.append((r["arch"], r["shape"], r["mesh"]))
+            continue
+        if r.get("status") != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR "
+                  f"| | | | | {r.get('tag') or '-'} |")
+            continue
+        print(fmt_row(r))
+    print(f"\nskipped (documented): {len(skips)}")
+    for a, s, m in skips:
+        print(f"  - {a} x {s} ({m})")
+
+
+if __name__ == "__main__":
+    main()

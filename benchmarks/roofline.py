@@ -1,0 +1,62 @@
+"""Roofline aggregation (deliverable g): reads experiments/dryrun/*.json and
+prints the per-(arch x shape x mesh) roofline table — the three terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+
+This is a REPORT, not a pass/fail: dryrun.py must have been run first
+(python -m repro.launch.dryrun --all).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(tag_filter=""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag_filter:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def main() -> None:
+    recs = load_records()
+    if not recs:
+        emit("roofline_missing", 0.0, "run `python -m repro.launch.dryrun --all` first")
+        return
+    n_ok = n_skip = 0
+    for rec in recs:
+        key = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        if rec["status"] == "skipped":
+            n_skip += 1
+            emit(key, 0.0, "skipped:" + rec["skip_reason"][:60].replace(",", ";"))
+            continue
+        if rec["status"] != "ok":
+            emit(key, 0.0, "ERROR")
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        hlo_flops_total = rec["cost"].get("flops", 0.0) * rec["chips"]
+        useful = (r["model_flops_total"] / hlo_flops_total
+                  if hlo_flops_total else float("nan"))
+        dominant_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(key, dominant_s * 1e6,
+             f"compute_ms={r['compute_s']*1e3:.2f};"
+             f"memory_ms={r['memory_s']*1e3:.2f};"
+             f"collective_ms={r['collective_s']*1e3:.2f};"
+             f"bottleneck={r['bottleneck'].replace('_s','')};"
+             f"useful_flops_frac={useful:.2f}")
+    emit("roofline_summary", 0.0, f"ok={n_ok};skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

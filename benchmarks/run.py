@@ -1,0 +1,55 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
+
+  fig3_makespan        Fig. 3  device- vs host-resident scheduling makespan
+  table6_presaturation Table 6 pre-saturation P99 TTFT/TPOT + throughput
+  table7_interference  Table 7 / Fig. 1 CPU-interference retention
+  fig4_tokenizer       Fig. 4  DPU tokenizer throughput vs naive baseline
+  fig8_energy          Fig. 8  energy-per-token proxy
+  kernels              §4.2    Pallas kernels vs oracles
+  roofline             (g)     dry-run roofline table
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig3_makespan, fig4_tokenizer, fig8_energy, kernels,
+                        roofline, table6_presaturation, table7_interference)
+from benchmarks.common import emit
+
+MODULES = [
+    ("fig4_tokenizer", fig4_tokenizer),
+    ("kernels", kernels),
+    ("fig3_makespan", fig3_makespan),
+    ("table6_presaturation", table6_presaturation),
+    ("table7_interference", table7_interference),
+    ("fig8_energy", fig8_energy),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod.main()
+            emit(f"_{name}_total", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:
+            traceback.print_exc()
+            emit(f"_{name}_total", (time.time() - t0) * 1e6,
+                 f"FAILED:{type(e).__name__}")
+            failures += 1
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

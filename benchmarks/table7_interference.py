@@ -1,0 +1,104 @@
+"""Table 7 / Fig. 1 reproduction: performance under CPU interference.
+
+The jitter model injects lognormal host delays on every HOST TOUCH —
+the paper's §3.2 measurement that colocated pbzip2/Ninja inflate every
+host-side operation (dispatch +115%, KV-cache mgmt +172%) via LLC/TLB
+contention. The host-driven baseline touches the host ~4x per token;
+Blink touches it once per `window` tokens (the tail launch) plus the
+off-critical-path frontend.
+
+Paper claim reproduced: Blink retention ~= 1.0 (0.92-1.14x TTFT,
+0.97-1.04x TPOT, 0.99-1.02x throughput) while CPU-coupled baselines
+inflate 2-19x and retain 0.28-0.64x throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (bench_model, bench_serve_config, emit,
+                               make_jitter)
+from repro.core import engine as eng
+from repro.core import ring_buffer as rb
+from repro.core.host_engine import HostEngine
+from repro.frontend.server import BlinkServer
+
+N_REQ = 12
+OUT_TOKENS = 10
+JITTER_MEAN_S = 0.004      # per-host-touch delay under "colocation"
+
+
+_SRV_CACHE = {}
+
+
+def run_blink(api, params, serve, prompts, jitter=None):
+    key = (id(api), serve)
+    if key not in _SRV_CACHE:
+        _SRV_CACHE[key] = BlinkServer(api, serve, params)
+    srv = _SRV_CACHE[key]
+    srv.frontend.jitter = jitter or (lambda: None)
+    srv.host_jitter = jitter or (lambda: None)
+    srv.submit(prompts[0][:4], max_new=2)
+    srv.run_until_idle()                   # warm compile
+    srv.reset()
+    srv.frontend.jitter = jitter or (lambda: None)
+    t0 = time.perf_counter()
+    for p in prompts:
+        srv.submit(list(p), max_new=OUT_TOKENS)
+    srv.run_until_idle(max_windows=400)
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in srv.frontend.done.values())
+    return toks / wall, wall
+
+
+_HOST_CACHE = {}
+
+
+def run_host(api, params, serve, prompts, jitter=None):
+    key = (id(api), serve)
+    if key not in _HOST_CACHE:
+        _HOST_CACHE[key] = HostEngine(api, serve, params)
+    host = _HOST_CACHE[key]
+    host.jitter = lambda: None
+    host.submit([5, 6, 7], max_new=2)
+    host.run_until_idle()                  # warm compile
+    host.reset()
+    host.jitter = jitter or (lambda: None)
+    t0 = time.perf_counter()
+    for p in prompts:
+        host.submit(list(p), max_new=OUT_TOKENS)
+    host.run_until_idle()
+    wall = time.perf_counter() - t0
+    toks = sum(len(o) for o in host.outputs)
+    return toks / wall, wall
+
+
+def main() -> None:
+    api, params = bench_model()
+    serve = bench_serve_config()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(3, api.cfg.vocab_size, 12).tolist()
+               for _ in range(N_REQ)]
+
+    jit = make_jitter(JITTER_MEAN_S)
+    b_iso, wall_bi = run_blink(api, params, serve, prompts)
+    b_int, wall_bn = run_blink(api, params, serve, prompts, jitter=jit)
+    h_iso, wall_hi = run_host(api, params, serve, prompts)
+    h_int, wall_hn = run_host(api, params, serve, prompts, jitter=jit)
+
+    emit("table7_blink_isolated", wall_bi * 1e6, f"tput_tok_s={b_iso:.1f}")
+    emit("table7_blink_interfered", wall_bn * 1e6,
+         f"tput_tok_s={b_int:.1f};retention={b_int/b_iso:.2f}")
+    emit("table7_host_isolated", wall_hi * 1e6, f"tput_tok_s={h_iso:.1f}")
+    emit("table7_host_interfered", wall_hn * 1e6,
+         f"tput_tok_s={h_int:.1f};retention={h_int/h_iso:.2f}")
+    emit("table7_retention_gap", 0.0,
+         f"blink={b_int/b_iso:.2f};host={h_int/h_iso:.2f};"
+         f"blink_over_host_interfered={b_int/h_int:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Train a ~100M-parameter model for a few hundred steps (deliverable b).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200] [--arch ID]
+
+Uses the full substrate stack: synthetic (learnable) data pipeline, AdamW +
+warmup-cosine schedule, remat'd train step, periodic checkpointing. Loss
+must fall — asserted at the end.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs.registry import TINY_ARCHS
+from repro.data.pipeline import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models.api import make_model
+from repro.models.transformer import count_params
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=sorted(TINY_ARCHS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--size", default="12m", choices=["12m", "100m"],
+                    help="12m runs in minutes on CPU; 100m is the full-size "
+                         "driver (hours on CPU, minutes on a TPU host)")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    if args.size == "100m":
+        dims = dict(d_model=640, num_layers=8, d_ff=2560, num_heads=8,
+                    num_kv_heads=8, vocab_size=32_768)
+    else:
+        dims = dict(d_model=384, num_layers=4, d_ff=1536, num_heads=6,
+                    num_kv_heads=6, vocab_size=8_192)
+    cfg = TINY_ARCHS[args.arch].replace(dtype="float32", **dims)
+    api = make_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {count_params(cfg)/1e6:.1f}M params")
+
+    opt = AdamW(lr=warmup_cosine(3e-4, 20, args.steps), weight_decay=0.01)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(api, opt), donate_argnums=(0, 1))
+
+    data = iter(SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128,
+                            batch_size=8, seed=0))
+    first = last = None
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt_state, loss, metrics = step_fn(params, opt_state, batch)
+        if step == 0:
+            first = float(loss)
+        last = float(loss)
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {last:.4f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+        if step and step % 100 == 0:
+            save_checkpoint(args.ckpt, params, step=step)
+
+    save_checkpoint(args.ckpt, params, step=args.steps)
+    restored, s = restore_checkpoint(args.ckpt, params)
+    print(f"checkpoint roundtrip ok at step {s}")
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    need = min(0.5, 0.004 * args.steps)   # scale expectation with run length
+    assert last < first - need, "loss did not fall"
+    print("OK: training works end to end")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.configs.base import (
+    INPUT_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+    InputShape, ModelConfig, ServeConfig,
+)

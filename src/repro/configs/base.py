@@ -1,0 +1,161 @@
+"""Model / runtime configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The Blink
+serving engine treats the model as opaque (paper §4.3): all it needs is the
+cache spec and the three step functions (train / prefill / decode) that
+``repro.models.api`` derives from this config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int          # 0 for attention-free archs (rwkv)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0       # 0 -> d_model // num_heads
+
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None     # SWA width (mixtral, gemma2 local)
+    local_global: bool = False               # gemma2: alternate local/global
+    attn_softcap: Optional[float] = None     # gemma2: 50.0
+    logit_softcap: Optional[float] = None    # gemma2: 30.0
+    norm_type: str = "rmsnorm"               # rmsnorm | nonparametric_ln (olmo)
+    tie_embeddings: bool = False
+    mlp_act: str = "silu"                    # silu | gelu
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                        # per-expert hidden dim
+    shared_expert_d_ff: int = 0              # qwen2-moe shared experts (merged)
+    capacity_factor: float = 1.25
+
+    # --- SSM ----------------------------------------------------------------
+    ssm_state: int = 0                       # mamba2 N / rwkv head size driver
+    ssm_conv: int = 4                        # mamba conv kernel width
+    ssm_expand: int = 2                      # d_inner = expand * d_model
+    ssm_head_dim: int = 64
+    attn_every: int = 0                      # zamba2: shared attn every k layers
+
+    # --- encoder-decoder ----------------------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+
+    # --- multimodal stub ----------------------------------------------------
+    modality: str = "text"                   # text | vision | audio
+    num_modal_tokens: int = 0                # patch/frame embedding prefix len
+
+    # --- numerics ------------------------------------------------------------
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_head_dim else 0
+
+    @property
+    def num_attn_layers(self) -> int:
+        """How many layers carry a KV cache (paged attention)."""
+        if self.arch_type == "ssm":
+            return 0
+        if self.arch_type == "hybrid":
+            if not self.attn_every:
+                return 0
+            return (self.num_layers + self.attn_every - 1) // self.attn_every
+        return self.num_layers
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def uses_paged_kv(self) -> bool:
+        return self.num_attn_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode cost is bounded independent of total context
+        (SSM state, or sliding-window attention) -> eligible for long_500k."""
+        if self.arch_type in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window is not None
+
+    def layer_window(self, layer: int) -> Optional[int]:
+        """Effective attention window of layer `layer` (None = full)."""
+        if self.local_global:
+            return self.sliding_window if layer % 2 == 0 else None
+        return self.sliding_window
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One assigned (seq_len, global_batch) workload."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Blink engine runtime knobs (paper §4.2)."""
+    num_slots: int = 64                 # ring buffer slots (paper: 4096)
+    max_prompt_len: int = 256           # input arena per slot
+    max_new_tokens: int = 64            # output arena per slot
+    decode_batch: int = 8               # persistent decode batch width
+    window: int = 120                   # fire-and-forget window (paper: 120)
+    admit_per_step: int = 4             # prefill admissions per pause
+    page_size: int = 16                 # KV page tokens
+    num_pages: int = 512                # KV pool pages
+    temperature: float = 0.0            # 0 => greedy
+    top_p: float = 1.0
+    eos_token: int = 2
+
+    @property
+    def max_seq(self) -> int:
+        return self.max_prompt_len + self.max_new_tokens
+
+    @property
+    def pages_per_req(self) -> int:
+        return (self.max_seq + self.page_size - 1) // self.page_size

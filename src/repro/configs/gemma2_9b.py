@@ -1,0 +1,19 @@
+"""Gemma2-9B [arXiv:2408.00118]: alternating local (SWA-4096) / global
+attention, attn-logit softcap 50, final-logit softcap 30, tied embeddings,
+head_dim 256."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b", arch_type="dense",
+    num_layers=42, d_model=3584, num_heads=16, num_kv_heads=8,
+    head_dim=256, d_ff=14336, vocab_size=256_000,
+    sliding_window=4096, local_global=True,
+    attn_softcap=50.0, logit_softcap=30.0, tie_embeddings=True,
+    mlp_act="gelu",
+)
+
+TINY = CONFIG.replace(
+    name="gemma2-tiny", num_layers=2, d_model=128, num_heads=4,
+    num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+    sliding_window=16, dtype="float32",
+)

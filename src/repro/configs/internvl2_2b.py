@@ -1,0 +1,16 @@
+"""InternVL2-2B [arXiv:2404.16821]: InternViT stub -> InternLM2 backbone.
+The vision encoder is a STUB per the brief: input_specs provides 256
+precomputed patch embeddings [B, 256, d_model]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", arch_type="vlm",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=8192, vocab_size=92_553, modality="vision", num_modal_tokens=256,
+)
+
+TINY = CONFIG.replace(
+    name="internvl2-tiny", num_layers=2, d_model=128, num_heads=4,
+    num_kv_heads=2, d_ff=256, vocab_size=512, num_modal_tokens=8,
+    dtype="float32",
+)

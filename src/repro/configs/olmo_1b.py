@@ -1,0 +1,14 @@
+"""OLMo-1B [arXiv:2402.00838]: non-parametric LayerNorm, tied embeddings."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", arch_type="dense",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=8192, vocab_size=50_304, norm_type="nonparametric_ln",
+    tie_embeddings=True,
+)
+
+TINY = CONFIG.replace(
+    name="olmo-tiny", num_layers=2, d_model=128, num_heads=4,
+    num_kv_heads=4, d_ff=256, vocab_size=512, dtype="float32",
+)

@@ -1,0 +1,16 @@
+"""The paper's own evaluation models (§6.1), as bonus configs for the
+serving benchmarks: Llama-3 8B (dense) and Qwen-3 30B-A3B (MoE) analogues."""
+from repro.configs.base import ModelConfig
+
+LLAMA3_8B = ModelConfig(
+    name="llama3-8b", arch_type="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=128_256, rope_theta=5e5,
+)
+
+QWEN3_30B_A3B = ModelConfig(
+    name="qwen3-30b-a3b", arch_type="moe",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4,
+    head_dim=128, d_ff=768, vocab_size=151_936,
+    num_experts=128, top_k=8, moe_d_ff=768,
+)

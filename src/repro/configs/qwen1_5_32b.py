@@ -1,0 +1,13 @@
+"""Qwen1.5-32B [hf:Qwen/Qwen1.5-0.5B family]: dense, QKV bias."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b", arch_type="dense",
+    num_layers=64, d_model=5120, num_heads=40, num_kv_heads=40,
+    d_ff=27392, vocab_size=152_064, qkv_bias=True,
+)
+
+TINY = CONFIG.replace(
+    name="qwen1.5-tiny", num_layers=2, d_model=128, num_heads=4,
+    num_kv_heads=4, d_ff=256, vocab_size=512, dtype="float32",
+)

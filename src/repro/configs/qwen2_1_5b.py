@@ -1,0 +1,13 @@
+"""Qwen2-1.5B [arXiv:2407.10671]: dense GQA (kv=2), QKV bias."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b", arch_type="dense",
+    num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+    d_ff=8960, vocab_size=151_936, qkv_bias=True, rope_theta=1e6,
+)
+
+TINY = CONFIG.replace(
+    name="qwen2-tiny", num_layers=2, d_model=120, num_heads=6,
+    num_kv_heads=2, d_ff=256, vocab_size=512, dtype="float32",
+)

@@ -1,0 +1,28 @@
+"""Architecture registry: --arch <id> resolution for launchers/tests."""
+from repro.configs import (
+    gemma2_9b, internvl2_2b, mixtral_8x7b, olmo_1b, qwen1_5_32b, qwen2_1_5b,
+    qwen2_moe_a2_7b, rwkv6_7b, seamless_m4t_medium, zamba2_2_7b,
+)
+
+_MODULES = {
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "zamba2-2.7b": zamba2_2_7b,
+    "qwen2-1.5b": qwen2_1_5b,
+    "internvl2-2b": internvl2_2b,
+    "rwkv6-7b": rwkv6_7b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "gemma2-9b": gemma2_9b,
+    "olmo-1b": olmo_1b,
+    "qwen1.5-32b": qwen1_5_32b,
+}
+
+ARCHS = {name: m.CONFIG for name, m in _MODULES.items()}
+TINY_ARCHS = {name: m.TINY for name, m in _MODULES.items()}
+
+
+def get_config(arch: str, tiny: bool = False):
+    table = TINY_ARCHS if tiny else ARCHS
+    if arch not in table:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(table)}")
+    return table[arch]

@@ -1,0 +1,14 @@
+"""RWKV-6 (Finch) 7B [arXiv:2404.05892]: attention-free, data-dependent
+per-channel decay; decode state is O(1) in sequence length."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", arch_type="ssm",
+    num_layers=32, d_model=4096, num_heads=0, num_kv_heads=0,
+    d_ff=14336, vocab_size=65_536, ssm_head_dim=64,
+)
+
+TINY = CONFIG.replace(
+    name="rwkv6-tiny", num_layers=2, d_model=128, d_ff=256,
+    vocab_size=512, ssm_head_dim=32, dtype="float32",
+)

@@ -1,0 +1,16 @@
+"""SeamlessM4T-medium [arXiv:2308.11596]: encoder-decoder backbone.
+The speech frontend (mel + conv feature extractor) is a STUB: the encoder
+consumes precomputed frame embeddings."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", arch_type="audio",
+    num_layers=12, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=4096, vocab_size=256_206, modality="audio",
+    is_encoder_decoder=True, num_encoder_layers=12, mlp_act="gelu",
+)
+
+TINY = CONFIG.replace(
+    name="seamless-tiny", num_layers=2, num_encoder_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=512, dtype="float32",
+)

@@ -1,0 +1,16 @@
+"""Zamba2-2.7B [arXiv:2411.15242]: Mamba2 backbone + shared attention block
+applied every 6 layers (shared weights)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", arch_type="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    d_ff=10240, vocab_size=32_000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, attn_every=6,
+)
+
+TINY = CONFIG.replace(
+    name="zamba2-tiny", num_layers=4, d_model=128, num_heads=4,
+    num_kv_heads=4, d_ff=256, vocab_size=512, ssm_state=16,
+    ssm_head_dim=32, attn_every=2, dtype="float32",
+)

@@ -1,0 +1,396 @@
+"""Blink persistent-window serving engine (the paper's core, TPU-adapted).
+
+Paper §4.2, mechanism -> JAX mapping:
+
+  * persistent scheduler kernel        -> ``engine_step`` fused into a
+    (infinite control loop)               ``lax.fori_loop`` window program;
+                                          all control flow is device-side
+  * fire-and-forget graph launches,    -> window of ``serve.window`` steps per
+    120-launch limit, tail-launch         jitted invocation; the host's only
+    recovery                              steady-state job is re-invoking with
+                                          DONATED state buffers (the tail
+                                          launch; state survives, zero copy)
+  * parallel slot scanning + CAS claim -> vectorized FCFS selection over the
+                                          slot-state array (ring_scan Pallas
+                                          kernel is the TPU hot-path form)
+  * pause-and-resume continuous        -> admission cond: a step either runs
+    batching with inline prefill          a (max-shape) prefill for <= A new
+                                          requests while decode lanes are
+                                          DECODE_PAUSED, or one decode step
+                                          for all active lanes
+  * admission gating (3 conditions)    -> (i) pending prefills, (ii) free
+                                          decode-lane capacity, (iii) KV page
+                                          availability (all-or-nothing alloc
+                                          = backpressure)
+  * on-device sampling inside graph    -> sampling fused into the same step
+  * paged KV management on device      -> PageAllocator free-list updated
+                                          inside the window program
+
+The engine treats the model as opaque via ``repro.models.api.ModelApi``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.core import ring_buffer as rb
+from repro.core.sampling import sample_tokens
+from repro.models import cache as cache_lib
+from repro.models.api import ModelApi, cache_for_serve
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class EngineState:
+    ring: rb.RingState
+    cache: Dict[str, Any]
+    alloc: cache_lib.PageAllocator
+    lane_slot: jax.Array        # [Bd] int32, -1 = free lane
+    key: jax.Array              # PRNG key
+    step: jax.Array             # [] int32 global device step counter
+    windows_done: jax.Array     # [] int32
+
+
+def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
+                      enc_len: int = 0) -> EngineState:
+    cache = cache_for_serve(api, serve, enc_len=enc_len)
+    if "kv" not in cache:  # keep the pytree uniform for attention-free archs
+        pass
+    return EngineState(
+        ring=rb.make_ring(serve),
+        cache=cache,
+        alloc=cache_lib.make_page_allocator(serve.num_pages),
+        lane_slot=jnp.full((serve.decode_batch,), -1, jnp.int32),
+        key=jax.random.PRNGKey(seed),
+        step=jnp.asarray(0, jnp.int32),
+        windows_done=jnp.asarray(0, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# FCFS admission selection (the "parallel slot scan")
+# ---------------------------------------------------------------------------
+
+
+def select_pending_fcfs(ring: rb.RingState, max_admit: int):
+    """Pick up to ``max_admit`` PREFILL_PENDING slots, earliest-arrival first.
+
+    jnp formulation — semantically identical to
+    ``repro.kernels.ring_scan.ring_select_topk`` (the Pallas TPU hot path);
+    tests assert equivalence."""
+    keyed = jnp.where(ring.slot_state == rb.PREFILL_PENDING, ring.arrival,
+                      INT_MAX)
+    order = jnp.argsort(keyed)
+    cand = order[:max_admit].astype(jnp.int32)
+    valid = keyed[cand] != INT_MAX
+    return cand, valid
+
+
+# ---------------------------------------------------------------------------
+# The per-step function (one iteration of the persistent scheduler loop)
+# ---------------------------------------------------------------------------
+
+
+def _left_pad_prompts(ring: rb.RingState, slots: jax.Array,
+                      bucket: Optional[int] = None):
+    """Gather [A, bucket] prompts, left-padded (right-aligned).
+
+    ``bucket`` < max_prompt_len realizes the paper's CUDA-graph-cache shape
+    matching: the prefill branch is compiled at the bucket length, so short
+    prompts don't pay max-shape compute. Prompts longer than the bucket are
+    the caller's responsibility (WindowCache routes them to a bigger
+    executable; the max-shape window is the paper's fallback graph).
+    """
+    rows = ring.input_arena[slots]                    # [A, P] left-aligned
+    A, P = rows.shape
+    B = bucket or P
+    lens = jnp.minimum(ring.prompt_len[slots], B)
+    src = jnp.arange(B)[None, :] - (B - lens)[:, None]  # [A, B]
+    valid = src >= 0
+    gathered = jnp.take_along_axis(rows, jnp.clip(src, 0, P - 1), axis=1)
+    return jnp.where(valid, gathered, 0), lens
+
+
+def make_engine_step(api: ModelApi, serve: ServeConfig,
+                     prompt_bucket: Optional[int] = None
+                     ) -> Callable[[Any, EngineState], EngineState]:
+    cfg = api.cfg
+    A = serve.admit_per_step
+    Bd = serve.decode_batch
+    ps = serve.page_size
+    ppr = serve.pages_per_req
+    paged = cfg.uses_paged_kv
+
+    def prefill_branch(params, state: EngineState, cand, cand_valid):
+        ring, cache, alloc = state.ring, state.cache, state.alloc
+
+        # (pause running decode lanes for this step — paper's pause-and-resume)
+        running = state.lane_slot >= 0
+        safe_lane_slots = jnp.maximum(state.lane_slot, 0)
+        ring_states = ring.slot_state.at[safe_lane_slots].set(
+            jnp.where(running, rb.DECODE_PAUSED,
+                      ring.slot_state[safe_lane_slots]), mode="drop")
+
+        # assign free lanes to candidates (FCFS order)
+        free_lane_order = jnp.argsort(
+            jnp.where(state.lane_slot < 0, 0, 1), stable=True)
+        lanes = free_lane_order[:A].astype(jnp.int32)
+        lane_free = state.lane_slot[lanes] < 0
+        admit = cand_valid & lane_free
+
+        # page allocation: all-or-nothing per request (backpressure)
+        if paged:
+            need = (ring.prompt_len[cand] + ring.max_new[cand] + ps - 1) // ps
+
+            def alloc_one(carry, xs):
+                alloc, = carry
+                n, want = xs
+                pages, alloc2, ok = cache_lib.alloc_pages(alloc, n, ppr)
+                ok = ok & want
+                alloc = jax.tree.map(
+                    lambda a, b: jnp.where(ok, b, a), alloc, alloc2)
+                return (alloc,), (jnp.where(ok, pages, -1), ok)
+
+            (alloc,), (page_rows, alloc_ok) = jax.lax.scan(
+                alloc_one, (alloc,), (need, admit))
+            admit = admit & alloc_ok
+            kvc = cache["kv"]
+            sel = jnp.where(admit, cand, kvc.block_table.shape[0])
+            block_table = kvc.block_table.at[sel].set(page_rows, mode="drop")
+            cache = dict(cache, kv=dataclasses.replace(
+                kvc, block_table=block_table))
+
+        # run the (max-shape) prefill for admitted requests
+        prompts, lens = _left_pad_prompts(ring, cand, prompt_bucket)
+        mark = jnp.where(admit, cand, ring.num_slots)
+        ring_states = ring_states.at[mark].set(rb.PREFILL_PROCESSING,
+                                               mode="drop")
+        logits, cache = api.prefill(params, prompts, lens, cache, cand, admit)
+
+        # first-token sampling (on-device, per-slot temperature)
+        tok = sample_tokens(state.key, logits.astype(jnp.float32),
+                            ring.temperature[cand], top_p=serve.top_p,
+                            slot_ids=cand, step=state.step)
+
+        out_arena = ring.output_arena.at[mark, 0].set(tok, mode="drop")
+        tok_step = ring.token_step.at[mark, 0].set(state.step, mode="drop")
+        generated = ring.generated.at[mark].set(1, mode="drop")
+        last_token = ring.last_token.at[mark].set(tok, mode="drop")
+        prefill_step = ring.prefill_step.at[mark].set(state.step, mode="drop")
+
+        # single-token completions (max_new == 1)
+        done = admit & (generated[jnp.clip(cand, 0, ring.num_slots - 1)]
+                        >= ring.max_new[cand])
+        new_state_code = jnp.where(done, rb.DECODE_COMPLETED,
+                                   rb.DECODE_PROCESSING)
+        ring_states = ring_states.at[mark].set(new_state_code, mode="drop")
+
+        # resume paused decode lanes
+        ring_states = ring_states.at[safe_lane_slots].set(
+            jnp.where(running, rb.DECODE_PROCESSING,
+                      ring_states[safe_lane_slots]), mode="drop")
+
+        # merge admitted into lanes (not-done only)
+        lane_slot = state.lane_slot.at[jnp.where(admit & ~done, lanes, Bd)
+                                       ].set(cand, mode="drop")
+
+        ring = dataclasses.replace(
+            ring, slot_state=ring_states, output_arena=out_arena,
+            token_step=tok_step, generated=generated, last_token=last_token,
+            prefill_step=prefill_step)
+        return dataclasses.replace(
+            state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
+
+    def decode_branch(params, state: EngineState, cand, cand_valid):
+        ring, cache, alloc = state.ring, state.cache, state.alloc
+        active = state.lane_slot >= 0
+        slots = jnp.maximum(state.lane_slot, 0)
+        tokens = ring.last_token[slots]
+
+        logits, cache = api.decode(params, tokens, cache, slots, active)
+        tok = sample_tokens(state.key, logits.astype(jnp.float32),
+                            ring.temperature[slots], top_p=serve.top_p,
+                            slot_ids=slots, step=state.step)
+
+        out_idx = ring.generated[slots]                       # [Bd]
+        mark = jnp.where(active, slots, ring.num_slots)
+        out_arena = ring.output_arena.at[
+            mark, jnp.clip(out_idx, 0, serve.max_new_tokens - 1)
+        ].set(tok, mode="drop")
+        tok_step = ring.token_step.at[
+            mark, jnp.clip(out_idx, 0, serve.max_new_tokens - 1)
+        ].set(state.step, mode="drop")
+        new_gen = out_idx + 1
+        generated = ring.generated.at[mark].set(new_gen, mode="drop")
+        last_token = ring.last_token.at[mark].set(tok, mode="drop")
+
+        done = active & ((tok == serve.eos_token)
+                         | (new_gen >= ring.max_new[slots]))
+        ring_states = ring.slot_state.at[jnp.where(done, slots, ring.num_slots)
+                                         ].set(rb.DECODE_COMPLETED,
+                                               mode="drop")
+
+        # free KV pages of finished requests (device-side page management)
+        if paged:
+            kvc = cache["kv"]
+            block_table = kvc.block_table
+
+            def free_one(carry, xs):
+                alloc, block_table = carry
+                slot, is_done = xs
+                row = block_table[slot]
+                alloc2 = cache_lib.free_pages(alloc, row)
+                alloc = jax.tree.map(
+                    lambda a, b: jnp.where(is_done, b, a), alloc, alloc2)
+                block_table = block_table.at[
+                    jnp.where(is_done, slot, block_table.shape[0])
+                ].set(-1, mode="drop")
+                return (alloc, block_table), None
+
+            (alloc, block_table), _ = jax.lax.scan(
+                free_one, (alloc, block_table), (slots, done))
+            cache = dict(cache, kv=dataclasses.replace(
+                cache["kv"], block_table=block_table))
+
+        lane_slot = jnp.where(done, -1, state.lane_slot)
+        ring = dataclasses.replace(
+            ring, slot_state=ring_states, output_arena=out_arena,
+            token_step=tok_step, generated=generated, last_token=last_token)
+        return dataclasses.replace(
+            state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
+
+    def engine_step(params, state: EngineState) -> EngineState:
+        # overlapped ring scan (paper: scan happens while decode executes;
+        # here: same fused program, no host involvement either way)
+        cand, cand_valid = select_pending_fcfs(state.ring, A)
+
+        # admission gating (paper §4.2's three conditions): (i) pending
+        # prefills [cand_valid], (ii) KV page availability — candidates whose
+        # pages can't be allocated stay PENDING and must NOT pause decode,
+        # (iii) free decode-lane capacity.
+        n_free = jnp.sum(state.lane_slot < 0)
+        need = (state.ring.prompt_len[cand] + state.ring.max_new[cand]
+                + ps - 1) // ps
+        running = state.alloc.top
+        count = jnp.int32(0)
+        gated = []
+        for j in range(A):         # A is small & static: unrolled
+            fits = cand_valid[j] & (count < n_free)
+            if paged:
+                fits &= need[j] <= running
+                running = jnp.where(fits, running - need[j], running)
+            count = count + fits.astype(jnp.int32)
+            gated.append(fits)
+        cand_valid = jnp.stack(gated)
+        do_prefill = jnp.any(cand_valid)
+        any_active = jnp.any(state.lane_slot >= 0)
+
+        def decode_or_idle(s):
+            # idle scheduler iterations (no batch, nothing pending) cost only
+            # the slot scan — like the persistent kernel spinning on the ring
+            return jax.lax.cond(
+                any_active,
+                lambda st: decode_branch(params, st, cand, cand_valid),
+                lambda st: st,
+                s)
+
+        state = jax.lax.cond(
+            do_prefill,
+            lambda s: prefill_branch(params, s, cand, cand_valid),
+            decode_or_idle,
+            state)
+        return dataclasses.replace(
+            state,
+            step=state.step + 1,
+            key=state.key,  # key reuse is safe: folded with (slot, step)
+        )
+
+    return engine_step
+
+
+# ---------------------------------------------------------------------------
+# The window program (fire-and-forget window + tail-launch recovery)
+# ---------------------------------------------------------------------------
+
+
+def make_serve_window(api: ModelApi, serve: ServeConfig, *,
+                      donate: bool = True, prompt_bucket: Optional[int] = None):
+    """Returns jitted ``window_fn(params, state) -> state`` running
+    ``serve.window`` scheduler iterations per invocation.
+
+    The host re-invocation IS the tail launch: all engine state lives in
+    donated device buffers and survives re-instantiation (paper §4.2
+    "window-based tail-launch recovery"); steady-state host work is one
+    dispatch per ``serve.window`` tokens instead of per token.
+    """
+    engine_step = make_engine_step(api, serve, prompt_bucket)
+
+    def window_fn(params, state: EngineState) -> EngineState:
+        def body(_, st):
+            return engine_step(params, st)
+
+        state = jax.lax.fori_loop(0, serve.window, body, state)
+        return dataclasses.replace(state,
+                                   windows_done=state.windows_done + 1)
+
+    if donate:
+        return jax.jit(window_fn, donate_argnums=(1,))
+    return jax.jit(window_fn)
+
+
+# ---------------------------------------------------------------------------
+# Window executable cache (the paper's CUDA graph cache, §4.2)
+# ---------------------------------------------------------------------------
+
+
+class WindowCache:
+    """Pre-compiled window executables keyed by prefill shape bucket.
+
+    Paper §4.2: "the host captures inference computation as CUDA graphs for
+    a dense grid of (batch size, sequence length) pairs ... At runtime, the
+    scheduler selects the tightest-fitting prefill graph via a precomputed
+    lookup table ... a maximum-shape fallback graph handles any combination
+    not in the cache."
+
+    TPU adaptation: one jitted window program per prompt-length bucket (the
+    decode batch is fixed by the lane table, so the grid is 1-D here);
+    selection happens at the window boundary — the same granularity as every
+    other host interaction in this design, preserving the CPU-free
+    steady state. All buckets share one EngineState (identical shapes), so
+    donated state flows freely between executables — the paper's shared
+    device buffers ("all graphs reuse a single set of device buffers").
+    """
+
+    def __init__(self, api: ModelApi, serve: ServeConfig,
+                 buckets: Optional[tuple] = None):
+        self.serve = serve
+        bs = sorted(set(list(buckets or ()) + [serve.max_prompt_len]))
+        assert all(1 <= b <= serve.max_prompt_len for b in bs)
+        self.buckets = bs
+        self._fns = {b: make_serve_window(api, serve, prompt_bucket=b)
+                     for b in bs}
+        self.selections = {b: 0 for b in bs}
+
+    def select(self, max_pending_len: int):
+        """Tightest-fitting executable (max-shape fallback included)."""
+        for b in self.buckets:
+            if max_pending_len <= b:
+                self.selections[b] += 1
+                return self._fns[b]
+        self.selections[self.buckets[-1]] += 1
+        return self._fns[self.buckets[-1]]
+
+    def max_pending_len(self, ring: rb.RingState) -> int:
+        states = np.asarray(ring.slot_state)
+        lens = np.asarray(ring.prompt_len)
+        pend = lens[states == rb.PREFILL_PENDING]
+        return int(pend.max()) if pend.size else 0

@@ -1,0 +1,259 @@
+"""Host-driven baseline engine (the paper's comparator class: vLLM-style).
+
+Every scheduler iteration returns control to the HOST: slot scanning,
+admission, batching and page allocation happen in Python/NumPy; sampled
+tokens are copied device->host every step (the PCIe round-trip of Fig. 3's
+CPU-resident scheduler); the next step is dispatched from the host.
+
+The scheduling *policy* (FCFS, admission conditions, page accounting) is
+identical to ``repro.core.engine`` — the paper's controlled-comparison
+requirement ("identical scheduling policy", §4.2) — so benchmark deltas
+isolate WHERE control runs, not WHAT it decides.
+
+``jitter`` models CPU interference: a callable invoked once per *host touch*
+(scheduler iteration, dispatch, copy-back). Under colocation the paper
+measures host-side operation inflation of 81%-172% (§3.2); the interference
+benchmark sweeps this.
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.core import ring_buffer as rb
+from repro.core.sampling import sample_tokens
+from repro.models.api import ModelApi, cache_for_serve
+
+
+class HostEngine:
+    def __init__(self, api: ModelApi, serve: ServeConfig, params,
+                 jitter: Optional[Callable[[], None]] = None,
+                 seed: int = 0, enc_len: int = 0):
+        self.api = api
+        self.serve = serve
+        self.params = params
+        self.jitter = jitter or (lambda: None)
+        self.cache = cache_for_serve(api, serve, enc_len=enc_len)
+        self._enc_len = enc_len
+        self.paged = api.cfg.uses_paged_kv
+        S = serve.num_slots
+        # host-side scheduling state (the CPU-resident control plane)
+        self.slot_state = np.zeros(S, np.int32)
+        self.arrival = np.full(S, np.iinfo(np.int32).max, np.int64)
+        self.prompt = [None] * S
+        self.max_new = np.zeros(S, np.int32)
+        self.generated = np.zeros(S, np.int32)
+        self.last_token = np.zeros(S, np.int32)
+        self.temperature = np.zeros(S, np.float32)
+        self.outputs: List[List[int]] = [[] for _ in range(S)]
+        self.free_pages = list(range(serve.num_pages - 1, -1, -1))
+        self.slot_pages: Dict[int, List[int]] = {}
+        self.lane_slot = np.full(serve.decode_batch, -1, np.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self.step_count = 0
+        # telemetry
+        self.submit_time = np.zeros(S, np.float64)
+        self.first_token_time = np.full(S, -1.0, np.float64)
+        self.token_times: List[List[float]] = [[] for _ in range(S)]
+
+        # jitted compute steps (the GPU work; CUDA-graph analogue)
+        cfg = api.cfg
+
+        def _prefill(params, prompts, lens, cache, slots, active, key, step):
+            logits, cache = api.prefill(params, prompts, lens, cache, slots,
+                                        active)
+            temps = jnp.zeros((prompts.shape[0],), jnp.float32)
+            tok = sample_tokens(key, logits.astype(jnp.float32), temps,
+                                top_p=serve.top_p, slot_ids=slots, step=step)
+            return tok, cache
+
+        def _decode(params, tokens, cache, slots, active, temps, key, step):
+            logits, cache = api.decode(params, tokens, cache, slots, active)
+            tok = sample_tokens(key, logits.astype(jnp.float32), temps,
+                                top_p=serve.top_p, slot_ids=slots, step=step)
+            return tok, cache
+
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(3,))
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
+
+    def reset(self, seed: int = 0) -> None:
+        """Fresh serving state, KEEPING the compiled step functions (so
+        benchmark timing excludes compilation)."""
+        serve = self.serve
+        S = serve.num_slots
+        self.cache = cache_for_serve(self.api, serve, enc_len=self._enc_len)
+        self.slot_state = np.zeros(S, np.int32)
+        self.arrival = np.full(S, np.iinfo(np.int32).max, np.int64)
+        self.prompt = [None] * S
+        self.max_new = np.zeros(S, np.int32)
+        self.generated = np.zeros(S, np.int32)
+        self.last_token = np.zeros(S, np.int32)
+        self.temperature = np.zeros(S, np.float32)
+        self.outputs = [[] for _ in range(S)]
+        self.free_pages = list(range(serve.num_pages - 1, -1, -1))
+        self.slot_pages = {}
+        self.lane_slot = np.full(serve.decode_batch, -1, np.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self.step_count = 0
+        self.submit_time = np.zeros(S, np.float64)
+        self.first_token_time = np.full(S, -1.0, np.float64)
+        self.token_times = [[] for _ in range(S)]
+
+    # -- frontend ----------------------------------------------------------
+    def submit(self, tokens, max_new: int, temperature: float = 0.0,
+               arrival: Optional[int] = None) -> int:
+        free = np.where(self.slot_state == rb.EMPTY)[0]
+        if len(free) == 0:
+            return -1
+        s = int(free[0])
+        self.prompt[s] = list(tokens)
+        self.max_new[s] = max_new
+        self.generated[s] = 0
+        self.temperature[s] = temperature
+        self.outputs[s] = []
+        self.token_times[s] = []
+        self.arrival[s] = arrival if arrival is not None else self.step_count
+        self.slot_state[s] = rb.PREFILL_PENDING
+        self.submit_time[s] = time.perf_counter()
+        self.first_token_time[s] = -1.0
+        return s
+
+    def drain(self, slot: int) -> List[int]:
+        toks = self.outputs[slot]
+        self.slot_state[slot] = rb.EMPTY
+        self.arrival[slot] = np.iinfo(np.int32).max
+        return toks
+
+    # -- one host-driven scheduler iteration --------------------------------
+    def step(self) -> None:
+        serve = self.serve
+        self.jitter()                      # host touch 1: scheduler wakeup
+
+        # host-side ring scan (FCFS)
+        pending = np.where(self.slot_state == rb.PREFILL_PENDING)[0]
+        pending = pending[np.argsort(self.arrival[pending], kind="stable")]
+        free_lanes = np.where(self.lane_slot < 0)[0]
+        self.jitter()                      # host touch 2: batch assembly
+
+        admit: List[int] = []
+        for s in pending[: serve.admit_per_step]:
+            if len(admit) >= len(free_lanes):
+                break
+            if self.paged:
+                need = -(-(len(self.prompt[s]) + int(self.max_new[s]))
+                         // serve.page_size)
+                if need > len(self.free_pages):
+                    continue                # backpressure: stay pending
+                pages = [self.free_pages.pop() for _ in range(need)]
+                self.slot_pages[s] = pages
+                bt = self.cache["kv"].block_table
+                row = np.full(bt.shape[1], -1, np.int32)
+                row[:need] = pages
+                self.cache["kv"] = dc.replace(
+                    self.cache["kv"], block_table=bt.at[s].set(
+                        jnp.asarray(row)))
+            admit.append(int(s))
+
+        if admit:
+            self._run_prefill(admit, free_lanes)
+        else:
+            self._run_decode()
+        self.step_count += 1
+
+    def _run_prefill(self, admit: List[int], free_lanes) -> None:
+        serve = self.serve
+        A = serve.admit_per_step
+        P = serve.max_prompt_len
+        prompts = np.zeros((A, P), np.int32)
+        lens = np.zeros(A, np.int32)
+        slots = np.zeros(A, np.int32)
+        active = np.zeros(A, bool)
+        for j, s in enumerate(admit):
+            toks = self.prompt[s]
+            prompts[j, P - len(toks):] = toks     # left pad
+            lens[j] = len(toks)
+            slots[j] = s
+            active[j] = True
+            self.slot_state[s] = rb.PREFILL_PROCESSING
+        self.jitter()                      # host touch 3: kernel dispatch
+
+        tok, self.cache = self._prefill_fn(
+            self.params, jnp.asarray(prompts), jnp.asarray(lens), self.cache,
+            jnp.asarray(slots), jnp.asarray(active), self.key,
+            jnp.asarray(self.step_count, jnp.int32))
+        tok_host = np.asarray(jax.device_get(tok))   # PCIe round-trip
+        self.jitter()                      # host touch 4: copy-back handling
+
+        now = time.perf_counter()
+        for j, s in enumerate(admit):
+            t = int(tok_host[j])
+            self.outputs[s].append(t)
+            self.token_times[s].append(now)
+            self.first_token_time[s] = now
+            self.generated[s] = 1
+            self.last_token[s] = t
+            if self.generated[s] >= self.max_new[s]:
+                self._complete(s)
+            else:
+                self.slot_state[s] = rb.DECODE_PROCESSING
+                self.lane_slot[int(free_lanes[j])] = s
+
+    def _run_decode(self) -> None:
+        serve = self.serve
+        active = self.lane_slot >= 0
+        if not active.any():
+            return
+        slots = np.maximum(self.lane_slot, 0)
+        tokens = self.last_token[slots]
+        temps = self.temperature[slots]
+        self.jitter()                      # host touch 3: kernel dispatch
+
+        tok, self.cache = self._decode_fn(
+            self.params, jnp.asarray(tokens), self.cache, jnp.asarray(slots),
+            jnp.asarray(active), jnp.asarray(temps), self.key,
+            jnp.asarray(self.step_count, jnp.int32))
+        tok_host = np.asarray(jax.device_get(tok))   # PCIe round-trip
+        self.jitter()                      # host touch 4: batch reassembly
+
+        now = time.perf_counter()
+        for lane in range(serve.decode_batch):
+            if not active[lane]:
+                continue
+            s = int(self.lane_slot[lane])
+            t = int(tok_host[lane])
+            self.outputs[s].append(t)
+            self.token_times[s].append(now)
+            if self.first_token_time[s] < 0:
+                self.first_token_time[s] = now
+            self.generated[s] += 1
+            self.last_token[s] = t
+            if t == serve.eos_token or self.generated[s] >= self.max_new[s]:
+                self._complete(s)
+                self.lane_slot[lane] = -1
+
+    def _complete(self, slot: int) -> None:
+        self.slot_state[slot] = rb.DECODE_COMPLETED
+        if self.paged and slot in self.slot_pages:
+            self.free_pages.extend(reversed(self.slot_pages.pop(slot)))
+            bt = self.cache["kv"].block_table
+            self.cache["kv"] = dc.replace(
+                self.cache["kv"],
+                block_table=bt.at[slot].set(-1))
+
+    # -- convenience ---------------------------------------------------------
+    def run_until_idle(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while steps < max_steps:
+            busy = (self.slot_state == rb.PREFILL_PENDING).any() or \
+                   (self.lane_slot >= 0).any()
+            if not busy:
+                break
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,128 @@
+"""GPU(device)-resident ring buffer — the sole DPU<->engine rendezvous.
+
+Paper §4.2: "The ring buffer resides in GPU memory and is the only shared
+data structure between the DPU and GPU ... It consists of a fixed set of
+slots plus shared arenas for input and generated tokens. Each slot records
+per-request metadata and offsets into the token arenas. The scheduler
+advances each slot through a lifecycle state machine EMPTY ->
+PREFILL_PENDING -> PREFILL_PROCESSING -> DECODE_PROCESSING ->
+DECODE_COMPLETED -> EMPTY and uses a DECODE_PAUSED state to support
+preemption and continuous batching."
+
+The state machine here is bit-for-bit that protocol. Atomic CAS is not
+needed on TPU: slot transitions happen inside a single XLA program
+(data-race-free by construction); the frontend only writes EMPTY slots and
+only reads COMPLETED ones, so the cross-plane protocol keeps the same
+ownership discipline the CAS enforced on GPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ServeConfig
+
+# --- slot lifecycle states (paper §4.2) -----------------------------------
+EMPTY = 0
+PREFILL_PENDING = 1
+PREFILL_PROCESSING = 2
+DECODE_PROCESSING = 3
+DECODE_PAUSED = 4
+DECODE_COMPLETED = 5
+
+STATE_NAMES = {
+    EMPTY: "EMPTY",
+    PREFILL_PENDING: "PREFILL_PENDING",
+    PREFILL_PROCESSING: "PREFILL_PROCESSING",
+    DECODE_PROCESSING: "DECODE_PROCESSING",
+    DECODE_PAUSED: "DECODE_PAUSED",
+    DECODE_COMPLETED: "DECODE_COMPLETED",
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class RingState:
+    """All arrays are device-resident and survive window re-instantiation."""
+    slot_state: jax.Array     # [S] int32 lifecycle code
+    arrival: jax.Array        # [S] int32 admission ticket (smaller = earlier)
+    request_id: jax.Array     # [S] int32 frontend request id
+    prompt_len: jax.Array     # [S] int32
+    max_new: jax.Array        # [S] int32
+    generated: jax.Array      # [S] int32 tokens generated so far
+    last_token: jax.Array     # [S] int32 most recent token (decode input)
+    temperature: jax.Array    # [S] f32 (0 = greedy)
+    input_arena: jax.Array    # [S, max_prompt] int32
+    output_arena: jax.Array   # [S, max_new_tokens] int32
+    # telemetry (device step stamps; host converts to wall time)
+    submit_step: jax.Array    # [S] int32 step at which prompt was submitted
+    prefill_step: jax.Array   # [S] int32 step at which prefill ran
+    token_step: jax.Array     # [S, max_new_tokens] int32 publish step/token
+
+    @property
+    def num_slots(self) -> int:
+        return self.slot_state.shape[0]
+
+
+def make_ring(serve: ServeConfig) -> RingState:
+    S = serve.num_slots
+    return RingState(
+        slot_state=jnp.zeros((S,), jnp.int32),
+        arrival=jnp.full((S,), jnp.iinfo(jnp.int32).max, jnp.int32),
+        request_id=jnp.full((S,), -1, jnp.int32),
+        prompt_len=jnp.zeros((S,), jnp.int32),
+        max_new=jnp.zeros((S,), jnp.int32),
+        generated=jnp.zeros((S,), jnp.int32),
+        last_token=jnp.zeros((S,), jnp.int32),
+        temperature=jnp.zeros((S,), jnp.float32),
+        input_arena=jnp.zeros((S, serve.max_prompt_len), jnp.int32),
+        output_arena=jnp.full((S, serve.max_new_tokens), -1, jnp.int32),
+        submit_step=jnp.zeros((S,), jnp.int32),
+        prefill_step=jnp.full((S,), -1, jnp.int32),
+        token_step=jnp.full((S, serve.max_new_tokens), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Frontend-side (DPU-plane) operations. These run OUTSIDE the persistent
+# window program — the simulation analogue of one-sided RDMA writes into
+# device memory. They only touch EMPTY / DECODE_COMPLETED slots, preserving
+# the ownership protocol.
+# ---------------------------------------------------------------------------
+
+
+def submit_request(ring: RingState, slot: int, *, tokens, request_id: int,
+                   max_new: int, arrival: int, temperature: float = 0.0,
+                   step: int = 0) -> RingState:
+    """Write a tokenized prompt into an EMPTY slot -> PREFILL_PENDING."""
+    n = len(tokens)
+    arena_row = jnp.zeros((ring.input_arena.shape[1],), jnp.int32)
+    arena_row = arena_row.at[:n].set(jnp.asarray(tokens, jnp.int32))
+    return dataclasses.replace(
+        ring,
+        input_arena=ring.input_arena.at[slot].set(arena_row),
+        prompt_len=ring.prompt_len.at[slot].set(n),
+        max_new=ring.max_new.at[slot].set(max_new),
+        arrival=ring.arrival.at[slot].set(arrival),
+        request_id=ring.request_id.at[slot].set(request_id),
+        generated=ring.generated.at[slot].set(0),
+        temperature=ring.temperature.at[slot].set(temperature),
+        output_arena=ring.output_arena.at[slot].set(-1),
+        token_step=ring.token_step.at[slot].set(-1),
+        submit_step=ring.submit_step.at[slot].set(step),
+        prefill_step=ring.prefill_step.at[slot].set(-1),
+        # state transition LAST (the RDMA-visibility fence of §4.2)
+        slot_state=ring.slot_state.at[slot].set(PREFILL_PENDING),
+    )
+
+
+def release_slot(ring: RingState, slot: int) -> RingState:
+    """Frontend drained a COMPLETED slot -> EMPTY (slot reusable)."""
+    return dataclasses.replace(
+        ring,
+        slot_state=ring.slot_state.at[slot].set(EMPTY),
+        arrival=ring.arrival.at[slot].set(jnp.iinfo(jnp.int32).max),
+    )

@@ -1,0 +1,46 @@
+"""On-device token sampling (paper §4.2: "Token sampling (Top-P with
+temperature) is captured inside each graph, so the entire forward pass from
+attention through next-token selection executes as a single device-side
+launch with no host round-trip.")
+
+Per-slot keys are derived by folding (slot, step) into the engine's base key,
+so sampling is reproducible regardless of batch composition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def top_p_filter(logits: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Mask logits outside the top-p nucleus. logits [B, V], top_p [B]."""
+    sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep tokens until cumulative prob exceeds top_p (always keep top-1)
+    cutoff_mask = cum - probs < top_p[:, None]
+    # threshold logit = smallest kept sorted logit
+    kth = jnp.sum(cutoff_mask, axis=-1) - 1
+    thresh = jnp.take_along_axis(sorted_logits, kth[:, None], axis=-1)
+    return jnp.where(logits >= thresh, logits, -jnp.inf)
+
+
+def sample_tokens(key: jax.Array, logits: jax.Array, temperature: jax.Array,
+                  *, top_p: float = 1.0, slot_ids: jax.Array,
+                  step: jax.Array) -> jax.Array:
+    """logits [B, V]; temperature [B] (0 => greedy). Returns [B] int32."""
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temp = jnp.maximum(temperature, 1e-4)
+    scaled = logits / temp[:, None]
+    if top_p < 1.0:
+        scaled = top_p_filter(scaled, jnp.full((B,), top_p, jnp.float32))
+    # per-slot, per-step keys -> batch-composition independent
+    keys = jax.vmap(
+        lambda s: jax.random.fold_in(jax.random.fold_in(key, s), step)
+    )(slot_ids)
+    gumbel = -jnp.log(-jnp.log(
+        jax.vmap(lambda k: jax.random.uniform(k, (V,), minval=1e-9,
+                                              maxval=1.0))(keys)))
+    sampled = jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)

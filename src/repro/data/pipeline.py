@@ -1,0 +1,84 @@
+"""Data pipeline: deterministic synthetic LM batches + ShareGPT-like serving
+traces (the paper's workload: mean input/output 1019/463 tokens, Poisson
+arrivals at an offered rate lambda).
+
+Everything is seeded numpy on the host feeding device arrays — a real
+deployment swaps `SyntheticLM` for a tokenized corpus reader with the same
+iterator contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class SyntheticLM:
+    """Zipf-ish token stream with learnable bigram structure, so a ~100M
+    model's loss actually falls during the example training run."""
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    modal_tokens: int = 0
+    d_model: int = 0   # for modal embed stubs
+
+    def __iter__(self) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed)
+        V = self.vocab_size
+        # fixed sparse bigram transition table (structure to learn)
+        nxt = rng.integers(3, V, size=V)
+        while True:
+            toks = np.empty((self.batch_size, self.seq_len + 1), np.int64)
+            start = rng.integers(3, V, size=self.batch_size)
+            toks[:, 0] = start
+            noise = rng.random((self.batch_size, self.seq_len)) < 0.15
+            rand = rng.integers(3, V, size=(self.batch_size, self.seq_len))
+            for t in range(self.seq_len):
+                toks[:, t + 1] = np.where(noise[:, t], rand[:, t],
+                                          nxt[toks[:, t]])
+            batch = {
+                "tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32),
+                "mask": np.ones((self.batch_size, self.seq_len), bool),
+            }
+            if self.modal_tokens:
+                batch["modal_embeds"] = rng.standard_normal(
+                    (self.batch_size, self.modal_tokens, self.d_model),
+                ).astype(np.float32) * 0.02
+            yield batch
+
+
+@dataclass
+class TraceRequest:
+    arrival_s: float
+    input_len: int
+    output_len: int
+
+
+def sharegpt_like_trace(num_requests: int, rate: float, *, seed: int = 0,
+                        mean_in: float = 1019.0, mean_out: float = 463.0,
+                        max_in: int = 4096, max_out: int = 2048
+                        ) -> List[TraceRequest]:
+    """Poisson arrivals; lognormal lengths matched to the paper's ShareGPT v3
+    means (1019/463). Scale means down for smoke-size runs via max_in/out."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=num_requests)
+    arrivals = np.cumsum(gaps)
+    # lognormal with the requested mean, sigma=1 shape (heavy tail)
+    sigma = 1.0
+    mu_in = np.log(mean_in) - sigma ** 2 / 2
+    mu_out = np.log(mean_out) - sigma ** 2 / 2
+    ins = np.clip(rng.lognormal(mu_in, sigma, num_requests), 1, max_in)
+    outs = np.clip(rng.lognormal(mu_out, sigma, num_requests), 1, max_out)
+    return [TraceRequest(float(a), int(i), int(o))
+            for a, i, o in zip(arrivals, ins, outs)]
+
+
+def make_prompts(trace: List[TraceRequest], vocab_size: int, *, seed: int = 0
+                 ) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, vocab_size, size=t.input_len).astype(np.int32)
+            for t in trace]

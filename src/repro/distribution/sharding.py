@@ -1,0 +1,179 @@
+"""Sharding rules: logical param/cache/input axes -> mesh axes.
+
+Mesh axes (DESIGN.md §6):
+  * "model" — tensor parallel: attention heads / FFN hidden / vocab / expert
+    hidden (baseline) or expert index (expert-parallel hillclimb);
+  * "data"  — batch / ring slots / KV pages' owning sequences;
+  * "pod"   — second-level data parallelism across pods (training), present
+    only on the multi-pod mesh.
+
+Rules are name-based over the param template, MaxText-style: weights get
+explicit shardings; interior activations are left to SPMD propagation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# param-name -> which dim gets the "model" axis (negative = from the right)
+_SHARD_LAST = {
+    "wq", "wk", "wv", "wg", "wr",                 # attention / rwkv proj
+    "w_gate", "w_up",                             # mlp / moe expert in
+    "cm_wk", "cm_wr",                             # rwkv channel-mix in
+    "z_proj", "x_proj", "dt_proj",                # mamba in
+    "conv_w",                                     # mamba depthwise conv
+    "bq", "bk", "bv",                             # qkv biases
+    "conv_b",
+    "wq_x", "wk_x", "wv_x", "bq_x", "bk_x", "bv_x",  # cross-attn
+}
+_SHARD_SECOND_LAST = {
+    "wo", "w_down", "cm_wv", "out_proj", "wo_x",  # output projections
+}
+_REPLICATED = {
+    "ln", "ln1", "ln2", "ln3", "final_norm", "out_ln",
+    "router", "shared_gate",
+    "mu_r", "mu_k", "mu_v", "mu_g", "mu_w", "cm_mu_k", "cm_mu_r",
+    "w_lora_a", "w_lora_b", "w_decay", "u_bonus",
+    "b_proj", "c_proj", "A_log", "D_skip", "dt_bias",
+}
+# qwen2-moe shared experts: ordinary TP
+_SHARD_LAST |= {"ws_gate", "ws_up"}
+_SHARD_SECOND_LAST |= {"ws_down"}
+
+_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}     # [L, E, D, Fe]-shaped
+
+
+def _shard_dim(shape, dim: int, model_size: int) -> P:
+    """Spec sharding ``dim`` on "model" if divisible, else replicate."""
+    spec = [None] * len(shape)
+    if shape[dim] % model_size == 0:
+        spec[dim] = "model"
+    return P(*spec)
+
+
+def _spec_for(name: str, shape, cfg: ModelConfig, model_size: int, *,
+              expert_parallel: bool) -> P:
+    ndim = len(shape)
+    if name == "embed":
+        # prefer vocab sharding; some vocabs (92553, 256206) don't divide —
+        # fall back to the d_model dim
+        if shape[0] % model_size == 0:
+            return P("model", None)
+        return _shard_dim(shape, 1, model_size)
+    if name == "unembed":
+        if shape[1] % model_size == 0:
+            return P(None, "model")
+        return _shard_dim(shape, 0, model_size)
+    is_expert = cfg.num_experts and ndim == 4 and name in _EXPERT_LEAVES
+    if is_expert and expert_parallel:
+        return _shard_dim(shape, 1, model_size)    # shard expert index
+    if name in _SHARD_LAST:
+        return _shard_dim(shape, -1, model_size)
+    if name in _SHARD_SECOND_LAST:
+        return _shard_dim(shape, -2, model_size)
+    return P()                                     # default: replicate
+
+
+def param_pspecs(cfg: ModelConfig, *, model_size: int = 16,
+                 expert_parallel: bool = False) -> Dict[str, Any]:
+    """PartitionSpec tree matching ``transformer.param_specs(cfg)``."""
+    from repro.models.transformer import param_specs
+    specs = param_specs(cfg)
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = _spec_for(k, v.shape, cfg, model_size,
+                                   expert_parallel=expert_parallel)
+        return out
+
+    return walk(specs)
+
+
+def kv_head_axis(cfg: ModelConfig, model_size: int):
+    """Which pages dim to shard on "model": 3 (KV heads) if divisible,
+    else 4 (head_dim) if divisible, else None (replicate over model)."""
+    if cfg.num_kv_heads % model_size == 0:
+        return 3
+    if cfg.resolved_head_dim % model_size == 0:
+        return 4
+    return None
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree: Dict[str, Any],
+                 model_size: int, *, data_axis="data") -> Dict[str, Any]:
+    """PartitionSpec tree for a serve cache bundle.
+
+    data_axis (axis name, tuple, or None): shards the page pool / slots —
+    each data shard is an independent serving replica (launch.steps).
+    The model axis shards KV heads (or head_dim when heads don't divide)."""
+    out: Dict[str, Any] = {}
+    if "kv" in cache_tree:
+        from repro.models.cache import PagedKVCache
+        ax = kv_head_axis(cfg, model_size)
+        page_spec = [None] * 5
+        if ax is not None:
+            page_spec[ax] = "model"
+        page_spec[1] = data_axis                 # page pool: replica-local
+        scale_spec = None
+        if getattr(cache_tree["kv"], "k_scale", None) is not None:
+            sp = [None] * 4
+            sp[1] = data_axis
+            if ax == 3:                          # scales have no hd dim
+                sp[3] = "model"
+            scale_spec = P(*sp)
+        out["kv"] = PagedKVCache(
+            k_pages=P(*page_spec),
+            v_pages=P(*page_spec),
+            block_table=P(data_axis, None),
+            seq_lens=P(data_axis),
+            k_scale=scale_spec,
+            v_scale=scale_spec,
+        )
+    if "ssm" in cache_tree:
+        def ssm_spec(leaf):
+            # [L, S, ...]: slots on data; best divisible trailing dim on model
+            nd = len(leaf.shape)
+            spec = [None] * nd
+            spec[1] = data_axis
+            if nd >= 3:
+                cands = [d for d in range(2, nd)
+                         if leaf.shape[d] % model_size == 0]
+                if cands:
+                    best = max(cands, key=lambda d: leaf.shape[d])
+                    spec[best] = "model"
+            return P(*spec)
+        out["ssm"] = jax.tree.map(
+            ssm_spec, cache_tree["ssm"],
+            is_leaf=lambda x: hasattr(x, "shape"))
+    for k in ("enc_k", "enc_v"):
+        if k in cache_tree:
+            ax = kv_head_axis(cfg, model_size)
+            spec = [None] * 5
+            if ax is not None:
+                spec[ax] = "model"
+            spec[1] = data_axis
+            out[k] = P(*spec)
+    if "enc_len" in cache_tree:
+        out["enc_len"] = P(data_axis)
+    return out
+
+
+def to_named(mesh: Mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh):
+    """Data-parallel axes: ("pod","data") on a multi-pod mesh else "data"."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else "data"

@@ -1,0 +1,212 @@
+"""Blink serving stack driver: DPU-plane frontend + device-plane engine.
+
+``BlinkFrontend`` simulates the BlueField plane of Fig. 2: request intake ①,
+tokenization ②, slot acquisition ③, prompt submission (the one-sided RDMA
+write ⑤ becomes a functional ring update between window launches), token
+retrieval ⑩/⑪ (TokenReader), detokenization ⑫ and streaming ⑬ (callback).
+
+``BlinkServer`` is the end-to-end loop: the host's ONLY steady-state job is
+re-launching the persistent window with donated state (the tail launch);
+frontend work happens strictly between windows and never blocks the device
+program — mirroring the paper's decoupling of the two planes.
+
+``frontend_jitter``: optional callable applied per frontend operation. In
+the paper the frontend lives on the DPU and is immune to host interference;
+benchmarks use this to show Blink's *engine* is jitter-free even when the
+(simulated) frontend is slowed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.core import engine as eng
+from repro.core import ring_buffer as rb
+from repro.frontend.slot_tracker import SlotTracker
+from repro.frontend.token_reader import TokenReader
+from repro.frontend.tokenizer import BPETokenizer
+from repro.models.api import ModelApi
+
+
+@dataclass
+class Request:
+    request_id: int
+    tokens: List[int]
+    max_new: int
+    temperature: float = 0.0
+    submit_wall: float = 0.0
+    first_token_wall: float = -1.0
+    finish_wall: float = -1.0
+    slot: int = -1
+    output: List[int] = field(default_factory=list)
+    text: Optional[str] = None
+
+
+class BlinkFrontend:
+    def __init__(self, serve: ServeConfig,
+                 tokenizer: Optional[BPETokenizer] = None,
+                 jitter: Optional[Callable[[], None]] = None,
+                 on_token: Optional[Callable[[int, int, int], None]] = None):
+        self.serve = serve
+        self.tokenizer = tokenizer
+        self.jitter = jitter or (lambda: None)
+        self.tracker = SlotTracker(serve.num_slots)
+        self.reader = TokenReader(serve.num_slots, on_token=on_token)
+        self.queue: List[Request] = []           # not yet in the ring
+        self.in_flight: Dict[int, Request] = {}  # slot -> request
+        self.done: Dict[int, Request] = {}       # request_id -> request
+        self._arrival = 0
+        self._next_id = 0
+
+    # -- intake (HTTP/SSE layer stand-in) ------------------------------------
+    def enqueue(self, prompt, max_new: int, temperature: float = 0.0) -> int:
+        self.jitter()                              # request parse/validate
+        if isinstance(prompt, str):
+            assert self.tokenizer is not None, "text prompt needs a tokenizer"
+            tokens = self.tokenizer.encode(prompt)  # DPU tokenization
+        else:
+            tokens = list(prompt)
+        tokens = tokens[: self.serve.max_prompt_len]
+        req = Request(self._next_id, tokens, max_new, temperature,
+                      submit_wall=time.perf_counter())
+        self._next_id += 1
+        self.queue.append(req)
+        return req.request_id
+
+    # -- submission plane (the RDMA writes, between windows) -----------------
+    def flush_submissions(self, ring: rb.RingState, step: int) -> rb.RingState:
+        if not self.queue:
+            return ring
+        self.tracker.refresh(np.asarray(ring.slot_state))  # bulk read
+        still: List[Request] = []
+        for req in self.queue:
+            slot = self.tracker.acquire()
+            if slot is None:
+                still.append(req)                  # ring full: queue on DPU
+                continue
+            self.jitter()                          # staging + RDMA write
+            ring = rb.submit_request(
+                ring, slot, tokens=req.tokens, request_id=req.request_id,
+                max_new=req.max_new, arrival=self._arrival,
+                temperature=req.temperature, step=step)
+            self._arrival += 1
+            req.slot = slot
+            self.in_flight[slot] = req
+            self.reader.mark_urgent(slot)
+        self.queue = still
+        return ring
+
+    # -- retrieval plane (token reader poll, between windows) ----------------
+    def poll(self, ring: rb.RingState) -> rb.RingState:
+        self.jitter()                              # poll cycle
+        slot_states = np.asarray(ring.slot_state)
+        generated = np.asarray(ring.generated)
+        arena = np.asarray(ring.output_arena)
+        new_tokens, completed = self.reader.poll(slot_states, generated, arena)
+        now = time.perf_counter()
+        for slot, toks in new_tokens.items():
+            req = self.in_flight.get(slot)
+            if req is None:
+                continue
+            if req.first_token_wall < 0:
+                req.first_token_wall = now
+            req.output.extend(int(t) for t in toks)
+        for slot in completed:
+            req = self.in_flight.pop(slot, None)
+            if req is None:
+                continue
+            req.finish_wall = now
+            if self.tokenizer is not None:
+                req.text = self.tokenizer.decode(req.output)  # detokenize
+            self.done[req.request_id] = req
+            ring = rb.release_slot(ring, slot)     # slot -> EMPTY
+            self.tracker.mark_free(slot)
+        return ring
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.in_flight
+
+
+class BlinkServer:
+    """End-to-end Blink stack: frontend + persistent-window engine."""
+
+    def __init__(self, api: ModelApi, serve: ServeConfig, params, *,
+                 tokenizer: Optional[BPETokenizer] = None,
+                 frontend_jitter: Optional[Callable[[], None]] = None,
+                 host_jitter: Optional[Callable[[], None]] = None,
+                 on_token=None, seed: int = 0, enc_len: int = 0,
+                 prompt_buckets: Optional[tuple] = None):
+        self.api = api
+        self.serve = serve
+        self.params = params
+        self.frontend = BlinkFrontend(serve, tokenizer,
+                                      jitter=frontend_jitter,
+                                      on_token=on_token)
+        self.host_jitter = host_jitter or (lambda: None)
+        self._enc_len = enc_len
+        self.state = eng.init_engine_state(api, serve, seed=seed,
+                                           enc_len=enc_len)
+        # the paper's CUDA graph cache: window executables per prompt bucket
+        # (tightest fit selected per window; max shape is the fallback)
+        self.windows = eng.WindowCache(api, serve, prompt_buckets)
+        self.window_wall: List[float] = []
+
+    def submit(self, prompt, max_new: int, temperature: float = 0.0) -> int:
+        return self.frontend.enqueue(prompt, max_new, temperature)
+
+    def reset(self, seed: int = 0) -> None:
+        """Fresh engine + frontend state, KEEPING the compiled window."""
+        fe = self.frontend
+        self.frontend = BlinkFrontend(self.serve, fe.tokenizer,
+                                      jitter=fe.jitter,
+                                      on_token=fe.reader.on_token)
+        self.state = eng.init_engine_state(self.api, self.serve, seed=seed,
+                                           enc_len=self._enc_len)
+        self.window_wall = []
+
+    def run_window(self) -> None:
+        fe = self.frontend
+        step = int(self.state.step)
+        ring = fe.flush_submissions(self.state.ring, step)
+        if ring is not self.state.ring:
+            self.state = dataclasses.replace(self.state, ring=ring)
+        self.host_jitter()                 # the ONE host touch per window
+        window_fn = self.windows.select(
+            self.windows.max_pending_len(self.state.ring))
+        t0 = time.perf_counter()
+        self.state = window_fn(self.params, self.state)
+        jax.block_until_ready(self.state.step)
+        self.window_wall.append(time.perf_counter() - t0)
+        ring = fe.poll(self.state.ring)
+        if ring is not self.state.ring:
+            self.state = dataclasses.replace(self.state, ring=ring)
+
+    def run_until_idle(self, max_windows: int = 1000) -> int:
+        n = 0
+        while n < max_windows:
+            if self.frontend.idle:
+                break
+            self.run_window()
+            n += 1
+        return n
+
+    # -- telemetry -------------------------------------------------------------
+    def request_metrics(self) -> List[dict]:
+        out = []
+        for req in self.frontend.done.values():
+            ttft = (req.first_token_wall - req.submit_wall
+                    if req.first_token_wall > 0 else float("nan"))
+            ntok = len(req.output)
+            tpot = ((req.finish_wall - req.first_token_wall) / max(ntok - 1, 1)
+                    if req.finish_wall > 0 else float("nan"))
+            out.append({"request_id": req.request_id, "ttft": ttft,
+                        "tpot": tpot, "tokens": ntok,
+                        "latency": req.finish_wall - req.submit_wall})
+        return out

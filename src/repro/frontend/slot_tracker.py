@@ -1,0 +1,53 @@
+"""DPU-side slot tracker (paper §4.4).
+
+"Rather than scanning all ring buffer slots via RDMA before each submission,
+the slot tracker maintains a local availability cache on the DPU, refreshed
+periodically via a single bulk RDMA read. A hint-based circular scan finds
+empty slots in O(1) amortized time."
+
+Here the "bulk RDMA read" is a single device_get of the slot-state array;
+the hint-based circular scan is reproduced exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import ring_buffer as rb
+
+
+class SlotTracker:
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self._avail = np.ones(num_slots, bool)   # local availability cache
+        self._hint = 0                           # circular-scan start
+        self.refreshes = 0
+        self.scans = 0
+
+    def refresh(self, slot_states: np.ndarray) -> None:
+        """One bulk read of the ring's slot states -> update local cache."""
+        self._avail = slot_states == rb.EMPTY
+        self.refreshes += 1
+
+    def mark_busy(self, slot: int) -> None:
+        self._avail[slot] = False
+
+    def mark_free(self, slot: int) -> None:
+        self._avail[slot] = True
+
+    def acquire(self) -> Optional[int]:
+        """Hint-based circular scan; O(1) amortized."""
+        n = self.num_slots
+        for off in range(n):
+            s = (self._hint + off) % n
+            self.scans += 1
+            if self._avail[s]:
+                self._avail[s] = False
+                self._hint = (s + 1) % n
+                return s
+        return None
+
+    @property
+    def free_count(self) -> int:
+        return int(self._avail.sum())

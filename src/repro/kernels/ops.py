@@ -1,0 +1,56 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only (the
+kernels are TPU-targeted; interpret mode executes the kernel bodies in
+Python for correctness validation). On TPU set
+``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ring_scan as _rs
+from repro.kernels import ssm_scan as _ss
+
+INTERPRET = True
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_table, kv_lens, *,
+                    window: int = 0, softcap: float = 0.0,
+                    interpret: bool = None):
+    interp = INTERPRET if interpret is None else interpret
+    return _pa.paged_attention(
+        q, k_pages, v_pages, block_table, kv_lens,
+        window=window, softcap=softcap, interpret=interp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("want_state", "block_size", "interpret"))
+def ring_scan_blocks(states, arrivals, *, want_state: int,
+                     block_size: int = 64, interpret: bool = None):
+    interp = INTERPRET if interpret is None else interpret
+    return _rs.ring_scan_blocks(states, arrivals, want_state=want_state,
+                                block_size=block_size, interpret=interp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("want_state", "k", "block_size",
+                                    "interpret"))
+def ring_select_topk(states, arrivals, *, want_state: int, k: int,
+                     block_size: int = 64, interpret: bool = None):
+    interp = INTERPRET if interpret is None else interpret
+    return _rs.ring_select_topk(states, arrivals, want_state=want_state,
+                                k=k, block_size=block_size, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(x, B_in, C_in, dt, A, h0, *, chunk: int = 64,
+                   interpret: bool = None):
+    interp = INTERPRET if interpret is None else interpret
+    return _ss.ssd_chunk_scan(x, B_in, C_in, dt, A, h0, chunk=chunk,
+                              interpret=interp)

@@ -1,0 +1,145 @@
+"""Paged-attention decode kernel (Pallas TPU).
+
+The Blink hot path: one new query token per sequence attends over that
+sequence's paged KV cache. On GPU the paper fuses this into the persistent
+scheduler's pre-captured decode graph; the TPU-native formulation is a
+Pallas kernel that
+
+  * uses *scalar prefetch* for the block table, so the page gather is
+    expressed through the BlockSpec ``index_map`` (pages stream HBM->VMEM
+    block by block — the TPU analogue of PagedAttention's page-gather),
+  * keeps a flash-attention running softmax (m, l, acc) in VMEM scratch,
+  * supports sliding-window masking (mixtral/gemma2 local layers) and
+    attention-logit softcapping (gemma2) for arch coverage.
+
+Grid: (B, KV_heads, num_blocks); each step processes one KV page of
+``page_size`` tokens against the G = H/KV query heads of one KV head.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(
+    # scalar-prefetch refs
+    block_table_ref,   # [B, mb] int32
+    kv_lens_ref,       # [B] int32 — tokens to attend per lane
+    # array refs
+    q_ref,             # [1, 1, G, hd]
+    k_ref,             # [1, ps, 1, hd]   (page selected via index_map)
+    v_ref,             # [1, ps, 1, hd]
+    o_ref,             # [1, 1, G, hd]
+    # scratch
+    m_scr,             # [G, 1] f32
+    l_scr,             # [G, 1] f32
+    acc_scr,           # [G, hd] f32
+    *,
+    page_size: int,
+    num_blocks: int,
+    window: int,       # 0 = full attention
+    softcap: float,    # 0 = disabled
+    scale: float,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [ps, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [G, ps]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    kv_len = kv_lens_ref[b]
+    kv_pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    mask = kv_pos < kv_len
+    if window > 0:
+        mask &= kv_pos >= (kv_len - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                                # [G, ps]
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                       # [G, 1]
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i == num_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jax.Array,            # [B, KV, G, hd]
+    k_pages: jax.Array,      # [P, ps, KV, hd]
+    v_pages: jax.Array,
+    block_table: jax.Array,  # [B, mb] int32 (-1 = unassigned)
+    kv_lens: jax.Array,      # [B] int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns [B, KV, G, hd] attention output."""
+    B, KV, G, hd = q.shape
+    P, ps, _, _ = k_pages.shape
+    mb = block_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    safe_table = jnp.maximum(block_table, 0).astype(jnp.int32)
+
+    grid = (B, KV, mb)
+
+    def q_map(b, h, i, bt, kl):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, i, bt, kl):
+        return (bt[b, i], 0, h, 0)
+
+    def o_map(b, h, i, bt, kl):
+        return (b, h, 0, 0)
+
+    kernel = functools.partial(
+        _paged_attn_kernel, page_size=ps, num_blocks=mb,
+        window=int(window), softcap=float(softcap), scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), q_map),
+                pl.BlockSpec((1, ps, 1, hd), kv_map),
+                pl.BlockSpec((1, ps, 1, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd), o_map),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(safe_table, kv_lens.astype(jnp.int32), q, k_pages, v_pages)
+    return out

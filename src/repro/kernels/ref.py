@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert the kernels (interpret mode on CPU,
+compiled on TPU) match these references.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, kv_lens, *,
+                        window: int = 0, softcap: float = 0.0):
+    """q: [B, KV, G, hd]; pages [P, ps, KV, hd]; returns [B, KV, G, hd]."""
+    B, KV, G, hd = q.shape
+    P, ps, _, _ = k_pages.shape
+    mb = block_table.shape[1]
+    safe = jnp.clip(block_table, 0, P - 1)
+    k = k_pages[safe]                        # [B, mb, ps, KV, hd]
+    v = v_pages[safe]
+    k = k.reshape(B, mb * ps, KV, hd).astype(jnp.float32)
+    v = v.reshape(B, mb * ps, KV, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_pos = jnp.arange(mb * ps)[None, :]
+    mask = kv_pos < kv_lens[:, None]
+    if window > 0:
+        mask &= kv_pos >= (kv_lens[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # zero out fully-masked lanes instead of NaN
+    p = jnp.where(jnp.any(mask, axis=1)[:, None, None, None], p, 0.0)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v)
+    return out.astype(q.dtype)
+
+
+def ring_scan_blocks_ref(states, arrivals, *, want_state: int,
+                         block_size: int = 64):
+    S = states.shape[0]
+    nb = S // block_size
+    eligible = states == want_state
+    keyed = jnp.where(eligible, arrivals, INT_MAX).reshape(nb, block_size)
+    min_val = jnp.min(keyed, axis=1)
+    local = jnp.argmin(keyed, axis=1).astype(jnp.int32)
+    idx = jnp.arange(nb, dtype=jnp.int32) * block_size + local
+    return jnp.stack([min_val, idx], axis=1)
+
+
+def ssd_chunk_scan_ref(x, B_in, C_in, dt, A, h0, *, chunk: int = 64):
+    """Reference chunked SSD == repro.models.ssm._ssd_chunk_scan reshaped."""
+    from repro.models.ssm import _ssd_chunk_scan
+    Bsz, T, H, P = x.shape
+    Q = min(chunk, T)
+    nc = T // Q
+
+    def rc(t):
+        return t.reshape((Bsz, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    ys, h_final = _ssd_chunk_scan(
+        A.astype(jnp.float32), rc(x.astype(jnp.float32)),
+        rc(B_in.astype(jnp.float32)), rc(C_in.astype(jnp.float32)),
+        rc(dt.astype(jnp.float32)), h0.astype(jnp.float32))
+    y = ys.swapaxes(0, 1).reshape(Bsz, T, H, P)
+    return y, h_final
+
+
+def ssd_sequential_ref(x, B_in, C_in, dt, A, h0):
+    """Step-by-step SSD recurrence — the ground-truth oracle."""
+    Bsz, T, H, P = x.shape
+
+    def step(h, inputs):
+        xt, bt, ct, dtt = inputs             # [B,H,P], [B,N], [B,N], [B,H]
+        decay = jnp.exp(A[None, :] * dtt)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          B_in.transpose(1, 0, 2).astype(jnp.float32),
+          C_in.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), h

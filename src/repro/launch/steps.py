@@ -1,0 +1,139 @@
+"""Step functions lowered by the launcher / dry-run.
+
+  * ``train_step``  — loss + grad + AdamW update (train_4k); plain pjit
+    (data parallel over pod+data, TP over model).
+  * ``prefill_step`` / ``serve_step`` — serving steps. Multi-device serving
+    uses **partial-auto shard_map**: the data (and pod) axes are MANUAL —
+    each shard is an independent serving replica owning its slots and its
+    local KV page pool (the paper's §7 "instantiate a persistent scheduler
+    per device" extension) — while the model axis stays AUTO (GSPMD tensor
+    parallelism inside each replica). This keeps the paged-KV gather local
+    to a shard: no cross-replica collectives on the token path, exactly like
+    Blink's per-GPU ring buffer.
+
+Sampling is fused into both serving steps (paper §4.2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.api import ModelApi
+from repro.optim.adamw import AdamW
+
+
+def make_train_step(api: ModelApi, optimizer: AdamW):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = api.train_loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss, metrics
+
+    return train_step
+
+
+def _prefill_fn(api: ModelApi):
+    def prefill_step(params, tokens, lengths, cache, slot_ids, active,
+                     extra=None):
+        kw = {}
+        if extra is not None:
+            if api.cfg.is_encoder_decoder:
+                kw["frames"] = extra
+                kw["frame_mask"] = jnp.ones(extra.shape[:2], bool)
+            else:
+                kw["modal_embeds"] = extra
+        logits, cache = api.prefill(params, tokens, lengths, cache, slot_ids,
+                                    active, **kw)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # fused sampling
+        return tok, cache
+
+    return prefill_step
+
+
+def _serve_fn(api: ModelApi):
+    def serve_step(params, tokens, cache, slot_ids, active):
+        logits, cache = api.decode(params, tokens, cache, slot_ids, active)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # fused sampling
+        return tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(api: ModelApi):
+    return _prefill_fn(api)
+
+
+def make_serve_step(api: ModelApi):
+    return _serve_fn(api)
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrappers (manual data/pod axes, auto model axis)
+# ---------------------------------------------------------------------------
+
+
+def _dp_tuple(dp) -> tuple:
+    return dp if isinstance(dp, tuple) else (dp,)
+
+
+def cache_manual_specs(cache_tree: Dict[str, Any], dp) -> Dict[str, Any]:
+    """shard_map in/out specs for the cache: only the manual (data) axes.
+
+    pages: dim 1 (page pool) sharded; block_table/seq_lens: dim 0 (slots);
+    ssm state leaves: dim 1 (slots); enc buffers: dim 1 (slots)."""
+    from repro.models.cache import PagedKVCache
+    out: Dict[str, Any] = {}
+    if "kv" in cache_tree:
+        quant = getattr(cache_tree["kv"], "k_scale", None) is not None
+        out["kv"] = PagedKVCache(
+            k_pages=P(None, dp, None, None, None),
+            v_pages=P(None, dp, None, None, None),
+            block_table=P(dp, None),
+            seq_lens=P(dp),
+            k_scale=P(None, dp, None, None) if quant else None,
+            v_scale=P(None, dp, None, None) if quant else None,
+        )
+    if "ssm" in cache_tree:
+        out["ssm"] = jax.tree.map(
+            lambda leaf: P(*([None, dp] + [None] * (len(leaf.shape) - 2))),
+            cache_tree["ssm"], is_leaf=lambda x: hasattr(x, "shape"))
+    for k in ("enc_k", "enc_v"):
+        if k in cache_tree:
+            out[k] = P(None, dp, None, None, None)
+    if "enc_len" in cache_tree:
+        out["enc_len"] = P(dp)
+    return out
+
+
+def make_sharded_serve_step(api: ModelApi, mesh: Mesh, dp, cache_tree):
+    """serve_step over independent data-sharded serving replicas."""
+    cache_specs = cache_manual_specs(cache_tree, dp)
+    fn = _serve_fn(api)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(), P(dp), cache_specs, P(dp), P(dp)),
+        out_specs=(P(dp), cache_specs),
+        axis_names=set(_dp_tuple(dp)),
+        check_vma=False)
+
+
+def make_sharded_prefill_step(api: ModelApi, mesh: Mesh, dp, cache_tree,
+                              *, has_extra: bool):
+    cache_specs = cache_manual_specs(cache_tree, dp)
+    fn = _prefill_fn(api)
+    in_specs = [P(), P(dp, None), P(dp), cache_specs, P(dp), P(dp)]
+    if has_extra:
+        in_specs.append(P(dp, None, None))
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(dp), cache_specs),
+        axis_names=set(_dp_tuple(dp)),
+        check_vma=False)

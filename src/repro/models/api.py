@@ -1,0 +1,67 @@
+"""Unified model API — the Blink engine treats models as opaque through this.
+
+The paper's scheduler "treats the inference graph as an opaque computation —
+populating input tensors, launching the graph, and reading output buffers"
+(§4.3). This module is that boundary: every architecture exposes the same
+four functions + a cache factory, so the engine, launcher and dry-run never
+special-case a family.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import cache as cache_lib
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf_lib
+
+
+class ModelApi(NamedTuple):
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Dict[str, Any]]
+    param_specs: Callable[[], Dict[str, Any]]
+    train_loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    make_cache: Callable[..., Dict[str, Any]]
+
+
+def make_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.is_encoder_decoder:
+        train = lambda params, batch, **kw: encdec_lib.train_loss(
+            params, cfg, batch, **kw)
+        pre = lambda params, *a, **kw: encdec_lib.prefill(params, cfg, *a, **kw)
+    else:
+        train = lambda params, batch, **kw: tf_lib.train_loss(
+            params, cfg, batch, **kw)
+        pre = lambda params, *a, **kw: tf_lib.prefill(params, cfg, *a, **kw)
+
+    dec = lambda params, *a, **kw: tf_lib.decode(params, cfg, *a, **kw)
+
+    def mk_cache(*, num_slots: int, num_pages: int, page_size: int,
+                 max_blocks: int, enc_len: int = 0, dtype=None):
+        return cache_lib.make_cache(
+            cfg, num_slots=num_slots, num_pages=num_pages,
+            page_size=page_size, max_blocks=max_blocks, enc_len=enc_len,
+            dtype=dtype)
+
+    return ModelApi(
+        cfg=cfg,
+        init_params=lambda key: tf_lib.init_params(key, cfg),
+        param_specs=lambda: tf_lib.param_specs(cfg),
+        train_loss=train,
+        prefill=pre,
+        decode=dec,
+        make_cache=mk_cache,
+    )
+
+
+def cache_for_serve(api: ModelApi, serve: ServeConfig, *, enc_len: int = 0,
+                    dtype=None) -> Dict[str, Any]:
+    return api.make_cache(
+        num_slots=serve.num_slots, num_pages=serve.num_pages,
+        page_size=serve.page_size, max_blocks=serve.pages_per_req,
+        enc_len=enc_len, dtype=dtype)

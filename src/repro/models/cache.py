@@ -1,0 +1,280 @@
+"""Decode-time cache containers.
+
+``PagedKVCache`` is the Blink paged KV cache: a global page pool plus a
+per-slot block table, all device-resident. SSM/hybrid archs additionally (or
+exclusively) carry fixed-size recurrent state. Everything is a pytree so the
+whole cache lives inside the persistent window program and survives
+re-instantiation via donation (paper §4.2 "seamless state continuity").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PagedKVCache:
+    """Paged KV pool.
+
+    k_pages/v_pages: [L, P, page_size, KV, hd]
+    block_table:     [S, max_blocks]  (page id per block, -1 = unassigned)
+    seq_lens:        [S]              (tokens currently cached per slot)
+    k_scale/v_scale: [L, P, page_size, KV] — per-(token, head) dequant
+                     scales, present only for int8 KV (beyond-paper
+                     optimization: halves KV HBM traffic and footprint)
+    """
+    k_pages: jax.Array
+    v_pages: jax.Array
+    block_table: jax.Array
+    seq_lens: jax.Array
+    k_scale: Optional[jax.Array] = None
+    v_scale: Optional[jax.Array] = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[2]
+
+    @property
+    def max_blocks(self) -> int:
+        return self.block_table.shape[1]
+
+    @property
+    def max_kv(self) -> int:
+        return self.max_blocks * self.page_size
+
+
+def make_paged_kv_cache(
+    cfg: ModelConfig,
+    *,
+    num_slots: int,
+    num_pages: int,
+    page_size: int,
+    max_blocks: int,
+    dtype=None,
+) -> PagedKVCache:
+    L = cfg.num_attn_layers
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dtype = jnp.dtype(dtype) if dtype else cfg.jnp_dtype
+    scales = None
+    if dtype == jnp.int8:
+        scales = jnp.zeros((L, num_pages, page_size, kv), jnp.bfloat16)
+    return PagedKVCache(
+        k_pages=jnp.zeros((L, num_pages, page_size, kv, hd), dtype),
+        v_pages=jnp.zeros((L, num_pages, page_size, kv, hd), dtype),
+        block_table=jnp.full((num_slots, max_blocks), -1, jnp.int32),
+        seq_lens=jnp.zeros((num_slots,), jnp.int32),
+        k_scale=scales,
+        v_scale=scales,
+    )
+
+
+# ---------------------------------------------------------------------------
+# KV page IO
+# ---------------------------------------------------------------------------
+
+
+def write_kv_layer(
+    cache: PagedKVCache,
+    layer: jax.Array,         # scalar layer index (traced ok)
+    slot_ids: jax.Array,      # [B] slot per lane
+    k_new: jax.Array,         # [B, Tq, KV, hd]
+    v_new: jax.Array,
+    start_pos: jax.Array,     # [B] cache position of k_new[:, 0] (may be <0
+                              #     for left-padded prompts)
+    lengths: jax.Array,       # [B] number of valid trailing tokens is
+                              #     enforced via pos in [0, lengths)
+    active: jax.Array,        # [B] bool — lane participates
+) -> PagedKVCache:
+    """Scatter one layer's new K/V into the slots' pages.
+
+    Unified for prefill (Tq = padded prompt len, left-aligned via start_pos)
+    and decode (Tq = 1, start_pos = current seq_len). Does NOT update
+    seq_lens — the engine owns that transition (once per step, not per layer).
+    """
+    B, Tq, KV, hd = k_new.shape
+    ps = cache.page_size
+    pos = start_pos[:, None] + jnp.arange(Tq)[None, :]    # [B, Tq]
+    blk = jnp.clip(pos // ps, 0, cache.max_blocks - 1)
+    off = pos % ps
+    pages = cache.block_table[slot_ids]                   # [B, max_blocks]
+    page_of = jnp.take_along_axis(pages, blk, axis=1)     # [B, Tq]
+    valid = (pos >= 0) & (pos < lengths[:, None]) & active[:, None] \
+        & (page_of >= 0) & (pos // ps < cache.max_blocks)
+    page_idx = jnp.where(valid, page_of, cache.k_pages.shape[1])  # OOB -> drop
+    l_idx = jnp.broadcast_to(layer, (B, Tq))
+    extra = {}
+    if cache.quantized:
+        k_new, k_sc = _quantize(k_new)
+        v_new, v_sc = _quantize(v_new)
+        extra["k_scale"] = cache.k_scale.at[l_idx, page_idx, off].set(
+            k_sc.astype(cache.k_scale.dtype), mode="drop")
+        extra["v_scale"] = cache.v_scale.at[l_idx, page_idx, off].set(
+            v_sc.astype(cache.v_scale.dtype), mode="drop")
+    k_pages = cache.k_pages.at[l_idx, page_idx, off].set(
+        k_new.astype(cache.k_pages.dtype), mode="drop")
+    v_pages = cache.v_pages.at[l_idx, page_idx, off].set(
+        v_new.astype(cache.v_pages.dtype), mode="drop")
+    return dataclasses.replace(cache, k_pages=k_pages, v_pages=v_pages,
+                               **extra)
+
+
+def _quantize(x: jax.Array):
+    """[..., hd] -> (int8 values, per-[...] scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+            ).astype(dtype)
+
+
+def set_seq_lens(cache: PagedKVCache, slot_ids: jax.Array, new_lens: jax.Array,
+                 active: jax.Array) -> PagedKVCache:
+    cur = cache.seq_lens[slot_ids]
+    seq_lens = cache.seq_lens.at[slot_ids].set(
+        jnp.where(active, new_lens, cur), mode="drop")
+    return dataclasses.replace(cache, seq_lens=seq_lens)
+
+
+def gather_kv_window(cache: PagedKVCache, layer: jax.Array,
+                     slot_ids: jax.Array, pos: jax.Array, window: int):
+    """Gather only the blocks covering [pos-window, pos] (§Perf hillclimb:
+    REPRO_WINDOW_GATHER). For sliding-window archs the decode step only
+    needs the last ``window`` tokens; gathering the full 500k-token block
+    table reads ~128x more HBM than the live window.
+
+    Returns (k [B, W*ps, KV, hd], v, kv_pos [B, W*ps] absolute positions).
+    """
+    ps = cache.page_size
+    W = window // ps + 2                       # static block count
+    first_blk = jnp.maximum(pos - window, 0) // ps          # [B]
+    blk = first_blk[:, None] + jnp.arange(W)[None, :]       # [B, W]
+    blk_c = jnp.clip(blk, 0, cache.max_blocks - 1)
+    pages = jnp.take_along_axis(cache.block_table[slot_ids], blk_c, axis=1)
+    safe = jnp.clip(pages, 0, cache.k_pages.shape[1] - 1)
+    k = cache.k_pages[layer][safe]             # [B, W, ps, KV, hd]
+    v = cache.v_pages[layer][safe]
+    if cache.quantized:
+        k = _dequant(k, cache.k_scale[layer][safe])
+        v = _dequant(v, cache.v_scale[layer][safe])
+    B_, W_, ps_, KV, hd = k.shape
+    kv_pos = (blk_c * ps)[:, :, None] + jnp.arange(ps)[None, None, :]
+    # positions beyond the table or unassigned pages are masked by callers
+    # via kv_pos > pos; mark invalid pages with pos = huge
+    bad = (pages < 0)[:, :, None]
+    kv_pos = jnp.where(bad, jnp.int32(2**30), kv_pos)
+    return (k.reshape(B_, W_ * ps_, KV, hd), v.reshape(B_, W_ * ps_, KV, hd),
+            kv_pos.reshape(B_, W_ * ps_))
+
+
+def gather_kv(cache: PagedKVCache, layer: jax.Array, slot_ids: jax.Array):
+    """Materialise [B, max_kv, KV, hd] K/V for one layer (jnp reference path;
+    the Pallas `paged_attention` kernel fuses this gather)."""
+    pages = cache.block_table[slot_ids]                   # [B, max_blocks]
+    safe = jnp.clip(pages, 0, cache.k_pages.shape[1] - 1)
+    k = cache.k_pages[layer][safe]                        # [B, mb, ps, KV, hd]
+    v = cache.v_pages[layer][safe]
+    if cache.quantized:
+        k = _dequant(k, cache.k_scale[layer][safe])
+        v = _dequant(v, cache.v_scale[layer][safe])
+    B, mb, ps, KV, hd = k.shape
+    return k.reshape(B, mb * ps, KV, hd), v.reshape(B, mb * ps, KV, hd)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator (free-list as device arrays — managed inside the window
+# program, no host involvement; paper §4.2 "KV-cache management")
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PageAllocator:
+    """LIFO free list. free_stack holds page ids; top = next free index."""
+    free_stack: jax.Array    # [P] int32
+    top: jax.Array           # [] int32 — number of free pages
+
+
+def make_page_allocator(num_pages: int) -> PageAllocator:
+    return PageAllocator(
+        free_stack=jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
+        top=jnp.asarray(num_pages, jnp.int32),
+    )
+
+
+def alloc_pages(alloc: PageAllocator, n: jax.Array, max_n: int):
+    """Pop up to ``max_n`` pages; only the first ``n`` are meaningful.
+
+    Returns (pages [max_n] int32 (-1 beyond n), new_alloc, ok bool).
+    Allocation is all-or-nothing: if fewer than n pages are free, ok=False
+    and the allocator is unchanged (backpressure — the request stays
+    PREFILL_PENDING in the ring, the paper's admission gating).
+    """
+    ok = alloc.top >= n
+    idx = alloc.top - 1 - jnp.arange(max_n)
+    take = (jnp.arange(max_n) < n) & ok
+    pages = jnp.where(take, alloc.free_stack[jnp.clip(idx, 0, None)], -1)
+    new_top = jnp.where(ok, alloc.top - n, alloc.top)
+    return pages, dataclasses.replace(alloc, top=new_top), ok
+
+
+def free_pages(alloc: PageAllocator, pages: jax.Array):
+    """Push back the valid (>=0) entries of ``pages`` [max_n]."""
+    valid = pages >= 0
+    n = jnp.sum(valid.astype(jnp.int32))
+    # compact valid pages to the front
+    order = jnp.argsort(~valid, stable=True)
+    compacted = pages[order]
+    idx = alloc.top + jnp.arange(pages.shape[0])
+    write = jnp.arange(pages.shape[0]) < n
+    stack = alloc.free_stack.at[jnp.where(write, idx, alloc.free_stack.shape[0])].set(
+        compacted, mode="drop")
+    return dataclasses.replace(alloc, free_stack=stack, top=alloc.top + n)
+
+
+# ---------------------------------------------------------------------------
+# SSM / hybrid / enc-dec cache bundles
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg: ModelConfig, *, num_slots: int, num_pages: int,
+               page_size: int, max_blocks: int, enc_len: int = 0,
+               dtype=None) -> Dict[str, Any]:
+    """Family-appropriate cache bundle, keyed by component."""
+    from repro.models import ssm as ssm_mod  # local import to avoid cycle
+
+    cache: Dict[str, Any] = {}
+    if cfg.uses_paged_kv:
+        cache["kv"] = make_paged_kv_cache(
+            cfg, num_slots=num_slots, num_pages=num_pages,
+            page_size=page_size, max_blocks=max_blocks, dtype=dtype)
+    if cfg.arch_type == "ssm":  # rwkv6
+        st = ssm_mod.rwkv6_init_state(cfg, num_slots)
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), st)
+    if cfg.arch_type == "hybrid":  # zamba2: mamba2 state every layer
+        st = ssm_mod.mamba2_init_state(cfg, num_slots)
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), st)
+    if cfg.is_encoder_decoder and enc_len:
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache["enc_k"] = jnp.zeros(
+            (cfg.num_layers, num_slots, enc_len, kv, hd), dtype or cfg.jnp_dtype)
+        cache["enc_v"] = jnp.zeros_like(cache["enc_k"])
+        cache["enc_len"] = jnp.zeros((num_slots,), jnp.int32)
+    return cache

@@ -1,0 +1,257 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+Per the brief, the modality frontend (mel-spectrogram + conv feature
+extractor) is a STUB: the encoder consumes precomputed frame embeddings
+[B, S_enc, D]. The decoder is a standard autoregressive transformer with
+cross-attention; its self-attention KV is paged (Blink cache), while the
+cross-attention K/V are computed once at prefill and stored densely per slot.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cache as cache_lib
+from repro.models.layers import (
+    apply_rope, attn_out, embed, gqa_attend, mlp, norm, qkv_project, unembed,
+)
+from repro.models.transformer import layer_scan
+
+
+def _leaf(shape, init="normal", dtype=None):
+    return {"shape": tuple(int(s) for s in shape), "init": init, "dtype": dtype}
+
+
+def encdec_template(cfg: ModelConfig) -> Dict[str, Any]:
+    from repro.models.transformer import _attn_leaves, _mlp_leaves
+    D = cfg.d_model
+    Le, Ld = cfg.num_encoder_layers, cfg.num_layers
+    enc = {
+        "ln1": _leaf((Le, D), "zeros"), "ln2": _leaf((Le, D), "zeros"),
+        **_attn_leaves(cfg, Le), **_mlp_leaves(cfg, Le),
+    }
+    dec = {
+        "ln1": _leaf((Ld, D), "zeros"), "ln2": _leaf((Ld, D), "zeros"),
+        "ln3": _leaf((Ld, D), "zeros"),
+        **_attn_leaves(cfg, Ld), **_mlp_leaves(cfg, Ld),
+    }
+    cross = {k + "_x": v for k, v in _attn_leaves(cfg, Ld).items()}
+    dec.update(cross)
+    return {"enc_blocks": enc, "blocks": dec}
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array,
+           frame_mask: jax.Array) -> jax.Array:
+    """frames: [B, S_enc, D] stub embeddings -> encoder memory [B, S_enc, D]."""
+    B, S, D = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, bp):
+        hh = norm(cfg, h, bp["ln1"])
+        q, k, v = qkv_project(bp, cfg, hh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        att = gqa_attend(q, k, v, q_positions=positions, k_positions=positions,
+                         causal=False, kv_mask=frame_mask)
+        h = h + attn_out(bp, att)
+        h2 = norm(cfg, h, bp["ln2"])
+        return h + mlp(bp, cfg, h2), None
+
+    h, _ = layer_scan(body, frames.astype(cfg.jnp_dtype), params["enc_blocks"])
+    return h
+
+
+def _cross_kv(params: dict, cfg: ModelConfig, memory: jax.Array):
+    """Precompute per-decoder-layer cross K/V from encoder memory.
+
+    Returns (k, v) stacked [Ld, B, S_enc, KV, hd]."""
+    B, S, D = memory.shape
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def body(_, bp):
+        k = jnp.einsum("bsd,dh->bsh", memory, bp["wk_x"]).reshape(B, S, kvh, hd)
+        v = jnp.einsum("bsd,dh->bsh", memory, bp["wv_x"]).reshape(B, S, kvh, hd)
+        if cfg.qkv_bias:
+            k = k + bp["bk_x"].reshape(kvh, hd)
+            v = v + bp["bv_x"].reshape(kvh, hd)
+        return None, (k, v)
+
+    _, (ks, vs) = layer_scan(body, None, params["blocks"])
+    return ks, vs
+
+
+def _decoder_block(cfg, bp, x, positions, kv_mask, self_attend_fn,
+                   mem_k, mem_v, mem_mask):
+    """x: [B, T, D]. self_attend_fn(h) -> (attended heads, ...)."""
+    h = norm(cfg, x, bp["ln1"])
+    att = self_attend_fn(bp, h)
+    x = x + attn_out(bp, att)
+    # cross attention
+    h2 = norm(cfg, x, bp["ln2"])
+    B, T, _ = h2.shape
+    H, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("btd,dh->bth", h2, bp["wq_x"]).reshape(B, T, H, hd)
+    if cfg.qkv_bias:
+        q = q + bp["bq_x"].reshape(H, hd)
+    S = mem_k.shape[1]
+    att_x = gqa_attend(
+        q, mem_k, mem_v,
+        q_positions=jnp.zeros((B, T), jnp.int32),
+        k_positions=jnp.zeros((B, S), jnp.int32),
+        causal=False, kv_mask=mem_mask)
+    x = x + jnp.einsum("bth,hd->btd", att_x.reshape(B, T, H * hd), bp["wo_x"])
+    h3 = norm(cfg, x, bp["ln3"])
+    return x + mlp(bp, cfg, h3)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            lengths: jax.Array, cache: Dict[str, Any], slot_ids: jax.Array,
+            active: jax.Array, frames: Optional[jax.Array] = None,
+            frame_mask: Optional[jax.Array] = None):
+    """Encode frames, prefill the decoder prompt (left-padded), fill caches."""
+    B, T = tokens.shape
+    if frames is None:  # smoke-test path: derive stub frames from tokens
+        S_enc = cache["enc_k"].shape[2]
+        frames = jnp.zeros((B, S_enc, cfg.d_model), cfg.jnp_dtype)
+        frame_mask = jnp.ones((B, S_enc), bool)
+    memory = encode(params, cfg, frames, frame_mask)
+    mem_k, mem_v = _cross_kv(params, cfg, memory)       # [Ld,B,S,KV,hd]
+
+    offset = T - lengths
+    pos_in_seq = jnp.arange(T)[None, :] - offset[:, None]
+    kv_mask = pos_in_seq >= 0
+    positions = jnp.maximum(pos_in_seq, 0)
+    x = embed(params, cfg, tokens)
+    x = jnp.where(kv_mask[..., None], x, 0)
+
+    def self_attend(bp, h):
+        q, k, v = qkv_project(bp, cfg, h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        att = gqa_attend(q, k, v, q_positions=positions, k_positions=positions,
+                         causal=True, kv_mask=kv_mask)
+        return att, (k, v)
+
+    def body(h, xs):
+        bp, mk, mv = xs
+        att_and_kv = {}
+
+        def fn(bp, hh):
+            att, kv = self_attend(bp, hh)
+            att_and_kv["kv"] = kv
+            return att
+
+        h = _decoder_block(cfg, bp, h, positions, kv_mask, fn, mk, mv,
+                           frame_mask)
+        return h, att_and_kv["kv"]
+
+    h, kvs = layer_scan(body, x, (params["blocks"], mem_k, mem_v))
+    h = norm(cfg, h, params.get("final_norm"))
+    last_logits = unembed(params, cfg, h[:, -1:, :])[:, 0]
+
+    # store decoder self-attn KV into pages
+    from repro.models.transformer import _scatter_prompt_kv
+    cache = _scatter_prompt_kv(cfg, cache, kvs, slot_ids, active, offset,
+                               lengths)
+    cache["kv"] = cache_lib.set_seq_lens(cache["kv"], slot_ids, lengths, active)
+    # store cross K/V + encoder memory per slot
+    S_enc = mem_k.shape[2]
+    sel = jnp.where(active, slot_ids, cache["enc_k"].shape[1])
+    enc_k = jnp.swapaxes(cache["enc_k"], 0, 1).at[sel].set(
+        jnp.swapaxes(mem_k, 0, 1).astype(cache["enc_k"].dtype), mode="drop")
+    enc_v = jnp.swapaxes(cache["enc_v"], 0, 1).at[sel].set(
+        jnp.swapaxes(mem_v, 0, 1).astype(cache["enc_v"].dtype), mode="drop")
+    cache = dict(cache)
+    cache["enc_k"] = jnp.swapaxes(enc_k, 0, 1)
+    cache["enc_v"] = jnp.swapaxes(enc_v, 0, 1)
+    cache["enc_len"] = cache["enc_len"].at[sel].set(
+        jnp.sum(frame_mask, axis=1).astype(jnp.int32), mode="drop")
+    return last_logits, cache
+
+
+def decode(params: dict, cfg: ModelConfig, tokens: jax.Array,
+           cache: Dict[str, Any], slot_ids: jax.Array, active: jax.Array):
+    """One decoder step with paged self-attn + dense cross-attn."""
+    from repro.models.transformer import _decode_attn_layer
+    B = tokens.shape[0]
+    kvc = cache["kv"]
+    pos = kvc.seq_lens[slot_ids]
+    x = embed(params, cfg, tokens[:, None])             # [B,1,D]
+    enc_k = jnp.swapaxes(cache["enc_k"], 0, 1)[slot_ids]  # [B,Ld,S,KV,hd]
+    enc_v = jnp.swapaxes(cache["enc_v"], 0, 1)[slot_ids]
+    enc_len = cache["enc_len"][slot_ids]
+    S_enc = enc_k.shape[2]
+    mem_mask = jnp.arange(S_enc)[None, :] < enc_len[:, None]
+
+    def body(carry, xs):
+        x, kvc = carry
+        bp, layer, mk, mv = xs
+
+        def self_fn(bp, h):
+            att, kvc2 = _decode_attn_layer(
+                cfg, bp, h, kvc, layer, slot_ids, active, pos, jnp.int32(0))
+            self_fn.kvc = kvc2
+            return att
+
+        self_fn.kvc = kvc
+        x = _decoder_block(cfg, bp, x, None, None, self_fn, mk, mv, mem_mask)
+        return (x, self_fn.kvc), None
+
+    mem_k_l = jnp.swapaxes(enc_k, 0, 1)                 # [Ld,B,S,KV,hd]
+    mem_v_l = jnp.swapaxes(enc_v, 0, 1)
+    (x, kvc), _ = layer_scan(
+        body, (x, kvc),
+        (params["blocks"], jnp.arange(cfg.num_layers), mem_k_l, mem_v_l))
+    kvc = cache_lib.set_seq_lens(kvc, slot_ids, pos + 1, active)
+    cache = dict(cache)
+    cache["kv"] = kvc
+    x = norm(cfg, x, params.get("final_norm"))
+    logits = unembed(params, cfg, x)[:, 0]
+    return logits, cache
+
+
+def train_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               *, remat: bool = True, aux_weight: float = 0.0):
+    """Seq2seq LM loss. batch: frames [B,Se,D] (or zeros), frame_mask,
+    tokens [B,Td], labels [B,Td], mask [B,Td]."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    frames = batch.get("modal_embeds")
+    if frames is None:
+        frames = jnp.zeros((B, T, cfg.d_model), cfg.jnp_dtype)
+    frame_mask = batch.get("frame_mask",
+                           jnp.ones(frames.shape[:2], bool))
+    memory = encode(params, cfg, frames, frame_mask)
+    mem_k, mem_v = _cross_kv(params, cfg, memory)
+
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    kv_mask = batch.get("mask", jnp.ones((B, T), bool)).astype(bool)
+    x = embed(params, cfg, tokens)
+
+    def self_attend(bp, h):
+        q, k, v = qkv_project(bp, cfg, h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        return gqa_attend(q, k, v, q_positions=positions,
+                          k_positions=positions, causal=True, kv_mask=kv_mask)
+
+    def body(h, xs):
+        bp, mk, mv = xs
+        h = _decoder_block(cfg, bp, h, positions, kv_mask, self_attend,
+                           mk, mv, frame_mask)
+        return h, None
+
+    fn = jax.checkpoint(body) if remat else body
+    h, _ = layer_scan(fn, x, (params["blocks"], mem_k, mem_v))
+    h = norm(cfg, h, params.get("final_norm"))
+    logits = unembed(params, cfg, h)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = kv_mask.astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"nll": loss, "aux": jnp.float32(0)}

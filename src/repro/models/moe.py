@@ -1,0 +1,163 @@
+"""Mixture-of-Experts layer (sort-based dispatch, shape-static).
+
+Implements top-k routing with a fixed per-expert capacity and a sort-based
+dispatch/combine, the standard TPU-friendly formulation: tokens are sorted by
+assigned expert, gathered into an ``[E, C, D]`` buffer, transformed by a
+batched expert FFN einsum, and scattered back weighted by the router
+probability. Compute scales with *active* parameters (top-k), matching the
+paper's observation that MoE decode steps are cheap relative to orchestration
+cost.
+
+Two sharding modes (see DESIGN.md §6):
+  * baseline (paper-faithful distribution): experts tensor-parallel over the
+    ``model`` axis (each expert FFN hidden dim sharded);
+  * expert-parallel (beyond-paper hillclimb): experts split across ``model``
+    with shard_map all_to_all dispatch (the TPU analogue of DeepEP/IBGDA).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def router_topk(router_logits: jax.Array, top_k: int):
+    """[N, E] -> (weights [N, k], experts [N, k]) with renormalised softmax."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, experts
+
+
+def expert_capacity(num_tokens: int, num_experts: int, top_k: int, factor: float) -> int:
+    cap = int(num_tokens * top_k / num_experts * factor)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: [B, T, D] -> [B, T, D].
+
+    p keys: router [D,E], w_gate/w_up [E,D,Fe], w_down [E,Fe,D],
+    optionally ws_gate/ws_up [D,Fs], ws_down [Fs,D], shared_gate [D]
+    (qwen2-moe shared experts).
+
+    REPRO_MOE_LOCAL_DISPATCH=<dp axes, comma-sep> (§Perf hillclimb): wrap
+    the dispatch in a partial-auto shard_map so the argsort-based routing is
+    LOCAL to each data shard. Without it, pjit partitions the global sort
+    over the token axis into a distributed sort — a collective storm (the
+    dominant roofline term for MoE training). Expert weights stay on the
+    auto (model) axis, so TP inside the expert FFN is untouched. This is the
+    TPU analogue of per-device dispatch in DeepEP-style MoE systems.
+    """
+    if os.environ.get("REPRO_MOE_SEQ_DISPATCH") == "1":
+        # Per-sequence dispatch: vmap the sort-based dispatch over the batch
+        # row axis. Every op stays batch-sharded, so pjit never partitions a
+        # global sort — the dispatch becomes collective-free by construction
+        # (same effect as shard-local dispatch, without shard_map; capacity
+        # is per sequence instead of per shard).
+        inner = lambda xrow: _moe_ffn_impl(p, cfg, xrow[None])[0]
+        return jax.vmap(inner)(x)
+    dp_env = os.environ.get("REPRO_MOE_LOCAL_DISPATCH")
+    if dp_env:
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(dp_env.split(","))
+        dp_spec = dp if len(dp) > 1 else dp[0]
+        inner = lambda xl, pl: _moe_ffn_impl(pl, cfg, xl)
+        return jax.shard_map(
+            inner,
+            in_specs=(P(dp_spec, None, None), P()),
+            out_specs=P(dp_spec, None, None),
+            axis_names=set(dp),
+            check_vma=False)(x, p)
+    return _moe_ffn_impl(p, cfg, x)
+
+
+def _moe_ffn_impl(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, T, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    N = B * T
+    xf = x.reshape(N, D)
+
+    router_logits = jnp.einsum("nd,de->ne", xf, p["router"])
+    weights, experts = router_topk(router_logits, k)           # [N,k]
+
+    C = expert_capacity(N, E, k, cfg.capacity_factor)
+
+    # Flatten (token, choice) pairs and sort by expert id.
+    flat_expert = experts.reshape(N * k)                        # [Nk]
+    flat_weight = weights.reshape(N * k)
+    flat_token = jnp.repeat(jnp.arange(N), k)
+
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[sort_idx]
+    sorted_token = flat_token[sort_idx]
+    sorted_weight = flat_weight[sort_idx]
+
+    # Rank within each expert's contiguous run: i - first index of the run.
+    first_idx = jnp.full((E,), N * k, dtype=jnp.int32)
+    idxs = jnp.arange(N * k, dtype=jnp.int32)
+    first_idx = first_idx.at[sorted_expert].min(idxs)
+    rank = idxs - first_idx[sorted_expert]                      # [Nk]
+    keep = rank < C
+
+    # Gather tokens into [E, C, D]; dropped tokens write to a trash row.
+    slot = jnp.where(keep, sorted_expert * C + rank, E * C)     # [Nk]
+    buf = jnp.zeros((E * C + 1, D), dtype=x.dtype)
+    buf = buf.at[slot].set(xf[sorted_token], mode="drop")
+    buf = buf[: E * C].reshape(E, C, D)
+
+    # Batched expert FFN.
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    gate = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", gate * up, p["w_down"]).reshape(E * C, D)
+
+    if os.environ.get("REPRO_MOE_GATHER_COMBINE") == "1":
+        # §Perf hillclimb (P2 iter 3): combine via inverse-permutation GATHER
+        # instead of scatter-add. pjit lowers the token-indexed scatter-add
+        # to replicate+all-reduce of the full [N, D] f32 buffer (the single
+        # largest collective in the whole roofline table); a gather keyed by
+        # token-major indices keeps the output token-sharded.
+        inv = jnp.argsort(sort_idx)                     # flat (n,j) -> sorted
+        pos = inv.reshape(N, k)
+        slot_nk = slot[pos]                             # [N, k]
+        keep_nk = keep[pos]
+        vals = out_buf[jnp.clip(slot_nk, 0, E * C - 1)]  # [N, k, D]
+        out = jnp.sum(
+            jnp.where(keep_nk[..., None], vals.astype(jnp.float32), 0.0)
+            * weights[..., None], axis=1).astype(x.dtype)
+    else:
+        # Combine: scatter back with router weights (paper-faithful baseline
+        # formulation).
+        gathered = jnp.where(
+            keep[:, None], out_buf[jnp.clip(slot, 0, E * C - 1)], 0.0
+        ) * sorted_weight[:, None].astype(x.dtype)
+        out = jnp.zeros((N, D), dtype=jnp.float32).at[sorted_token].add(
+            gathered.astype(jnp.float32)
+        )
+        out = out.astype(x.dtype)
+
+    # Shared experts (qwen2-moe): always-on FFN with a sigmoid gate.
+    if cfg.shared_expert_d_ff:
+        sg = act(jnp.einsum("nd,df->nf", xf, p["ws_gate"]))
+        su = jnp.einsum("nd,df->nf", xf, p["ws_up"])
+        shared = jnp.einsum("nf,fd->nd", sg * su, p["ws_down"])
+        gate_s = jax.nn.sigmoid(jnp.einsum("nd,d->n", xf.astype(jnp.float32),
+                                           p["shared_gate"].astype(jnp.float32)))
+        out = out + shared * gate_s[:, None].astype(x.dtype)
+
+    return out.reshape(B, T, D)
+
+
+def load_balance_loss(router_logits: jax.Array, top_k: int, num_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum(frac_tokens_e * mean_prob_e)."""
+    N = router_logits.shape[0]
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    _, experts = jax.lax.top_k(probs, top_k)
+    counts = jnp.zeros(num_experts, jnp.float32).at[experts.reshape(-1)].add(1.0)
+    frac = counts / (N * top_k)
+    mean_prob = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(frac * mean_prob)

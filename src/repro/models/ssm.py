@@ -1,0 +1,379 @@
+"""State-space / linear-recurrence layers: RWKV-6 (Finch) and Mamba-2.
+
+Both are expressed as a *single-step* cell plus a sequence scan built from
+it, so the Blink engine's decode step (one token against persistent state)
+and prefill (scan over the prompt) share the exact same cell — the property
+the paper exploits: decode state lives entirely on-device and survives
+window re-instantiation.
+
+RWKV-6 [arXiv:2404.05892]: data-dependent per-channel decay
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (per head, S: [hd_k, hd_v])
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Mamba-2 (SSD) [used by Zamba2, arXiv:2411.15242]: scalar-per-head decay
+    h_t = exp(A dt_t) h_{t-1} + dt_t * (B_t ⊗ x_t)   (h: [hd, N])
+    y_t = C_t · h_t + D x_t
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+
+def rwkv_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.ssm_head_dim
+    return cfg.d_model // hd, hd
+
+
+def rwkv6_projections(p: dict, cfg: ModelConfig, x: jax.Array, x_prev: jax.Array):
+    """Token-shift mixing + projections for one (batch of) timestep(s).
+
+    x, x_prev: [B, D]. Returns r,k,v,g,w each [B, H, hd].
+    """
+    H, hd = rwkv_heads(cfg)
+    B = x.shape[0]
+
+    def mix(mu):
+        return x + (x_prev - x) * mu
+
+    xr, xk, xv, xg, xw = (mix(p[f"mu_{n}"]) for n in "rkvgw")
+    r = jnp.einsum("bd,de->be", xr, p["wr"]).reshape(B, H, hd)
+    k = jnp.einsum("bd,de->be", xk, p["wk"]).reshape(B, H, hd)
+    v = jnp.einsum("bd,de->be", xv, p["wv"]).reshape(B, H, hd)
+    g = jax.nn.silu(jnp.einsum("bd,de->be", xg, p["wg"])).reshape(B, H, hd)
+    # data-dependent decay via low-rank bottleneck (Finch)
+    wlo = jnp.tanh(jnp.einsum("bd,dr->br", xw, p["w_lora_a"]))
+    w = p["w_decay"] + jnp.einsum("br,rd->bd", wlo, p["w_lora_b"]).reshape(B, H, hd)
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32)))   # in (0, 1)
+    return r, k, v, g, w
+
+
+def rwkv6_cell(p: dict, cfg: ModelConfig, x: jax.Array, x_prev: jax.Array,
+               state: jax.Array):
+    """One timestep of RWKV-6 time-mix.
+
+    x: [B, D]; state: [B, H, hd, hd] (f32). Returns (out [B, D], new_state).
+    """
+    H, hd = rwkv_heads(cfg)
+    B = x.shape[0]
+    r, k, v, g, w = rwkv6_projections(p, cfg, x, x_prev)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u_bonus"].astype(jnp.float32)                       # [H, hd]
+
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)                   # outer product
+    out = jnp.einsum("bhk,bhkv->bhv", rf, state + u[None, :, :, None] * kv)
+    new_state = state * w[..., None] + kv
+    # per-head group norm (no affine), as in the reference RWKV-6 impl
+    out = rms_norm(out, None) * g.astype(jnp.float32)
+    out = jnp.einsum("be,ed->bd", out.reshape(B, H * hd), p["wo"].astype(jnp.float32))
+    return out.astype(x.dtype), new_state
+
+
+def rwkv6_channel_mix(p: dict, cfg: ModelConfig, x: jax.Array, x_prev: jax.Array):
+    """RWKV channel-mix (FFN with token shift). x: [B, D]."""
+    xk = x + (x_prev - x) * p["cm_mu_k"]
+    xr = x + (x_prev - x) * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk, p["cm_wk"])))
+    kv = jnp.einsum("bf,fd->bd", k, p["cm_wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, p["cm_wr"]))
+    return r * kv
+
+
+def rwkv6_layer_step(p: dict, cfg: ModelConfig, x: jax.Array, layer_state: dict):
+    """Single-token step through one RWKV layer. x: [B, D]."""
+    h = rms_norm(x, p["ln1"])
+    att, new_wkv = rwkv6_cell(p, cfg, h, layer_state["shift_att"], layer_state["wkv"])
+    x = x + att
+    h2 = rms_norm(x, p["ln2"])
+    ffn = rwkv6_channel_mix(p, cfg, h2, layer_state["shift_ffn"])
+    x = x + ffn
+    new_state = {"wkv": new_wkv, "shift_att": h, "shift_ffn": h2}
+    return x, new_state
+
+
+def rwkv6_layer_seq(p: dict, cfg: ModelConfig, xs: jax.Array, layer_state: dict):
+    """Scan a full sequence [B, T, D] through one RWKV layer."""
+    def step(state, x_t):
+        y, new_state = rwkv6_layer_step(p, cfg, x_t, state)
+        return new_state, y
+
+    xs_t = jnp.swapaxes(xs, 0, 1)                  # [T, B, D]
+    final_state, ys = jax.lax.scan(step, layer_state, xs_t)
+    return jnp.swapaxes(ys, 0, 1), final_state
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int):
+    H, hd = rwkv_heads(cfg)
+    return {
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift_att": jnp.zeros((batch, cfg.d_model), cfg.jnp_dtype),
+        "shift_ffn": jnp.zeros((batch, cfg.d_model), cfg.jnp_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = cfg.d_inner
+    H = di // cfg.ssm_head_dim
+    return di, H, cfg.ssm_state
+
+
+def mamba2_project(p: dict, cfg: ModelConfig, x: jax.Array):
+    """x: [..., D] -> (z, xin, B_in, C_in, dt). Separate projections (rather
+    than one packed in_proj) so each output dim shards cleanly on the model
+    axis (z/x: d_inner, dt: heads; B/C are small and replicated)."""
+    z = jnp.einsum("...d,de->...e", x, p["z_proj"])
+    xin = jnp.einsum("...d,de->...e", x, p["x_proj"])
+    B_in = jnp.einsum("...d,dn->...n", x, p["b_proj"])
+    C_in = jnp.einsum("...d,dn->...n", x, p["c_proj"])
+    dt = jnp.einsum("...d,dh->...h", x, p["dt_proj"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xin, B_in, C_in, dt
+
+
+def mamba2_cell(p: dict, cfg: ModelConfig, xin: jax.Array, B_in: jax.Array,
+                C_in: jax.Array, dt: jax.Array, h: jax.Array):
+    """SSD recurrence for one timestep.
+
+    xin: [B, di] (post-conv), B_in/C_in: [B, N], dt: [B, H],
+    h: [B, H, hd, N] (f32). Returns (y [B, di], h').
+    """
+    di, H, N = mamba2_dims(cfg)
+    Bsz = xin.shape[0]
+    xh = xin.reshape(Bsz, H, cfg.ssm_head_dim).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [H], negative
+    decay = jnp.exp(A[None, :] * dt)                           # [B, H]
+    dBx = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, B_in.astype(jnp.float32))
+    h = h * decay[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h, C_in.astype(jnp.float32))
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, :, None]
+    return y.reshape(Bsz, di), h
+
+
+def mamba2_layer_step(p: dict, cfg: ModelConfig, x: jax.Array, layer_state: dict):
+    """Single-token Mamba-2 block step. x: [B, D]."""
+    di, H, N = mamba2_dims(cfg)
+    h = rms_norm(x, p["ln"])
+    z, xin, B_in, C_in, dt = mamba2_project(p, cfg, h)
+
+    # depthwise causal conv over the last ssm_conv inputs
+    conv_state = layer_state["conv"]                           # [B, K, di]
+    conv_state = jnp.concatenate([conv_state[:, 1:], xin[:, None]], axis=1)
+    xin = jnp.einsum("bkd,kd->bd", conv_state, p["conv_w"]) + p["conv_b"]
+    xin = jax.nn.silu(xin)
+
+    y, new_h = mamba2_cell(p, cfg, xin, B_in, C_in, dt, layer_state["ssm"])
+    y = rms_norm(y.astype(x.dtype), p["out_ln"]) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return x + out, {"conv": conv_state, "ssm": new_h}
+
+
+def mamba2_layer_seq(p: dict, cfg: ModelConfig, xs: jax.Array, layer_state: dict):
+    def step(state, x_t):
+        y, new_state = mamba2_layer_step(p, cfg, x_t, state)
+        return new_state, y
+
+    xs_t = jnp.swapaxes(xs, 0, 1)
+    final_state, ys = jax.lax.scan(step, layer_state, xs_t)
+    return jnp.swapaxes(ys, 0, 1), final_state
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    di, H, N = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv, di), cfg.jnp_dtype),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked (parallel) sequence forms — used for train/prefill. The step cells
+# above are the oracles; tests assert chunked == scanned. The Pallas
+# ``ssm_scan`` kernel implements the Mamba-2 chunk body.
+# ---------------------------------------------------------------------------
+
+
+def _ssd_chunk_scan(A: jax.Array, xh_c, B_c, C_c, dt_c, h0):
+    """Core chunked SSD scan. A: [H] (negative). Inputs chunked as
+    [nc, B, Q, ...]. Returns (y [nc, B, Q, H, P], h_final)."""
+
+    def chunk_step(h, inputs):
+        xq, Bq, Cq, dtq = inputs
+        Bsz, Q, H, P = xq.shape
+        a = A[None, None, :] * dtq                      # [B,Q,H] <= 0
+        cum = jnp.cumsum(a, axis=1)                     # inclusive
+        # intra-chunk: scores[t,s] = (C_t . B_s) exp(cum_t - cum_s) dt_s, s<=t
+        cb = jnp.einsum("btn,bsn->bts", Cq, Bq)         # [B,Q,Q]
+        delta = cum[:, :, None, :] - cum[:, None, :, :]  # [B,Q,Q,H] t,s
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(delta), 0.0)
+        scores = cb[..., None] * decay * dtq[:, None, :, :]   # [B,Q,Q,H]
+        y = jnp.einsum("btsh,bshp->bthp", scores, xq)
+        # inter-chunk: contribution of h (state entering the chunk)
+        y = y + jnp.einsum("btn,bhpn,bth->bthp", Cq, h, jnp.exp(cum))
+        # state update
+        carry_decay = jnp.exp(cum[:, -1:, :] - cum)     # [B,Q,H]
+        dBx = jnp.einsum("bth,bthp,btn->bhpn", dtq * carry_decay, xq, Bq)
+        h = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + dBx
+        return h, y
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xh_c, B_c, C_c, dt_c))
+    return ys, h_final
+
+
+def mamba2_layer_seq_chunked(p: dict, cfg: ModelConfig, xs: jax.Array,
+                             layer_state: dict, valid: jax.Array,
+                             chunk: int = 64):
+    """Full Mamba-2 block over [B, T, D] using chunked SSD.
+
+    valid: [B, T] bool; invalid positions must not affect state.
+    Returns (ys [B, T, D], final_state).
+    """
+    di, H, N = mamba2_dims(cfg)
+    Bsz, T, D = xs.shape
+    h = rms_norm(xs, p["ln"])
+    z, xin, B_in, C_in, dt = mamba2_project(p, cfg, h)
+    dt = dt * valid[..., None]                          # freeze state on pads
+
+    # causal depthwise conv along T (padded with the carried conv state)
+    K = cfg.ssm_conv
+    xin = jnp.where(valid[..., None], xin, 0.0)
+    pad = layer_state["conv"][:, -(K - 1):] if K > 1 else xin[:, :0]
+    xpad = jnp.concatenate([pad.astype(xin.dtype), xin], axis=1)   # [B, T+K-1, di]
+    idx = jnp.arange(T)[:, None] + jnp.arange(K)[None, :]          # [T, K]
+    windows = xpad[:, idx]                                         # [B, T, K, di]
+    xconv = jnp.einsum("btkd,kd->btd", windows, p["conv_w"]) + p["conv_b"]
+    xconv = jax.nn.silu(xconv)
+    new_conv = xpad[:, -K:] if T >= K else jnp.concatenate(
+        [layer_state["conv"][:, T:], xin], axis=1)
+
+    xh = xconv.reshape(Bsz, T, H, cfg.ssm_head_dim)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    Q = min(chunk, T)
+    nc = T // Q
+
+    def rc(x):
+        return x.reshape((Bsz, nc, Q) + x.shape[2:]).swapaxes(0, 1)
+
+    ys, h_final = _ssd_chunk_scan(
+        A, rc(xh.astype(jnp.float32)), rc(B_in.astype(jnp.float32)),
+        rc(C_in.astype(jnp.float32)), rc(dt), layer_state["ssm"])
+    y = ys.swapaxes(0, 1).reshape(Bsz, T, H, cfg.ssm_head_dim)
+    y = y + xh.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, T, di)
+    y = rms_norm(y.astype(xs.dtype), p["out_ln"]) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return xs + out, {"conv": new_conv.astype(layer_state["conv"].dtype),
+                      "ssm": h_final}
+
+
+def rwkv6_layer_seq_chunked(p: dict, cfg: ModelConfig, xs: jax.Array,
+                            layer_state: dict, valid: jax.Array,
+                            chunk: int = 64):
+    """Full RWKV-6 layer over [B, T, D] using the chunked linear-attention
+    form. valid: [B, T]; invalid positions are made state-neutral
+    (k=v=0, w=1)."""
+    H, hd = rwkv_heads(cfg)
+    Bsz, T, D = xs.shape
+    x_norm = rms_norm(xs, p["ln1"])
+    # token shift: x_prev[t] = x_norm[t-1], with carried boundary state
+    prev = jnp.concatenate(
+        [layer_state["shift_att"][:, None].astype(x_norm.dtype), x_norm[:, :-1]],
+        axis=1)
+
+    def mix(mu):
+        return x_norm + (prev - x_norm) * mu
+
+    xr, xk, xv, xg, xw = (mix(p[f"mu_{n}"]) for n in "rkvgw")
+    r = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(Bsz, T, H, hd)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(Bsz, T, H, hd)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(Bsz, T, H, hd)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"])).reshape(Bsz, T, H, hd)
+    wlo = jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"]))
+    w = p["w_decay"][None, None] + jnp.einsum(
+        "btr,rd->btd", wlo, p["w_lora_b"]).reshape(Bsz, T, H, hd)
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32)))
+
+    vmask = valid[..., None, None]
+    kf = jnp.where(vmask, k.astype(jnp.float32), 0.0)
+    vf = jnp.where(vmask, v.astype(jnp.float32), 0.0)
+    rf = r.astype(jnp.float32)
+    w = jnp.where(vmask, w, 1.0)
+    u = p["u_bonus"].astype(jnp.float32)                 # [H, hd]
+
+    Q = min(chunk, T)
+    nc = T // Q
+
+    def rc(x):
+        return x.reshape((Bsz, nc, Q, H, hd)).swapaxes(0, 1)
+
+    def chunk_step(S, inputs):
+        rq, kq, vq, wq = inputs                          # [B,Q,H,hd]
+        lw = jnp.log(wq)                                 # <= 0
+        cum = jnp.cumsum(lw, axis=1)                     # inclusive
+        cum_excl = cum - lw                              # exclusive (cum_{t-1})
+        # intra: scores[t,s] = sum_p r[t,p] k[s,p] exp(cum_excl[t,p]-cum[s,p]) , s<t
+        delta = cum_excl[:, :, None] - cum[:, None, :, :, :]   # [B,Q,Q,H,hd] t,s
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        decay = jnp.where(mask[None, :, :, None, None], jnp.exp(delta), 0.0)
+        scores = jnp.einsum("bthp,bshp,btshp->btsh", rq, kq, decay)
+        y = jnp.einsum("btsh,bshp->bthp", scores, vq)
+        # diagonal bonus term: u * (r_t . k_t) v_t
+        diag = jnp.einsum("bthp,hp,bthp->bth", rq, u, kq)
+        y = y + diag[..., None] * vq
+        # inter: r_t . (exp(cum_excl) * S)
+        y = y + jnp.einsum("bthk,bhkv->bthv", rq * jnp.exp(cum_excl), S)
+        # state update: S' = exp(cum_last) S + sum_s exp(cum_last - cum_s) k_s v_s
+        carry = jnp.exp(cum[:, -1:] - cum)               # [B,Q,H,hd]
+        S = S * jnp.exp(cum[:, -1])[..., None] + jnp.einsum(
+            "bshk,bshv->bhkv", kq * carry, vq)
+        return S, y
+
+    S_final, ys = jax.lax.scan(
+        chunk_step, layer_state["wkv"], (rc(rf), rc(kf), rc(vf), rc(w)))
+    y = ys.swapaxes(0, 1).reshape(Bsz, T, H, hd)
+    y = rms_norm(y, None) * g.astype(jnp.float32)
+    att = jnp.einsum("bte,ed->btd", y.reshape(Bsz, T, H * hd),
+                     p["wo"].astype(jnp.float32)).astype(xs.dtype)
+    x = xs + att
+
+    # channel mix with token shift
+    h2 = rms_norm(x, p["ln2"])
+    prev2 = jnp.concatenate(
+        [layer_state["shift_ffn"][:, None].astype(h2.dtype), h2[:, :-1]], axis=1)
+    xk2 = h2 + (prev2 - h2) * p["cm_mu_k"]
+    xr2 = h2 + (prev2 - h2) * p["cm_mu_r"]
+    k2 = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk2, p["cm_wk"])))
+    kv2 = jnp.einsum("btf,fd->btd", k2, p["cm_wv"])
+    r2 = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr2, p["cm_wr"]))
+    x = x + r2 * kv2
+
+    # boundary shift states = last *valid* normed activations (works for
+    # left- and right-padded sequences)
+    rev_valid = valid[:, ::-1]
+    last_idx = T - 1 - jnp.argmax(rev_valid, axis=1)
+    any_valid = jnp.any(valid, axis=1)
+    new_state = {
+        "wkv": S_final,
+        "shift_att": jnp.where(any_valid[:, None],
+                               x_norm[jnp.arange(Bsz), last_idx],
+                               layer_state["shift_att"]),
+        "shift_ffn": jnp.where(any_valid[:, None],
+                               h2[jnp.arange(Bsz), last_idx],
+                               layer_state["shift_ffn"]),
+    }
+    return x, new_state

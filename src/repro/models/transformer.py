@@ -1,0 +1,649 @@
+"""Decoder-only model family: dense / MoE / VLM / SSM (RWKV-6) / hybrid (Zamba2).
+
+Design rules:
+  * per-layer params are stacked on a leading [L] axis and consumed through
+    ``jax.lax.scan`` — compact HLO even for 64-layer configs;
+  * three entry points per family: ``train_loss`` (full causal),
+    ``prefill`` (left-padded prompt -> cache + first logits), ``decode``
+    (one token against the persistent cache). Prefill and decode are pure
+    functions over an explicit cache pytree so the Blink engine can run them
+    inside its persistent window program;
+  * prompts are LEFT-padded so every lane's last token sits at index T-1 —
+    this makes SSM state handoff exact and last-logit extraction uniform.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import cache as cache_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_rope, attn_out, embed, gqa_attend, mlp, norm, qkv_project, unembed,
+)
+
+def layer_scan(f, init, xs, length=None):
+    """jax.lax.scan that fully unrolls when REPRO_SCAN_UNROLL=1.
+
+    XLA's cost_analysis counts while-loop bodies ONCE (trip counts are not
+    folded in); the dry-run sets this env var so the roofline FLOP/byte
+    terms are exact. Runtime paths keep the rolled loop (compact HLO)."""
+    unroll = os.environ.get("REPRO_SCAN_UNROLL") == "1"
+    return jax.lax.scan(f, init, xs, length=length, unroll=True if unroll
+                        else 1)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+_INIT = {
+    "normal": lambda key, shape, dt, fan: (
+        jax.random.normal(key, shape, jnp.float32) / np.sqrt(max(fan, 1))
+    ).astype(dt),
+    "zeros": lambda key, shape, dt, fan: jnp.zeros(shape, dt),
+    "half": lambda key, shape, dt, fan: jnp.full(shape, 0.5, dt),
+    "decay": lambda key, shape, dt, fan: jnp.full(shape, -0.6, dt),
+    "alog": lambda key, shape, dt, fan: jnp.zeros(shape, dt),
+    "ones": lambda key, shape, dt, fan: jnp.ones(shape, dt),
+}
+
+
+def _leaf(shape, init="normal", dtype=None):
+    return {"shape": tuple(int(s) for s in shape), "init": init, "dtype": dtype}
+
+
+def _attn_leaves(cfg: ModelConfig, L: int, prefix_dims=()) -> Dict[str, Any]:
+    D, H, KV, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    lead = (L,) if L else ()
+    out = {
+        "wq": _leaf(lead + (D, H * hd)),
+        "wk": _leaf(lead + (D, KV * hd)),
+        "wv": _leaf(lead + (D, KV * hd)),
+        "wo": _leaf(lead + (H * hd, D)),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = _leaf(lead + (H * hd,), "zeros")
+        out["bk"] = _leaf(lead + (KV * hd,), "zeros")
+        out["bv"] = _leaf(lead + (KV * hd,), "zeros")
+    return out
+
+
+def _mlp_leaves(cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    lead = (L,) if L else ()
+    return {
+        "w_gate": _leaf(lead + (D, F)),
+        "w_up": _leaf(lead + (D, F)),
+        "w_down": _leaf(lead + (F, D)),
+    }
+
+
+def _moe_leaves(cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    D, E, Fe = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    lead = (L,) if L else ()
+    out = {
+        "router": _leaf(lead + (D, E)),
+        "w_gate": _leaf(lead + (E, D, Fe)),
+        "w_up": _leaf(lead + (E, D, Fe)),
+        "w_down": _leaf(lead + (Fe, D) if False else lead + (E, Fe, D)),
+    }
+    if cfg.shared_expert_d_ff:
+        Fs = cfg.shared_expert_d_ff
+        out.update({
+            "ws_gate": _leaf(lead + (D, Fs)),
+            "ws_up": _leaf(lead + (D, Fs)),
+            "ws_down": _leaf(lead + (Fs, D)),
+            "shared_gate": _leaf(lead + (D,), "zeros"),
+        })
+    return out
+
+
+def _rwkv_leaves(cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = ssm_lib.rwkv_heads(cfg)
+    R = 64  # decay LoRA rank
+    lead = (L,)
+    return {
+        "ln1": _leaf(lead + (D,), "zeros"),
+        "ln2": _leaf(lead + (D,), "zeros"),
+        **{f"mu_{n}": _leaf(lead + (D,), "half") for n in "rkvgw"},
+        "wr": _leaf(lead + (D, D)),
+        "wk": _leaf(lead + (D, D)),
+        "wv": _leaf(lead + (D, D)),
+        "wg": _leaf(lead + (D, D)),
+        "wo": _leaf(lead + (D, D)),
+        "w_lora_a": _leaf(lead + (D, R)),
+        "w_lora_b": _leaf(lead + (R, D)),
+        "w_decay": _leaf(lead + (H, hd), "decay"),
+        "u_bonus": _leaf(lead + (H, hd), "zeros"),
+        "cm_mu_k": _leaf(lead + (D,), "half"),
+        "cm_mu_r": _leaf(lead + (D,), "half"),
+        "cm_wk": _leaf(lead + (D, F)),
+        "cm_wv": _leaf(lead + (F, D)),
+        "cm_wr": _leaf(lead + (D, D)),
+    }
+
+
+def _mamba_leaves(cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    D = cfg.d_model
+    di, H, N = ssm_lib.mamba2_dims(cfg)
+    lead = (L,)
+    return {
+        "ln": _leaf(lead + (D,), "zeros"),
+        "z_proj": _leaf(lead + (D, di)),
+        "x_proj": _leaf(lead + (D, di)),
+        "b_proj": _leaf(lead + (D, N)),
+        "c_proj": _leaf(lead + (D, N)),
+        "dt_proj": _leaf(lead + (D, H)),
+        "conv_w": _leaf(lead + (cfg.ssm_conv, di)),
+        "conv_b": _leaf(lead + (di,), "zeros"),
+        "A_log": _leaf(lead + (H,), "alog"),
+        "D_skip": _leaf(lead + (H,), "ones"),
+        "dt_bias": _leaf(lead + (H,), "zeros"),
+        "out_ln": _leaf(lead + (di,), "zeros"),
+        "out_proj": _leaf(lead + (di, D)),
+    }
+
+
+def _dense_block_leaves(cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    out = {}
+    if cfg.norm_type != "nonparametric_ln":
+        out["ln1"] = _leaf((L, cfg.d_model), "zeros")
+        out["ln2"] = _leaf((L, cfg.d_model), "zeros")
+    out.update(_attn_leaves(cfg, L))
+    if cfg.num_experts:
+        out.update(_moe_leaves(cfg, L))
+    else:
+        out.update(_mlp_leaves(cfg, L))
+    return out
+
+
+def param_template(cfg: ModelConfig) -> Dict[str, Any]:
+    """Nested dict of leaf descriptors for the whole model."""
+    V, D, L = cfg.vocab_size, cfg.d_model, cfg.num_layers
+    t: Dict[str, Any] = {"embed": _leaf((V, D))}
+    if not cfg.tie_embeddings:
+        t["unembed"] = _leaf((D, V))
+    if cfg.norm_type != "nonparametric_ln":
+        t["final_norm"] = _leaf((D,), "zeros")
+
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec
+        t.update(encdec.encdec_template(cfg))
+        return t
+
+    if cfg.arch_type == "ssm":
+        t["blocks"] = _rwkv_leaves(cfg, L)
+    elif cfg.arch_type == "hybrid":
+        t["blocks"] = _mamba_leaves(cfg, L)
+        shared = {}
+        if cfg.norm_type != "nonparametric_ln":
+            shared["ln1"] = _leaf((D,), "zeros")
+            shared["ln2"] = _leaf((D,), "zeros")
+        shared.update(_attn_leaves(cfg, 0))
+        shared.update(_mlp_leaves(cfg, 0))
+        t["shared_attn"] = shared
+    else:  # dense / moe / vlm
+        t["blocks"] = _dense_block_leaves(cfg, L)
+    return t
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    dt = cfg.jnp_dtype
+    return jax.tree.map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf["shape"], leaf["dtype"] or dt),
+        param_template(cfg),
+        is_leaf=lambda x: isinstance(x, dict) and "shape" in x,
+    )
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    template = param_template(cfg)
+    leaves, treedef = jax.tree.flatten(
+        template, is_leaf=lambda x: isinstance(x, dict) and "shape" in x)
+    keys = jax.random.split(key, len(leaves))
+    dt = cfg.jnp_dtype
+    out = []
+    for k, leaf in zip(keys, leaves):
+        shape = leaf["shape"]
+        fan = shape[-2] if len(shape) >= 2 else shape[-1]
+        out.append(_INIT[leaf["init"]](k, shape, leaf["dtype"] or dt, fan))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    specs = jax.tree.leaves(param_specs(cfg))
+    return int(sum(np.prod(s.shape) for s in specs))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE counts top-k + shared experts only)."""
+    total = count_params(cfg)
+    if not cfg.num_experts:
+        return total
+    expert_leaf = 2 * cfg.d_model * cfg.moe_d_ff + cfg.moe_d_ff * cfg.d_model
+    inactive = cfg.num_layers * (cfg.num_experts - cfg.top_k) * expert_leaf
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Per-layer window pattern (gemma2 local/global; mixtral SWA)
+# ---------------------------------------------------------------------------
+
+
+def window_array(cfg: ModelConfig) -> np.ndarray:
+    """[L] int32, 0 = full attention, else sliding-window width."""
+    L = cfg.num_attn_layers
+    ws = np.zeros(L, np.int32)
+    for i in range(L):
+        w = cfg.layer_window(i)
+        ws[i] = 0 if w is None else w
+    return ws
+
+
+# ---------------------------------------------------------------------------
+# Dense/MoE/VLM block (training & prefill form: full self-attention)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(cfg: ModelConfig, bp: dict, x: jax.Array,
+                 positions: jax.Array, window: jax.Array,
+                 kv_mask: jax.Array):
+    """One transformer block over [B, T, D]. Returns (x, router_aux, (k, v))."""
+    h = norm(cfg, x, bp.get("ln1"))
+    q, k, v = qkv_project(bp, cfg, h)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # window: runtime scalar; 0 means full. Encode as huge width.
+    eff_window = jnp.where(window > 0, window, jnp.int32(2**30))
+    att = gqa_attend(q, k, v, q_positions=positions, k_positions=positions,
+                     causal=True, window=eff_window, kv_mask=kv_mask,
+                     softcap=cfg.attn_softcap)
+    x = x + attn_out(bp, att)
+    h2 = norm(cfg, x, bp.get("ln2"))
+    aux = jnp.float32(0)
+    if cfg.num_experts:
+        y = moe_lib.moe_ffn(bp, cfg, h2)
+        B, T, _ = h2.shape
+        rl = jnp.einsum("btd,de->bte", h2, bp["router"]).reshape(B * T, -1)
+        aux = moe_lib.load_balance_loss(rl, cfg.top_k, cfg.num_experts)
+    else:
+        y = mlp(bp, cfg, h2)
+    return x + y, aux, (k, v)
+
+
+def forward_hidden(params: dict, cfg: ModelConfig, x: jax.Array,
+                   positions: jax.Array, kv_mask: jax.Array,
+                   *, remat: bool = False):
+    """Run the full stack over embeddings [B, T, D] (train/prefill path).
+
+    Returns (hidden [B, T, D], aux_loss, per_layer_kv or None).
+
+    per_layer_kv is (k, v) stacked [L, B, T, KV, hd] — collected during
+    prefill so the engine can scatter them into KV pages; pass-through of
+    the scan's ys.
+    """
+    if cfg.arch_type == "ssm":
+        return _rwkv_forward(params, cfg, x, kv_mask, remat=remat)
+    if cfg.arch_type == "hybrid":
+        return _hybrid_forward(params, cfg, x, positions, kv_mask, remat=remat)
+
+    windows = jnp.asarray(window_array(cfg))
+
+    def body_collect(carry, xs):
+        h, aux = carry
+        bp, window = xs
+        h, a, kv = _dense_block(cfg, bp, h, positions, window, kv_mask)
+        return (h, aux + a), kv
+
+    fn = jax.checkpoint(body_collect) if remat else body_collect
+    (h, aux), kvs = layer_scan(fn, (x, jnp.float32(0)),
+                               (params["blocks"], windows))
+    return h, aux, kvs
+
+
+def _rwkv_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                  kv_mask: jax.Array, *, remat: bool = False,
+                  init_states: Optional[dict] = None):
+    """RWKV stack over [B, T, D]. Returns (hidden, 0.0, final_states)."""
+    B, T, _ = x.shape
+    if init_states is None:
+        st = ssm_lib.rwkv6_init_state(cfg, B)
+        init_states = jax.tree.map(
+            lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), st)
+
+    def body(h, xs):
+        bp, st = xs
+        h, new_st = ssm_lib.rwkv6_layer_seq_chunked(bp, cfg, h, st, kv_mask)
+        return h, new_st
+
+    fn = jax.checkpoint(body) if remat else body
+    h, final_states = layer_scan(fn, x, (params["blocks"], init_states))
+    return h, jnp.float32(0), final_states
+
+
+def _hybrid_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, kv_mask: jax.Array,
+                    *, remat: bool = False, init_states: Optional[dict] = None):
+    """Zamba2-style stack: Mamba2 every layer, shared attention block every
+    ``attn_every`` layers. Returns (hidden, 0.0, (ssm_states, attn_kvs)).
+
+    attn_kvs: (k, v) stacked [L_attn, B, T, KV, hd] for the shared-attn
+    invocations (for KV-cache scatter during prefill)."""
+    B, T, _ = x.shape
+    if init_states is None:
+        st = ssm_lib.mamba2_init_state(cfg, B)
+        init_states = jax.tree.map(
+            lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), st)
+    sp = params["shared_attn"]
+    every = cfg.attn_every
+
+    def body(h, xs):
+        bp, st, layer_idx = xs
+        is_attn = (layer_idx % every) == 0
+
+        def with_attn(h):
+            hh = norm(cfg, h, sp.get("ln1"))
+            q, k, v = qkv_project(sp, cfg, hh)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            att = gqa_attend(q, k, v, q_positions=positions,
+                             k_positions=positions, causal=True,
+                             kv_mask=kv_mask)
+            h = h + attn_out(sp, att)
+            h2 = norm(cfg, h, sp.get("ln2"))
+            return h + mlp(sp, cfg, h2), (k, v)
+
+        def no_attn(h):
+            kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            zeros = jnp.zeros((B, T, kv, hd), h.dtype)
+            return h, (zeros, zeros)
+
+        h, (k, v) = jax.lax.cond(is_attn, with_attn, no_attn, h)
+        h, new_st = ssm_lib.mamba2_layer_seq_chunked(bp, cfg, h, st, kv_mask)
+        return h, (new_st, (k, v), is_attn)
+
+    fn = jax.checkpoint(body) if remat else body
+    layer_idx = jnp.arange(cfg.num_layers)
+    h, (final_states, kvs, attn_flags) = layer_scan(
+        body if not remat else fn, x, (params["blocks"], init_states, layer_idx))
+    return h, jnp.float32(0), (final_states, kvs, attn_flags)
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               *, remat: bool = True, aux_weight: float = 0.01):
+    """batch: tokens [B,T], labels [B,T], mask [B,T] (+ modal_embeds)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = embed(params, cfg, tokens)
+    if cfg.num_modal_tokens and "modal_embeds" in batch:
+        M = cfg.num_modal_tokens
+        x = jnp.concatenate(
+            [batch["modal_embeds"].astype(x.dtype), x[:, M:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    kv_mask = batch.get("mask", jnp.ones((B, T), bool)).astype(bool)
+    h, aux, _ = forward_hidden(params, cfg, x, positions, kv_mask, remat=remat)
+    h = norm(cfg, h, params.get("final_norm"))
+    logits = unembed(params, cfg, h)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = kv_mask.astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            lengths: jax.Array, cache: Dict[str, Any], slot_ids: jax.Array,
+            active: jax.Array, modal_embeds: Optional[jax.Array] = None):
+    """Process left-padded prompts [B, T]; fill the cache; return last logits.
+
+    tokens must be LEFT-padded (lane b's prompt occupies [T-len_b, T)).
+    Returns (logits [B, V] at the last prompt token, cache').
+    """
+    B, T = tokens.shape
+    offset = T - lengths                                    # [B]
+    pos_in_seq = jnp.arange(T)[None, :] - offset[:, None]   # [-off .. len)
+    kv_mask = pos_in_seq >= 0
+    x = embed(params, cfg, tokens)
+    if cfg.num_modal_tokens and modal_embeds is not None:
+        # modal prefix occupies the first num_modal_tokens *valid* positions;
+        # with left padding those are columns [offset, offset+M). For the
+        # dry-run stub we scatter at those columns.
+        M = modal_embeds.shape[1]
+        col = offset[:, None] + jnp.arange(M)[None, :]
+        bidx = jnp.arange(B)[:, None].repeat(M, 1)
+        x = x.at[bidx, jnp.clip(col, 0, T - 1)].set(
+            modal_embeds.astype(x.dtype))
+    x = jnp.where(kv_mask[..., None], x, 0)
+    positions = jnp.maximum(pos_in_seq, 0)
+
+    h, _aux, extras = forward_hidden(params, cfg, x, positions, kv_mask)
+    h = norm(cfg, h, params.get("final_norm"))
+    last_logits = unembed(params, cfg, h[:, -1:, :])[:, 0]
+
+    # scatter cache state
+    if cfg.arch_type == "ssm":
+        final_states = extras
+        cache = _store_ssm_states(cache, final_states, slot_ids, active)
+    elif cfg.arch_type == "hybrid":
+        final_states, kvs, attn_flags = extras
+        cache = _store_ssm_states(cache, final_states, slot_ids, active)
+        cache = _scatter_prompt_kv(
+            cfg, cache, kvs, slot_ids, active, offset, lengths,
+            layer_select=attn_flags)
+    else:
+        kvs = extras
+        cache = _scatter_prompt_kv(cfg, cache, kvs, slot_ids, active,
+                                   offset, lengths)
+    if cfg.uses_paged_kv:
+        cache["kv"] = cache_lib.set_seq_lens(
+            cache["kv"], slot_ids, lengths, active)
+    return last_logits, cache
+
+
+def _store_ssm_states(cache, final_states, slot_ids, active):
+    """final_states leaves: [L, B, ...] -> scatter into cache['ssm'] [L, S, ...]."""
+    def scatter(buf, new):
+        # buf: [L, S, ...], new: [L, B, ...]
+        moved = jnp.swapaxes(new, 0, 1)         # [B, L, ...]
+        bufm = jnp.swapaxes(buf, 0, 1)          # [S, L, ...]
+        sel = jnp.where(active[:, None], slot_ids[:, None],
+                        bufm.shape[0])           # OOB drop for inactive
+        bufm = bufm.at[sel[:, 0]].set(moved.astype(bufm.dtype), mode="drop")
+        return jnp.swapaxes(bufm, 0, 1)
+
+    cache = dict(cache)
+    cache["ssm"] = jax.tree.map(scatter, cache["ssm"], final_states)
+    return cache
+
+
+def _scatter_prompt_kv(cfg, cache, kvs, slot_ids, active, offset, lengths,
+                       layer_select=None):
+    """kvs: (k, v) each [L, B, T, KV, hd] (L = num_layers). For hybrid,
+    layer_select [L] bool marks shared-attn layers; only those map to the
+    L_attn cache rows."""
+    k_all, v_all = kvs
+    kvc = cache["kv"]
+    if layer_select is not None:
+        # compress selected layers into the first L_attn rows
+        idx = jnp.cumsum(layer_select.astype(jnp.int32)) - 1   # [L]
+        L_attn = kvc.k_pages.shape[0]
+        sel_rows = jnp.where(layer_select, idx, L_attn)        # OOB -> drop
+        k_sel = jnp.zeros((L_attn + 1,) + k_all.shape[1:], k_all.dtype)
+        k_sel = k_sel.at[sel_rows].set(k_all)[:L_attn]
+        v_sel = jnp.zeros((L_attn + 1,) + v_all.shape[1:], v_all.dtype)
+        v_sel = v_sel.at[sel_rows].set(v_all)[:L_attn]
+        k_all, v_all = k_sel, v_sel
+
+    L = k_all.shape[0]
+
+    def body(kvc, xs):
+        layer, k_l, v_l = xs
+        kvc = cache_lib.write_kv_layer(
+            kvc, layer, slot_ids, k_l, v_l,
+            start_pos=-offset, lengths=lengths, active=active)
+        return kvc, None
+
+    kvc, _ = layer_scan(body, kvc, (jnp.arange(L), k_all, v_all))
+    cache = dict(cache)
+    cache["kv"] = kvc
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, persistent cache)
+# ---------------------------------------------------------------------------
+
+
+def decode(params: dict, cfg: ModelConfig, tokens: jax.Array,
+           cache: Dict[str, Any], slot_ids: jax.Array, active: jax.Array):
+    """One decode step. tokens: [B] int32. Returns (logits [B, V], cache')."""
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec
+        return encdec.decode(params, cfg, tokens, cache, slot_ids, active)
+    if cfg.arch_type == "ssm":
+        return _decode_rwkv(params, cfg, tokens, cache, slot_ids, active)
+    if cfg.arch_type == "hybrid":
+        return _decode_hybrid(params, cfg, tokens, cache, slot_ids, active)
+    return _decode_dense(params, cfg, tokens, cache, slot_ids, active)
+
+
+def _decode_attn_layer(cfg, bp, x, kvc, layer, slot_ids, active, pos, window):
+    """Shared attention-decode: write token KV, attend over pages.
+
+    x: [B, 1, D]. Returns (attn output [B, 1, D] pre-wo, updated kvc).
+
+    REPRO_WINDOW_GATHER=1 (§Perf hillclimb): for sliding-window configs,
+    gather only the blocks covering the live window instead of the whole
+    block table. For gemma2 long-context this also restricts the *global*
+    layers to a streaming window (documented beyond-paper deviation)."""
+    B = x.shape[0]
+    q, k, v = qkv_project(bp, cfg, x)                  # [B,1,H,hd]/[B,1,KV,hd]
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    kvc = cache_lib.write_kv_layer(
+        kvc, layer, slot_ids, k, v, start_pos=pos, lengths=pos + 1,
+        active=active)
+    windowed = (os.environ.get("REPRO_WINDOW_GATHER") == "1"
+                and cfg.sliding_window is not None)
+    if windowed:
+        k_all, v_all, kv_pos = cache_lib.gather_kv_window(
+            kvc, layer, slot_ids, pos, cfg.sliding_window)
+    else:
+        k_all, v_all = cache_lib.gather_kv(kvc, layer, slot_ids)
+        kv_pos = jnp.broadcast_to(jnp.arange(kvc.max_kv)[None, :],
+                                  (B, kvc.max_kv))
+    kv_valid = kv_pos <= pos[:, None]
+    eff_window = jnp.where(window > 0, window,
+                           jnp.int32(cfg.sliding_window) if windowed
+                           else jnp.int32(2**30))
+    att = gqa_attend(q, k_all, v_all, q_positions=pos[:, None],
+                     k_positions=kv_pos, causal=True, window=eff_window,
+                     kv_mask=kv_valid, softcap=cfg.attn_softcap)
+    return att, kvc
+
+
+def _decode_dense(params, cfg, tokens, cache, slot_ids, active):
+    B = tokens.shape[0]
+    kvc = cache["kv"]
+    pos = kvc.seq_lens[slot_ids]                      # new token's position
+    x = embed(params, cfg, tokens[:, None])           # [B, 1, D]
+    windows = jnp.asarray(window_array(cfg))
+
+    def body(carry, xs):
+        x, kvc = carry
+        bp, layer, window = xs
+        h = norm(cfg, x, bp.get("ln1"))
+        att, kvc = _decode_attn_layer(cfg, bp, h, kvc, layer, slot_ids,
+                                      active, pos, window)
+        x = x + attn_out(bp, att)
+        h2 = norm(cfg, x, bp.get("ln2"))
+        y = moe_lib.moe_ffn(bp, cfg, h2) if cfg.num_experts else mlp(bp, cfg, h2)
+        return (x + y, kvc), None
+
+    (x, kvc), _ = layer_scan(
+        body, (x, kvc),
+        (params["blocks"], jnp.arange(cfg.num_layers), windows))
+    kvc = cache_lib.set_seq_lens(kvc, slot_ids, pos + 1, active)
+    cache = dict(cache)
+    cache["kv"] = kvc
+    x = norm(cfg, x, params.get("final_norm"))
+    logits = unembed(params, cfg, x)[:, 0]
+    return logits, cache
+
+
+def _decode_rwkv(params, cfg, tokens, cache, slot_ids, active):
+    B = tokens.shape[0]
+    x = embed(params, cfg, tokens[:, None])[:, 0]     # [B, D]
+    states = jax.tree.map(lambda a: a[:, slot_ids], cache["ssm"])  # [L,B,...]
+
+    def body(x, xs):
+        bp, st = xs
+        x, new_st = ssm_lib.rwkv6_layer_step(bp, cfg, x, st)
+        return x, new_st
+
+    x, new_states = layer_scan(body, x, (params["blocks"], states))
+    cache = _store_ssm_states(cache, new_states, slot_ids, active)
+    x = norm(cfg, x[:, None], params.get("final_norm"))
+    logits = unembed(params, cfg, x)[:, 0]
+    return logits, cache
+
+
+def _decode_hybrid(params, cfg, tokens, cache, slot_ids, active):
+    B = tokens.shape[0]
+    kvc = cache["kv"]
+    pos = kvc.seq_lens[slot_ids]
+    x = embed(params, cfg, tokens[:, None])[:, 0]     # [B, D]
+    states = jax.tree.map(lambda a: a[:, slot_ids], cache["ssm"])
+    sp = params["shared_attn"]
+    every = cfg.attn_every
+
+    def body(carry, xs):
+        x, kvc = carry
+        bp, st, layer_idx = xs
+        is_attn = (layer_idx % every) == 0
+        attn_row = layer_idx // every
+
+        def with_attn(args):
+            x, kvc = args
+            h = norm(cfg, x[:, None], sp.get("ln1"))
+            att, kvc = _decode_attn_layer(
+                cfg, sp, h, kvc, attn_row, slot_ids, active, pos,
+                jnp.int32(0))
+            x = x + attn_out(sp, att)[:, 0]
+            h2 = norm(cfg, x[:, None], sp.get("ln2"))
+            return x + mlp(sp, cfg, h2)[:, 0], kvc
+
+        x, kvc = jax.lax.cond(is_attn, with_attn, lambda a: a, (x, kvc))
+        x, new_st = ssm_lib.mamba2_layer_step(bp, cfg, x, st)
+        return (x, kvc), new_st
+
+    (x, kvc), new_states = layer_scan(
+        body, (x, kvc),
+        (params["blocks"], states, jnp.arange(cfg.num_layers)))
+    kvc = cache_lib.set_seq_lens(kvc, slot_ids, pos + 1, active)
+    cache = _store_ssm_states(dict(cache, kv=kvc), new_states, slot_ids, active)
+    x = norm(cfg, x[:, None], params.get("final_norm"))
+    logits = unembed(params, cfg, x)[:, 0]
+    return logits, cache

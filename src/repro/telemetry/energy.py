@@ -1,0 +1,35 @@
+"""Energy-per-token proxy (paper §6.4).
+
+No power meter exists in this container; we model server wall power as
+  P = P_idle + P_active * duty
+with duty = fraction of wall time the device program is executing, and
+report mJ/token = P * elapsed / tokens. Constants follow the paper's
+observation that all systems draw comparable wall power (1.1-1.4 kW on an
+H100 host); the *ratio* between systems therefore tracks 1/throughput,
+which is exactly the effect §6.4 documents. Clearly a PROXY — labelled as
+such in every benchmark output.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+P_IDLE_W = 700.0
+P_ACTIVE_W = 600.0   # additional draw while the accelerator program runs
+
+
+@dataclass
+class EnergyReport:
+    elapsed_s: float
+    busy_s: float
+    tokens: int
+
+    @property
+    def watts(self) -> float:
+        duty = min(self.busy_s / max(self.elapsed_s, 1e-9), 1.0)
+        return P_IDLE_W + P_ACTIVE_W * duty
+
+    @property
+    def mj_per_token(self) -> float:
+        if self.tokens == 0:
+            return float("nan")
+        return self.watts * self.elapsed_s * 1000.0 / self.tokens

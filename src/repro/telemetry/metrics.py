@@ -1,0 +1,58 @@
+"""Serving SLO metrics: TTFT / TPOT / ITL percentiles (paper §6 metrics).
+
+Two sources:
+  * wall-clock (frontend polling) — what a client observes;
+  * device step stamps (ring.token_step / submit_step) — per-step-exact,
+    converted with the measured mean step time; used for the fine-grained
+    engine comparisons (window polling granularity would otherwise floor
+    wall-clock TTFT at one window).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def percentiles(xs: Sequence[float], ps=(50, 95, 99, 99.9)) -> Dict[str, float]:
+    xs = np.asarray([x for x in xs if np.isfinite(x)], np.float64)
+    if xs.size == 0:
+        return {f"p{p}": float("nan") for p in ps} | {"mean": float("nan")}
+    out = {f"p{p}": float(np.percentile(xs, p)) for p in ps}
+    out["mean"] = float(xs.mean())
+    return out
+
+
+@dataclass
+class StepMetrics:
+    """Metrics derived from device step stamps."""
+    ttft_steps: List[int]
+    tpot_steps: List[float]
+    itl_steps: List[int]
+
+    def to_seconds(self, step_time_s: float) -> dict:
+        return {
+            "ttft": percentiles([t * step_time_s for t in self.ttft_steps]),
+            "tpot": percentiles([t * step_time_s for t in self.tpot_steps]),
+            "itl": percentiles([t * step_time_s for t in self.itl_steps]),
+        }
+
+
+def from_ring(ring, completed_slots: Sequence[int]) -> StepMetrics:
+    """Extract step-based metrics for the given slots from a RingState."""
+    token_step = np.asarray(ring.token_step)
+    submit = np.asarray(ring.submit_step)
+    gen = np.asarray(ring.generated)
+    ttft, tpot, itl = [], [], []
+    for s in completed_slots:
+        n = int(gen[s])
+        if n == 0:
+            continue
+        steps = token_step[s, :n]
+        ttft.append(int(steps[0] - submit[s]))
+        if n > 1:
+            gaps = np.diff(steps)
+            itl.extend(int(g) for g in gaps)
+            tpot.append(float((steps[-1] - steps[0]) / (n - 1)))
+    return StepMetrics(ttft, tpot, itl)

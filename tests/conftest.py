@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device (the 512-device override belongs to dryrun.py only)."""
+import jax
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import TINY_ARCHS
+from repro.models.api import make_model
+
+
+@pytest.fixture(scope="session")
+def tiny_apis():
+    """ModelApi + params per tiny arch, built lazily and cached."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            api = make_model(TINY_ARCHS[name])
+            params = api.init_params(jax.random.PRNGKey(0))
+            cache[name] = (api, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.fixture
+def small_serve():
+    return ServeConfig(num_slots=8, max_prompt_len=16, max_new_tokens=8,
+                       decode_batch=4, window=12, admit_per_step=2,
+                       page_size=4, num_pages=64, eos_token=-1)

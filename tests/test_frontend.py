@@ -1,0 +1,87 @@
+"""Frontend (DPU plane) units + full BlinkServer integration."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import TINY_ARCHS
+from repro.core import ring_buffer as rb
+from repro.frontend.server import BlinkServer
+from repro.frontend.slot_tracker import SlotTracker
+from repro.frontend.token_reader import TokenReader
+from repro.frontend.tokenizer import BPETokenizer
+from repro.models.api import make_model
+
+
+def test_slot_tracker_hint_scan_is_circular():
+    t = SlotTracker(4)
+    assert [t.acquire() for _ in range(4)] == [0, 1, 2, 3]
+    assert t.acquire() is None
+    t.mark_free(2)
+    assert t.acquire() == 2
+    t.refresh(np.asarray([rb.EMPTY, rb.DECODE_PROCESSING, rb.EMPTY,
+                          rb.EMPTY]))
+    got = {t.acquire() for _ in range(3)}
+    assert got == {0, 2, 3}
+
+
+def test_token_reader_detects_new_tokens_and_completion():
+    reader = TokenReader(4)
+    reader.mark_urgent(1)
+    states = np.asarray([rb.EMPTY, rb.DECODE_PROCESSING, rb.EMPTY, rb.EMPTY])
+    gen = np.asarray([0, 2, 0, 0])
+    arena = np.full((4, 8), -1)
+    arena[1, :2] = [42, 43]
+    new, done = reader.poll(states, gen, arena)
+    assert new == {1: [42, 43]}
+    assert done == []
+    states[1] = rb.DECODE_COMPLETED
+    gen[1] = 3
+    arena[1, 2] = 44
+    new, done = reader.poll(states, gen, arena)
+    assert new == {1: [44]}
+    assert done == [1]         # drained + COMPLETED -> completes this cycle
+
+
+def test_blink_server_end_to_end_text():
+    corpus = ["persistent kernels schedule decode steps",
+              "the quick brown fox"] * 4
+    tok = BPETokenizer.train(corpus, num_merges=100)
+    cfg = TINY_ARCHS["olmo-1b"].replace(vocab_size=max(512, tok.vocab_size))
+    api = make_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    serve = ServeConfig(num_slots=8, max_prompt_len=16, max_new_tokens=5,
+                        decode_batch=4, window=10, admit_per_step=2,
+                        page_size=4, num_pages=64, eos_token=-1)
+    srv = BlinkServer(api, serve, params, tokenizer=tok)
+    ids = [srv.submit(p, max_new=4) for p in
+           ["the quick fox", "decode steps", "kernels schedule"]]
+    srv.run_until_idle(max_windows=20)
+    assert len(srv.frontend.done) == 3
+    for rid in ids:
+        req = srv.frontend.done[rid]
+        assert len(req.output) == 4
+        assert req.text is not None
+    m = srv.request_metrics()
+    assert len(m) == 3
+    assert all(x["tokens"] == 4 for x in m)
+    # ring slots fully recycled
+    st = np.asarray(srv.state.ring.slot_state)
+    assert (st == rb.EMPTY).all()
+
+
+def test_blink_server_slot_reuse_beyond_capacity():
+    """More requests than slots: the frontend queues and recycles slots."""
+    cfg = TINY_ARCHS["qwen2-1.5b"]
+    api = make_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    serve = ServeConfig(num_slots=2, max_prompt_len=8, max_new_tokens=4,
+                        decode_batch=2, window=8, admit_per_step=2,
+                        page_size=4, num_pages=16, eos_token=-1)
+    srv = BlinkServer(api, serve, params)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        srv.submit(rng.integers(3, 100, 5).tolist(), max_new=3)
+    srv.run_until_idle(max_windows=40)
+    assert len(srv.frontend.done) == 5
+    assert all(len(r.output) == 3 for r in srv.frontend.done.values())

@@ -1,0 +1,121 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert allclose against the
+pure-jnp oracles in repro.kernels.ref (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,KV,G,hd,P,ps,mb", [
+    (2, 2, 4, 32, 16, 8, 4),
+    (1, 1, 8, 64, 8, 16, 2),
+    (4, 4, 1, 16, 32, 4, 6),
+])
+def test_paged_attention_shapes(B, KV, G, hd, P, ps, mb, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(keys[0], (B, KV, G, hd), dtype)
+    kp = jax.random.normal(keys[1], (P, ps, KV, hd), dtype)
+    vp = jax.random.normal(keys[2], (P, ps, KV, hd), dtype)
+    bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+    kv_lens = jnp.asarray(
+        np.random.default_rng(0).integers(1, mb * ps + 1, B), jnp.int32)
+    out = ops.paged_attention(q, kp, vp, bt, kv_lens)
+    expect = ref.paged_attention_ref(q, kp, vp, bt, kv_lens)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (5, 0.0), (0, 20.0),
+                                            (9, 20.0)])
+def test_paged_attention_window_softcap(window, softcap):
+    B, KV, G, hd, P, ps, mb = 3, 2, 2, 32, 16, 8, 4
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(keys[0], (B, KV, G, hd), jnp.float32)
+    kp = jax.random.normal(keys[1], (P, ps, KV, hd), jnp.float32)
+    vp = jax.random.normal(keys[2], (P, ps, KV, hd), jnp.float32)
+    bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+    kv_lens = jnp.array([3, 15, 32])
+    out = ops.paged_attention(q, kp, vp, bt, kv_lens, window=window,
+                              softcap=softcap)
+    expect = ref.paged_attention_ref(q, kp, vp, bt, kv_lens, window=window,
+                                     softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_paged_attention_ignores_unassigned_pages():
+    """-1 entries in the block table beyond kv_len must not contribute."""
+    B, KV, G, hd, P, ps = 1, 1, 2, 16, 8, 4
+    q = jnp.ones((B, KV, G, hd))
+    kp = jnp.full((P, ps, KV, hd), 1e9, jnp.float32)   # poison
+    vp = jnp.full((P, ps, KV, hd), 1e9, jnp.float32)
+    kp = kp.at[3].set(1.0)
+    vp = vp.at[3].set(2.0)
+    bt = jnp.array([[3, -1, -1]])
+    out = ops.paged_attention(q, kp, vp, bt, jnp.array([4]))
+    np.testing.assert_allclose(np.asarray(out), 2.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("S,block", [(64, 16), (128, 64), (256, 32)])
+def test_ring_scan_blocks(S, block):
+    rng = np.random.default_rng(S)
+    states = jnp.asarray(rng.integers(0, 4, S), jnp.int32)
+    arrivals = jnp.asarray(rng.permutation(S), jnp.int32)
+    got = ops.ring_scan_blocks(states, arrivals, want_state=1,
+                               block_size=block)
+    expect = ref.ring_scan_blocks_ref(states, arrivals, want_state=1,
+                                      block_size=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_ring_select_topk_fcfs_order():
+    rng = np.random.default_rng(7)
+    S = 128
+    states = jnp.asarray(rng.integers(0, 3, S), jnp.int32)
+    arrivals = jnp.asarray(rng.permutation(S), jnp.int32)
+    ids, found = ops.ring_select_topk(states, arrivals, want_state=1, k=5,
+                                      block_size=32)
+    pend = np.where(np.asarray(states) == 1)[0]
+    order = pend[np.argsort(np.asarray(arrivals)[pend])][:5]
+    expect = np.full(5, -1)
+    expect[: len(order)] = order
+    np.testing.assert_array_equal(np.asarray(ids), expect)
+    np.testing.assert_array_equal(np.asarray(found), expect >= 0)
+
+
+@pytest.mark.parametrize("Bz,T,H,Pd,N,chunk", [
+    (2, 32, 3, 16, 8, 8),
+    (1, 64, 2, 32, 16, 16),
+    (3, 16, 4, 8, 4, 16),   # chunk > T -> single chunk
+])
+def test_ssd_chunk_scan(Bz, T, H, Pd, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(Bz), 6)
+    x = jax.random.normal(ks[0], (Bz, T, H, Pd)) * 0.5
+    B_in = jax.random.normal(ks[1], (Bz, T, N)) * 0.5
+    C_in = jax.random.normal(ks[2], (Bz, T, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (Bz, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    h0 = jax.random.normal(ks[5], (Bz, H, Pd, N)) * 0.1
+    y_k, h_k = ops.ssd_chunk_scan(x, B_in, C_in, dt, A, h0, chunk=chunk)
+    y_r, h_r = ref.ssd_sequential_ref(x, B_in, C_in, dt, A, h0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-4)
+
+
+def test_ssd_kernel_matches_model_chunked_form():
+    """The Pallas kernel and the model's jnp chunked form agree."""
+    Bz, T, H, Pd, N = 2, 32, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(9), 6)
+    x = jax.random.normal(ks[0], (Bz, T, H, Pd)) * 0.5
+    B_in = jax.random.normal(ks[1], (Bz, T, N)) * 0.5
+    C_in = jax.random.normal(ks[2], (Bz, T, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (Bz, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    h0 = jnp.zeros((Bz, H, Pd, N))
+    y_k, h_k = ops.ssd_chunk_scan(x, B_in, C_in, dt, A, h0, chunk=8)
+    y_j, h_j = ref.ssd_chunk_scan_ref(x, B_in, C_in, dt, A, h0, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_j), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_j), atol=1e-4)

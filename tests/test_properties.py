@@ -1,0 +1,190 @@
+"""Property-based tests (hypothesis) on system invariants: page allocator
+hygiene, ring lifecycle protocol, tokenizer roundtrip, FCFS selection
+equivalence (engine jnp path == Pallas ring-scan kernel), sampling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ServeConfig
+from repro.core import ring_buffer as rb
+from repro.core.engine import select_pending_fcfs
+from repro.core.sampling import sample_tokens, top_p_filter
+from repro.frontend.tokenizer import BPETokenizer, NaiveBPETokenizer
+from repro.kernels import ops
+from repro.models import cache as cache_lib
+
+HSET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator: never double-allocates, never leaks
+# ---------------------------------------------------------------------------
+
+
+@HSET
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 6)),
+                min_size=1, max_size=30))
+def test_allocator_no_double_alloc_no_leak(script):
+    P, MAXN = 24, 6
+    alloc = cache_lib.make_page_allocator(P)
+    held = []          # list of np arrays of held pages
+    for is_alloc, n in script:
+        if is_alloc:
+            pages, alloc2, ok = cache_lib.alloc_pages(
+                alloc, jnp.asarray(n), MAXN)
+            if bool(ok):
+                alloc = alloc2
+                got = np.asarray(pages)
+                got = got[got >= 0]
+                assert len(got) == n
+                held.append(got)
+        elif held:
+            pages = held.pop(0)
+            row = np.full(MAXN, -1, np.int32)
+            row[: len(pages)] = pages
+            alloc = cache_lib.free_pages(alloc, jnp.asarray(row))
+        # invariant: free + held partition the pool, no duplicates
+        free_now = np.asarray(alloc.free_stack)[: int(alloc.top)]
+        held_now = np.concatenate(held) if held else np.array([], np.int64)
+        combined = np.concatenate([free_now, held_now])
+        assert len(combined) == P
+        assert len(np.unique(combined)) == P
+
+
+@HSET
+@given(st.integers(0, 24))
+def test_allocator_all_or_nothing(n):
+    alloc = cache_lib.make_page_allocator(8)
+    pages, alloc2, ok = cache_lib.alloc_pages(alloc, jnp.asarray(n), 24)
+    if n <= 8:
+        assert bool(ok)
+        assert int(alloc2.top) == 8 - n
+    else:
+        assert not bool(ok)
+        assert int(alloc2.top) == 8          # unchanged: backpressure
+
+
+# ---------------------------------------------------------------------------
+# FCFS selection: engine jnp formulation == Pallas ring-scan kernel
+# ---------------------------------------------------------------------------
+
+
+@HSET
+@given(st.integers(0, 2**31 - 2), st.integers(1, 4))
+def test_fcfs_engine_equals_kernel(seed, k):
+    rng = np.random.default_rng(seed)
+    S = 64
+    serve = ServeConfig(num_slots=S)
+    ring = rb.make_ring(serve)
+    states = rng.integers(0, 4, S).astype(np.int32)
+    arrivals = rng.permutation(S).astype(np.int32)
+    ring = dataclasses.replace(ring, slot_state=jnp.asarray(states),
+                               arrival=jnp.asarray(arrivals))
+    cand, valid = select_pending_fcfs(ring, k)
+    ids_k, found_k = ops.ring_select_topk(
+        jnp.asarray(states), jnp.asarray(arrivals),
+        want_state=rb.PREFILL_PENDING, k=k, block_size=16)
+    cand = np.asarray(cand)
+    valid = np.asarray(valid)
+    np.testing.assert_array_equal(np.where(valid, cand, -1),
+                                  np.asarray(ids_k))
+    np.testing.assert_array_equal(valid, np.asarray(found_k))
+
+
+# ---------------------------------------------------------------------------
+# Ring lifecycle protocol
+# ---------------------------------------------------------------------------
+
+
+def test_ring_submit_release_protocol():
+    serve = ServeConfig(num_slots=4, max_prompt_len=8, max_new_tokens=4)
+    ring = rb.make_ring(serve)
+    assert int(ring.slot_state[2]) == rb.EMPTY
+    ring = rb.submit_request(ring, 2, tokens=[5, 6, 7], request_id=11,
+                             max_new=4, arrival=3, step=0)
+    assert int(ring.slot_state[2]) == rb.PREFILL_PENDING
+    assert int(ring.prompt_len[2]) == 3
+    assert ring.input_arena[2, :3].tolist() == [5, 6, 7]
+    ring = rb.release_slot(ring, 2)
+    assert int(ring.slot_state[2]) == rb.EMPTY
+    assert int(ring.arrival[2]) == np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trained_tok():
+    corpus = ["the quick brown fox jumps over the lazy dog",
+              "blink serves tokens with persistent kernels",
+              "ring buffers and paged caches on device 123"] * 3
+    return BPETokenizer.train(corpus, num_merges=150)
+
+
+@HSET
+@given(st.text(min_size=0, max_size=200))
+def test_tokenizer_roundtrip(trained_tok, s):
+    assert trained_tok.decode(trained_tok.encode(s)) == s
+
+
+@HSET
+@given(st.text(min_size=1, max_size=80))
+def test_fast_equals_naive_bpe(trained_tok, s):
+    naive = NaiveBPETokenizer(list(trained_tok.merges.keys()))
+    assert trained_tok.encode(s) == naive.encode(s)
+
+
+def test_tokenizer_ids_in_vocab(trained_tok):
+    ids = trained_tok.encode("hello brown fox 123 !!!")
+    assert all(0 <= i < trained_tok.vocab_size for i in ids)
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_at_zero_temperature():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (5, 33))
+    tok = sample_tokens(key, logits, jnp.zeros(5),
+                        slot_ids=jnp.arange(5), step=jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.argmax(np.asarray(logits), -1))
+
+
+def test_sampling_is_slot_step_deterministic():
+    key = jax.random.PRNGKey(1)
+    logits = jax.random.normal(key, (4, 64))
+    t = jnp.ones(4)
+    a = sample_tokens(key, logits, t, slot_ids=jnp.arange(4),
+                      step=jnp.int32(3))
+    b = sample_tokens(key, logits, t, slot_ids=jnp.arange(4),
+                      step=jnp.int32(3))
+    c = sample_tokens(key, logits, t, slot_ids=jnp.arange(4),
+                      step=jnp.int32(4))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) != np.asarray(c)).any()
+
+
+@HSET
+@given(st.floats(0.1, 0.99))
+def test_top_p_keeps_nucleus_only(p):
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(3, 50)),
+                         jnp.float32)
+    filtered = top_p_filter(logits, jnp.full((3,), p))
+    probs = np.asarray(jax.nn.softmax(logits, -1))
+    kept = np.asarray(jnp.isfinite(filtered))
+    for b in range(3):
+        order = np.argsort(-probs[b])
+        csum = np.cumsum(probs[b][order])
+        k = int(np.searchsorted(csum, p) + 1)
+        expect = np.zeros(50, bool)
+        expect[order[:k]] = True
+        np.testing.assert_array_equal(kept[b], expect)
