@@ -1,0 +1,113 @@
+"""Decode-attention backends: gather vs pallas per-step HBM bytes + latency.
+
+The engine's per-token step reads the KV cache once per attention layer.
+The "gather" backend materialises the slot's whole provisioned page range —
+its per-step HBM traffic scales with ``max_kv`` no matter how short the
+live context is. The "pallas" paged-attention kernel streams only live
+pages (live-page early exit + sliding-window page skip) — traffic scales
+with ``live_len``. This sweep quantifies that gap across
+(live_len, max_kv) and writes JSON records that ``benchmarks/report.py``
+renders next to the roofline table.
+
+NOTE on latency: this container runs the kernel in interpret mode (Python
+emulation), so wall-clock favors the jnp gather path; the byte model is
+the performance statement, the timing is the dispatch-overhead envelope.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "decode_attn")
+
+# fixed decode geometry (per layer): lanes x kv heads x q-per-kv x head dim
+B, KV, G, HD, PS = 4, 2, 4, 64, 16
+SWEEP = [  # (live_len, max_kv)
+    (16, 256), (128, 256), (256, 256),
+    (16, 1024), (128, 1024), (1024, 1024),
+]
+
+
+def gather_bytes(max_kv: int, itemsize: int) -> int:
+    """Per-step K+V HBM reads of the gather path (whole block table)."""
+    return 2 * B * max_kv * KV * HD * itemsize
+
+
+def pallas_bytes(live_len: int, itemsize: int, window: int = 0) -> int:
+    """Per-step K+V HBM reads of the kernel: live (or windowed) pages only."""
+    span = min(live_len, window) if window else live_len
+    pages = -(-max(span, 1) // PS)
+    return 2 * B * pages * PS * KV * HD * itemsize
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    records = []
+    for live, max_kv in SWEEP:
+        mb = max_kv // PS
+        P = B * mb + 1
+        q = jax.random.normal(keys[0], (B, KV, G, HD), jnp.float32)
+        kp = jax.random.normal(keys[1], (P, PS, KV, HD), jnp.float32)
+        vp = jax.random.normal(keys[2], (P, PS, KV, HD), jnp.float32)
+        bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+        kv_lens = jnp.full((B,), live, jnp.int32)
+
+        us_p, out_p = _time(ops.paged_attention, q, kp, vp, bt, kv_lens,
+                            pages_per_block=2)
+        us_g, out_g = _time(ref.paged_attention_ref, q, kp, vp, bt, kv_lens)
+        err = float(jnp.max(jnp.abs(out_p - out_g)))
+
+        itemsize = kp.dtype.itemsize
+        gb, pb = gather_bytes(max_kv, itemsize), pallas_bytes(live, itemsize)
+        rec = {
+            "kind": "decode_attn",
+            "live_len": live, "max_kv": max_kv,
+            "batch": B, "kv_heads": KV, "q_per_kv": G, "head_dim": HD,
+            "page_size": PS,
+            "gather_bytes_per_step": gb,
+            "pallas_bytes_per_step": pb,
+            "bytes_ratio": gb / pb,
+            "gather_us": us_g, "pallas_us": us_p,
+            "max_err": err,
+        }
+        records.append(rec)
+        emit(f"decode_attn_live{live}_max{max_kv}", us_p,
+             f"gather_us={us_g:.0f};gather_MB={gb/1e6:.2f};"
+             f"pallas_MB={pb/1e6:.2f};bytes_ratio={gb/pb:.1f};"
+             f"max_err={err:.1e}")
+
+    with open(os.path.join(OUT_DIR, "sweep.json"), "w") as f:
+        json.dump(records, f, indent=1)
+
+    # invariants the sweep is meant to demonstrate
+    by_live = {}
+    for r in records:
+        by_live.setdefault(r["live_len"], []).append(r)
+    # pallas bytes depend on live_len only; gather bytes on max_kv only
+    for live, rs in by_live.items():
+        assert len({r["pallas_bytes_per_step"] for r in rs}) == 1
+    assert (gather_bytes(1024, 4) == 4 * gather_bytes(256, 4))
+
+
+if __name__ == "__main__":
+    main()

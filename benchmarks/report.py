@@ -1,5 +1,6 @@
 """Generate the EXPERIMENTS.md §Roofline table + §Perf comparison from the
-dry-run JSON records.
+dry-run JSON records, plus the decode-attention backend table from
+``benchmarks/decode_attn.py`` sweeps.
 
     PYTHONPATH=src python -m benchmarks.report [--markdown]
 """
@@ -12,6 +13,8 @@ import sys
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
+DECODE_ATTN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                               "decode_attn")
 
 
 def load_all():
@@ -20,6 +23,31 @@ def load_all():
         with open(p) as f:
             recs.append(json.load(f))
     return recs
+
+
+def load_decode_attn():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DECODE_ATTN_DIR, "*.json"))):
+        with open(p) as f:
+            loaded = json.load(f)
+        recs.extend(loaded if isinstance(loaded, list) else [loaded])
+    return [r for r in recs if r.get("kind") == "decode_attn"]
+
+
+def print_decode_attn(recs):
+    """§Decode attention backends: per-step HBM bytes, gather vs pallas."""
+    print("\n## Decode attention backends (per step, per layer)\n")
+    print("| live_len | max_kv | gather MB | pallas MB | bytes ratio | "
+          "gather us | pallas us | max err |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["max_kv"], r["live_len"])):
+        print(f"| {r['live_len']} | {r['max_kv']} | "
+              f"{r['gather_bytes_per_step']/1e6:.2f} | "
+              f"{r['pallas_bytes_per_step']/1e6:.2f} | "
+              f"{r['bytes_ratio']:.1f}x | {r['gather_us']:.0f} | "
+              f"{r['pallas_us']:.0f} | {r['max_err']:.1e} |")
+    print("\n(gather scales with max_kv; pallas scales with live_len. "
+          "Latency is interpret-mode — bytes are the perf statement.)")
 
 
 def fmt_row(r):
@@ -53,6 +81,9 @@ def main():
     print(f"\nskipped (documented): {len(skips)}")
     for a, s, m in skips:
         print(f"  - {a} x {s} ({m})")
+    decode_attn = load_decode_attn()
+    if decode_attn:
+        print_decode_attn(decode_attn)
 
 
 if __name__ == "__main__":

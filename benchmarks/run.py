@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
   fig4_tokenizer       Fig. 4  DPU tokenizer throughput vs naive baseline
   fig8_energy          Fig. 8  energy-per-token proxy
   kernels              §4.2    Pallas kernels vs oracles
+  decode_attn          §4.2    decode attention backends: gather vs pallas
   roofline             (g)     dry-run roofline table
 """
 from __future__ import annotations
@@ -16,13 +17,15 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig3_makespan, fig4_tokenizer, fig8_energy, kernels,
-                        roofline, table6_presaturation, table7_interference)
+from benchmarks import (decode_attn, fig3_makespan, fig4_tokenizer,
+                        fig8_energy, kernels, roofline, table6_presaturation,
+                        table7_interference)
 from benchmarks.common import emit
 
 MODULES = [
     ("fig4_tokenizer", fig4_tokenizer),
     ("kernels", kernels),
+    ("decode_attn", decode_attn),
     ("fig3_makespan", fig3_makespan),
     ("table6_presaturation", table6_presaturation),
     ("table7_interference", table7_interference),

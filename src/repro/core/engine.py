@@ -27,11 +27,20 @@ Paper §4.2, mechanism -> JAX mapping:
                                           inside the window program
 
 The engine treats the model as opaque via ``repro.models.api.ModelApi``.
+Decode attention inside that opaque step is pluggable: build the api with
+``make_model(cfg, attn_backend=serve.attn_backend)`` to route the per-token
+KV read through either the jnp gather path ("gather", HBM traffic scales
+with the provisioned ``max_kv``) or the Pallas paged-attention kernel
+("pallas", traffic scales with the live KV length). The
+``REPRO_ATTN_BACKEND`` env var overrides both. ``ServeConfig.kv_cache_dtype
+= "int8"`` serves a quantised KV pool; the pallas backend dequantises fused
+in-kernel.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
@@ -60,11 +69,23 @@ class EngineState:
     windows_done: jax.Array     # [] int32
 
 
+def _check_attn_backend(api: ModelApi, serve: ServeConfig) -> None:
+    """ServeConfig.attn_backend is consumed where the model api is built
+    (make_model), not here — catch the silent no-op where the config asks
+    for an accelerated backend but the api was built with the default."""
+    want = os.environ.get("REPRO_ATTN_BACKEND") or serve.attn_backend
+    if want != api.attn_backend and api.attn_backend == "gather":
+        raise ValueError(
+            f"ServeConfig.attn_backend={serve.attn_backend!r} but the model "
+            f"api was built with {api.attn_backend!r}; pass "
+            f"make_model(cfg, attn_backend=serve.attn_backend, "
+            f"attn_pages_per_block=serve.attn_pages_per_block)")
+
+
 def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
                       enc_len: int = 0) -> EngineState:
+    _check_attn_backend(api, serve)
     cache = cache_for_serve(api, serve, enc_len=enc_len)
-    if "kv" not in cache:  # keep the pytree uniform for attention-free archs
-        pass
     return EngineState(
         ring=rb.make_ring(serve),
         cache=cache,
@@ -149,7 +170,8 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
 
         # page allocation: all-or-nothing per request (backpressure)
         if paged:
-            need = (ring.prompt_len[cand] + ring.max_new[cand] + ps - 1) // ps
+            need = cache_lib.pages_needed(ring.prompt_len[cand],
+                                          ring.max_new[cand], ps)
 
             def alloc_one(carry, xs):
                 alloc, = carry
@@ -278,8 +300,8 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         # pages can't be allocated stay PENDING and must NOT pause decode,
         # (iii) free decode-lane capacity.
         n_free = jnp.sum(state.lane_slot < 0)
-        need = (state.ring.prompt_len[cand] + state.ring.max_new[cand]
-                + ps - 1) // ps
+        need = cache_lib.pages_needed(state.ring.prompt_len[cand],
+                                      state.ring.max_new[cand], ps)
         running = state.alloc.top
         count = jnp.int32(0)
         gated = []

@@ -19,14 +19,21 @@ from repro.kernels import ssm_scan as _ss
 INTERPRET = True
 
 
-@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+@functools.partial(jax.jit, static_argnames=("softcap", "pages_per_block",
+                                             "interpret"))
 def paged_attention(q, k_pages, v_pages, block_table, kv_lens, *,
-                    window: int = 0, softcap: float = 0.0,
+                    window=0, softcap: float = 0.0,
+                    k_scale=None, v_scale=None, pages_per_block: int = 1,
                     interpret: bool = None):
+    """Decode paged attention. ``window`` is a dynamic scalar (0 = full) so
+    per-layer window patterns pass through a ``lax.scan`` over layers;
+    ``k_scale``/``v_scale`` enable fused int8-KV dequant; ``pages_per_block``
+    amortises grid overhead on small pages."""
     interp = INTERPRET if interpret is None else interpret
     return _pa.paged_attention(
         q, k_pages, v_pages, block_table, kv_lens,
-        window=window, softcap=softcap, interpret=interp)
+        window=window, softcap=softcap, k_scale=k_scale, v_scale=v_scale,
+        pages_per_block=pages_per_block, interpret=interp)
 
 
 @functools.partial(jax.jit,

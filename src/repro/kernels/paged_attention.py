@@ -1,4 +1,4 @@
-"""Paged-attention decode kernel (Pallas TPU).
+"""Paged-attention decode kernel (Pallas TPU) — the engine decode hot path.
 
 The Blink hot path: one new query token per sequence attends over that
 sequence's paged KV cache. On GPU the paper fuses this into the persistent
@@ -12,8 +12,30 @@ Pallas kernel that
   * supports sliding-window masking (mixtral/gemma2 local layers) and
     attention-logit softcapping (gemma2) for arch coverage.
 
-Grid: (B, KV_heads, num_blocks); each step processes one KV page of
-``page_size`` tokens against the G = H/KV query heads of one KV head.
+Hot-path upgrades (vs the original test-only kernel):
+
+  * per-lane live-page early exit — grid steps whose pages lie entirely
+    past ``kv_lens[b]`` skip all compute via ``pl.when``, and their
+    ``index_map`` is clamped to the last live page so the pipeline issues
+    no new HBM fetch (Pallas skips the DMA when the block index repeats).
+    Short lanes therefore pay ~ceil(live/ps) pages, not ``max_blocks``;
+  * sliding-window page skip — pages entirely below ``kv_len - window``
+    are likewise clamped+skipped instead of merely masked, so window
+    attention reads only ~window/ps pages regardless of context length;
+  * fused int8-KV dequantisation — optional per-(token, head) ``k_scale``
+    / ``v_scale`` refs stream alongside the pages and are applied in-VMEM,
+    so quantised caches run natively instead of falling back to a
+    dequantising gather;
+  * ``pages_per_block`` — processes several block-table entries per grid
+    step (one BlockSpec per page, statically unrolled) to amortise grid
+    overhead when the page size is small;
+  * the window width is a *dynamic* scalar-prefetch operand (0 = full
+    attention), so per-layer window patterns (gemma2 local/global) pass
+    straight through a ``lax.scan`` over layers without recompilation.
+
+Grid: (B, KV_heads, ceil(max_blocks / pages_per_block)); each step
+processes ``pages_per_block`` KV pages of ``page_size`` tokens against the
+G = H/KV query heads of one KV head.
 """
 from __future__ import annotations
 
@@ -29,61 +51,88 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _live_range(kv_len, window):
+    """[lo, kv_len) is the live token range for one lane; window 0 = full."""
+    lo = jnp.where(window > 0, jnp.maximum(kv_len - window, 0), 0)
+    return lo.astype(jnp.int32)
+
+
 def _paged_attn_kernel(
     # scalar-prefetch refs
-    block_table_ref,   # [B, mb] int32
+    block_table_ref,   # [B, nb*ppb] int32 (clamped >= 0)
     kv_lens_ref,       # [B] int32 — tokens to attend per lane
-    # array refs
-    q_ref,             # [1, 1, G, hd]
-    k_ref,             # [1, ps, 1, hd]   (page selected via index_map)
-    v_ref,             # [1, ps, 1, hd]
-    o_ref,             # [1, 1, G, hd]
-    # scratch
-    m_scr,             # [G, 1] f32
-    l_scr,             # [G, 1] f32
-    acc_scr,           # [G, hd] f32
-    *,
+    window_ref,        # [1] int32 — sliding window (0 = full attention)
+    *refs,
     page_size: int,
-    num_blocks: int,
-    window: int,       # 0 = full attention
-    softcap: float,    # 0 = disabled
+    num_groups: int,
+    pages_per_block: int,
+    quantized: bool,
+    softcap: float,
     scale: float,
 ):
-    b = pl.program_id(0)
-    i = pl.program_id(2)
+    ppb = pages_per_block
+    q_ref = refs[0]                       # [1, 1, G, hd]
+    k_refs = refs[1:1 + ppb]              # each [1, ps, 1, hd]
+    v_refs = refs[1 + ppb:1 + 2 * ppb]
+    at = 1 + 2 * ppb
+    ks_refs = vs_refs = ()
+    if quantized:
+        ks_refs = refs[at:at + ppb]       # each [1, ps, 1]
+        vs_refs = refs[at + ppb:at + 2 * ppb]
+        at += 2 * ppb
+    o_ref = refs[at]                      # [1, 1, G, hd]
+    m_scr, l_scr, acc_scr = refs[at + 1:at + 4]
 
-    @pl.when(i == 0)
+    b = pl.program_id(0)
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, hd]
-    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [ps, hd]
-    v = v_ref[0, :, 0, :].astype(jnp.float32)
-
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [G, ps]
-    if softcap > 0.0:
-        s = softcap * jnp.tanh(s / softcap)
-
     kv_len = kv_lens_ref[b]
-    kv_pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
-    mask = kv_pos < kv_len
-    if window > 0:
-        mask &= kv_pos >= (kv_len - window)
-    s = jnp.where(mask, s, NEG_INF)
+    lo = _live_range(kv_len, window_ref[0])
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, hd]
 
-    m_prev = m_scr[...]                                   # [G, 1]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)                                # [G, ps]
-    p = jnp.where(mask, p, 0.0)
-    alpha = jnp.exp(m_prev - m_new)                       # [G, 1]
-    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+    for j in range(ppb):
+        start = (g * ppb + j) * page_size
+        # live-page gate: pages past kv_len (early exit) or entirely below
+        # the sliding window contribute nothing — skip the dots, not just
+        # the mask. The index_map clamps these steps to a live page, so no
+        # fresh HBM fetch happens either.
+        live = (start < kv_len) & (start + page_size > lo)
 
-    @pl.when(i == num_blocks - 1)
+        @pl.when(live)
+        def _process(j=j, start=start):
+            k = k_refs[j][0, :, 0, :].astype(jnp.float32)    # [ps, hd]
+            v = v_refs[j][0, :, 0, :].astype(jnp.float32)
+            if quantized:
+                k = k * ks_refs[j][0, :, 0].astype(jnp.float32)[:, None]
+                v = v * vs_refs[j][0, :, 0].astype(jnp.float32)[:, None]
+
+            s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [G, ps]
+            if softcap > 0.0:
+                s = softcap * jnp.tanh(s / softcap)
+
+            kv_pos = start + jax.lax.broadcasted_iota(
+                jnp.int32, (1, page_size), 1)
+            mask = (kv_pos >= lo) & (kv_pos < kv_len)
+            s = jnp.where(mask, s, NEG_INF)
+
+            m_prev = m_scr[...]                               # [G, 1]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            p = jnp.exp(s - m_new)                            # [G, ps]
+            p = jnp.where(mask, p, 0.0)
+            alpha = jnp.exp(m_prev - m_new)                   # [G, 1]
+            l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1,
+                                                      keepdims=True)
+            acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+                p, v, preferred_element_type=jnp.float32)
+            m_scr[...] = m_new
+
+    @pl.when(g == num_groups - 1)
     def _finalize():
         l = jnp.maximum(l_scr[...], 1e-20)
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
@@ -96,42 +145,73 @@ def paged_attention(
     block_table: jax.Array,  # [B, mb] int32 (-1 = unassigned)
     kv_lens: jax.Array,      # [B] int32
     *,
-    window: int = 0,
+    window=0,                # int or traced scalar; 0 = full attention
     softcap: float = 0.0,
+    k_scale: Optional[jax.Array] = None,   # [P, ps, KV] int8 dequant scales
+    v_scale: Optional[jax.Array] = None,
+    pages_per_block: int = 1,
     interpret: bool = True,
 ) -> jax.Array:
     """Returns [B, KV, G, hd] attention output."""
     B, KV, G, hd = q.shape
     P, ps, _, _ = k_pages.shape
     mb = block_table.shape[1]
+    ppb = max(int(pages_per_block), 1)
+    nb = -(-mb // ppb)
+    if nb * ppb != mb:
+        block_table = jnp.pad(block_table, ((0, 0), (0, nb * ppb - mb)),
+                              constant_values=-1)
     scale = 1.0 / math.sqrt(hd)
     safe_table = jnp.maximum(block_table, 0).astype(jnp.int32)
+    window_arr = jnp.reshape(jnp.asarray(window, jnp.int32), (1,))
+    quantized = k_scale is not None
 
-    grid = (B, KV, mb)
+    grid = (B, KV, nb)
 
-    def q_map(b, h, i, bt, kl):
+    def q_map(b, h, g, bt, kl, wl):
         return (b, h, 0, 0)
 
-    def kv_map(b, h, i, bt, kl):
-        return (bt[b, i], 0, h, 0)
+    def page_of(b, g, j, bt, kl, wl):
+        """Pool page for the j-th page of group g, clamped to the live
+        block range so dead grid steps repeat the previous block index
+        (Pallas elides the HBM->VMEM copy when the index is unchanged)."""
+        kv_len = kl[b]
+        lo = _live_range(kv_len, wl[0])
+        first = lo // ps
+        last = jnp.maximum(kv_len - 1, 0) // ps
+        blk = jnp.clip(g * ppb + j, first, last)
+        return bt[b, blk]
 
-    def o_map(b, h, i, bt, kl):
+    def kv_map(b, h, g, bt, kl, wl, *, j):
+        return (page_of(b, g, j, bt, kl, wl), 0, h, 0)
+
+    def scale_map(b, h, g, bt, kl, wl, *, j):
+        return (page_of(b, g, j, bt, kl, wl), 0, h)
+
+    def o_map(b, h, g, bt, kl, wl):
         return (b, h, 0, 0)
 
     kernel = functools.partial(
-        _paged_attn_kernel, page_size=ps, num_blocks=mb,
-        window=int(window), softcap=float(softcap), scale=scale)
+        _paged_attn_kernel, page_size=ps, num_groups=nb,
+        pages_per_block=ppb, quantized=quantized,
+        softcap=float(softcap), scale=scale)
+
+    kv_specs = [pl.BlockSpec((1, ps, 1, hd), functools.partial(kv_map, j=j))
+                for j in range(ppb)]
+    in_specs = [pl.BlockSpec((1, 1, G, hd), q_map)] + kv_specs + kv_specs
+    inputs = [q] + [k_pages] * ppb + [v_pages] * ppb
+    if quantized:
+        sc_specs = [pl.BlockSpec((1, ps, 1), functools.partial(scale_map, j=j))
+                    for j in range(ppb)]
+        in_specs += sc_specs + sc_specs
+        inputs += [k_scale] * ppb + [v_scale] * ppb
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, G, hd), q_map),
-                pl.BlockSpec((1, ps, 1, hd), kv_map),
-                pl.BlockSpec((1, ps, 1, hd), kv_map),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, G, hd), o_map),
             scratch_shapes=[
                 pltpu.VMEM((G, 1), jnp.float32),
@@ -141,5 +221,5 @@ def paged_attention(
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
-    )(safe_table, kv_lens.astype(jnp.int32), q, k_pages, v_pages)
+    )(safe_table, kv_lens.astype(jnp.int32), window_arr, *inputs)
     return out

@@ -14,16 +14,22 @@ INT_MAX = jnp.iinfo(jnp.int32).max
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_table, kv_lens, *,
-                        window: int = 0, softcap: float = 0.0):
-    """q: [B, KV, G, hd]; pages [P, ps, KV, hd]; returns [B, KV, G, hd]."""
+                        window: int = 0, softcap: float = 0.0,
+                        k_scale=None, v_scale=None):
+    """q: [B, KV, G, hd]; pages [P, ps, KV, hd]; returns [B, KV, G, hd].
+
+    k_scale/v_scale: optional [P, ps, KV] int8 dequant scales."""
     B, KV, G, hd = q.shape
     P, ps, _, _ = k_pages.shape
     mb = block_table.shape[1]
     safe = jnp.clip(block_table, 0, P - 1)
-    k = k_pages[safe]                        # [B, mb, ps, KV, hd]
-    v = v_pages[safe]
-    k = k.reshape(B, mb * ps, KV, hd).astype(jnp.float32)
-    v = v.reshape(B, mb * ps, KV, hd).astype(jnp.float32)
+    k = k_pages[safe].astype(jnp.float32)    # [B, mb, ps, KV, hd]
+    v = v_pages[safe].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[safe].astype(jnp.float32)[..., None]
+        v = v * v_scale[safe].astype(jnp.float32)[..., None]
+    k = k.reshape(B, mb * ps, KV, hd)
+    v = v.reshape(B, mb * ps, KV, hd)
     qf = q.astype(jnp.float32) / math.sqrt(hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qf, k)
     if softcap > 0:

@@ -28,15 +28,21 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--window", type=int, default=24)
     ap.add_argument("--interfere", action="store_true")
+    ap.add_argument("--attn-backend", default="gather",
+                    choices=("gather", "pallas"),
+                    help="decode attention backend (REPRO_ATTN_BACKEND "
+                         "overrides)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
-    api = make_model(cfg)
-    params = api.init_params(jax.random.PRNGKey(0))
     serve = ServeConfig(num_slots=16, max_prompt_len=32,
                         max_new_tokens=args.max_new, decode_batch=8,
                         window=args.window, admit_per_step=4, page_size=8,
-                        num_pages=160, eos_token=-1)
+                        num_pages=160, eos_token=-1,
+                        attn_backend=args.attn_backend)
+    api = make_model(cfg, attn_backend=serve.attn_backend,
+                     attn_pages_per_block=serve.attn_pages_per_block)
+    params = api.init_params(jax.random.PRNGKey(0))
     jitter = None
     if args.interfere:
         from benchmarks.common import make_jitter

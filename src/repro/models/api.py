@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import attn_backend as attn_backend_lib
 from repro.models import cache as cache_lib
 from repro.models import encdec as encdec_lib
 from repro.models import transformer as tf_lib
@@ -27,9 +28,22 @@ class ModelApi(NamedTuple):
     prefill: Callable[..., Any]
     decode: Callable[..., Any]
     make_cache: Callable[..., Dict[str, Any]]
+    attn_backend: str = "gather"
 
 
-def make_model(cfg: ModelConfig) -> ModelApi:
+def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
+               attn_pages_per_block: int = 1) -> ModelApi:
+    """Build the opaque model API.
+
+    ``attn_backend`` selects the decode-attention implementation (see
+    ``repro.models.attn_backend``). Precedence: the REPRO_ATTN_BACKEND env
+    var overrides everything (including an explicit argument), then this
+    argument, then "gather". Callers serving through the engine pass
+    ``ServeConfig.attn_backend`` / ``ServeConfig.attn_pages_per_block``;
+    the engine refuses a config/api mismatch at init.
+    """
+    attend = attn_backend_lib.get_backend(
+        attn_backend, pages_per_block=attn_pages_per_block)
     if cfg.is_encoder_decoder:
         train = lambda params, batch, **kw: encdec_lib.train_loss(
             params, cfg, batch, **kw)
@@ -39,7 +53,8 @@ def make_model(cfg: ModelConfig) -> ModelApi:
             params, cfg, batch, **kw)
         pre = lambda params, *a, **kw: tf_lib.prefill(params, cfg, *a, **kw)
 
-    dec = lambda params, *a, **kw: tf_lib.decode(params, cfg, *a, **kw)
+    dec = lambda params, *a, **kw: tf_lib.decode(
+        params, cfg, *a, attend=attend, **kw)
 
     def mk_cache(*, num_slots: int, num_pages: int, page_size: int,
                  max_blocks: int, enc_len: int = 0, dtype=None):
@@ -56,11 +71,14 @@ def make_model(cfg: ModelConfig) -> ModelApi:
         prefill=pre,
         decode=dec,
         make_cache=mk_cache,
+        attn_backend=attend.backend_name,
     )
 
 
 def cache_for_serve(api: ModelApi, serve: ServeConfig, *, enc_len: int = 0,
                     dtype=None) -> Dict[str, Any]:
+    if dtype is None and serve.kv_cache_dtype:
+        dtype = jnp.dtype(serve.kv_cache_dtype)
     return api.make_cache(
         num_slots=serve.num_slots, num_pages=serve.num_pages,
         page_size=serve.page_size, max_blocks=serve.pages_per_req,

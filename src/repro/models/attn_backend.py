@@ -1,0 +1,127 @@
+"""Pluggable decode-attention backends.
+
+The engine's per-token step attends one new query against the paged KV
+cache, once per attention layer — the hottest loop in the system. Two
+implementations are registered:
+
+  * ``"gather"`` — the jnp reference path: materialise the slot's whole
+    page range ``[B, max_kv, KV, hd]`` via ``cache.gather_kv`` and run
+    dense ``gqa_attend``. Per-step HBM traffic scales with ``max_kv``
+    (the provisioned maximum), not the live context. Simple, and the
+    numerical baseline the Pallas path is tested against.
+  * ``"pallas"`` — the ``kernels.paged_attention`` Pallas kernel: pages
+    stream HBM->VMEM through a scalar-prefetched block table, dead pages
+    are skipped (live-page early exit + sliding-window page skip), and
+    int8 caches dequantise fused in-VMEM. Per-step HBM traffic scales
+    with the *live* KV length — the Blink decode-throughput win.
+
+Selection: ``ServeConfig.attn_backend`` (threaded through
+``models.api.make_model``), overridden by the ``REPRO_ATTN_BACKEND``
+environment variable. ``benchmarks/decode_attn.py`` quantifies the
+tradeoff.
+
+A backend is a callable
+
+    attend(cfg, q, kvc, layer, slot_ids, pos, window) -> [B, 1, H, hd]
+
+where ``q`` is the current token's query heads ``[B, 1, H, hd]``, ``kvc``
+the ``PagedKVCache`` (with the token's K/V already written), ``pos`` the
+per-lane cache position of that token and ``window`` a traced per-layer
+sliding-window width (0 = full attention).
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import cache as cache_lib
+from repro.models.layers import gqa_attend
+
+DecodeAttend = Callable[..., jax.Array]
+
+_REGISTRY: Dict[str, Callable[..., DecodeAttend]] = {}
+
+
+def register(name: str):
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available():
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: Optional[str] = None, *,
+                pages_per_block: int = 1) -> DecodeAttend:
+    """Resolve a decode-attention backend by name.
+
+    Resolution order: ``REPRO_ATTN_BACKEND`` env var > ``name`` argument >
+    ``"gather"``. Raises ``KeyError`` for unknown names so a typo'd env
+    var fails loudly instead of silently serving the slow path.
+    """
+    resolved = os.environ.get("REPRO_ATTN_BACKEND") or name or "gather"
+    if resolved not in _REGISTRY:
+        raise KeyError(f"unknown attention backend {resolved!r}; "
+                       f"available: {available()}")
+    fn = _REGISTRY[resolved](pages_per_block=pages_per_block)
+    fn.backend_name = resolved
+    return fn
+
+
+@register("gather")
+def _make_gather(*, pages_per_block: int = 1) -> DecodeAttend:
+    """Reference path: dense gather + jnp GQA (today's behavior, including
+    the REPRO_WINDOW_GATHER hillclimb for sliding-window configs)."""
+
+    def gather_attend(cfg, q, kvc, layer, slot_ids, pos, window):
+        B = q.shape[0]
+        windowed = (os.environ.get("REPRO_WINDOW_GATHER") == "1"
+                    and cfg.sliding_window is not None)
+        if windowed:
+            k_all, v_all, kv_pos = cache_lib.gather_kv_window(
+                kvc, layer, slot_ids, pos, cfg.sliding_window)
+        else:
+            k_all, v_all = cache_lib.gather_kv(kvc, layer, slot_ids)
+            kv_pos = jnp.broadcast_to(jnp.arange(kvc.max_kv)[None, :],
+                                      (B, kvc.max_kv))
+        kv_valid = kv_pos <= pos[:, None]
+        eff_window = jnp.where(window > 0, window,
+                               jnp.int32(cfg.sliding_window) if windowed
+                               else jnp.int32(2**30))
+        return gqa_attend(q, k_all, v_all, q_positions=pos[:, None],
+                          k_positions=kv_pos, causal=True, window=eff_window,
+                          kv_mask=kv_valid, softcap=cfg.attn_softcap)
+
+    return gather_attend
+
+
+@register("pallas")
+def _make_pallas(*, pages_per_block: int = 1) -> DecodeAttend:
+    """Hot path: the Pallas paged-attention kernel, HBM traffic bounded by
+    the live KV length (+ sliding-window page skip + fused int8 dequant)."""
+
+    def pallas_attend(cfg, q, kvc, layer, slot_ids, pos, window):
+        B = q.shape[0]
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        G = cfg.num_heads // KV
+        # gqa_attend groups head h under kv head h // G — same layout here
+        qg = q[:, 0].reshape(B, KV, G, hd)
+        quant = {}
+        if kvc.quantized:
+            quant = dict(k_scale=kvc.k_scale[layer],
+                         v_scale=kvc.v_scale[layer])
+        att = ops.paged_attention(
+            qg, kvc.k_pages[layer], kvc.v_pages[layer],
+            kvc.block_table[slot_ids], pos + 1,
+            window=jnp.maximum(window, 0).astype(jnp.int32),
+            softcap=float(cfg.attn_softcap or 0.0),
+            pages_per_block=pages_per_block, **quant)
+        return att.reshape(B, 1, cfg.num_heads, hd).astype(q.dtype)
+
+    return pallas_attend

@@ -66,17 +66,26 @@ def make_paged_kv_cache(
     L = cfg.num_attn_layers
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     dtype = jnp.dtype(dtype) if dtype else cfg.jnp_dtype
-    scales = None
-    if dtype == jnp.int8:
-        scales = jnp.zeros((L, num_pages, page_size, kv), jnp.bfloat16)
+    # k_scale/v_scale must be DISTINCT buffers: the engine donates the whole
+    # cache pytree per window, and donating one buffer twice is an error.
+    mk_scales = lambda: (jnp.zeros((L, num_pages, page_size, kv), jnp.bfloat16)
+                         if dtype == jnp.int8 else None)
     return PagedKVCache(
         k_pages=jnp.zeros((L, num_pages, page_size, kv, hd), dtype),
         v_pages=jnp.zeros((L, num_pages, page_size, kv, hd), dtype),
         block_table=jnp.full((num_slots, max_blocks), -1, jnp.int32),
         seq_lens=jnp.zeros((num_slots,), jnp.int32),
-        k_scale=scales,
-        v_scale=scales,
+        k_scale=mk_scales(),
+        v_scale=mk_scales(),
     )
+
+
+def pages_needed(prompt_len, max_new, page_size: int):
+    """KV pages a request occupies for its whole lifetime (prompt + all
+    generated tokens). The engine's admission gate and the prefill-branch
+    allocator both use this — one formula, so the gate can never admit a
+    request the allocator would refuse (or vice versa)."""
+    return (prompt_len + max_new + page_size - 1) // page_size
 
 
 # ---------------------------------------------------------------------------
@@ -273,8 +282,14 @@ def make_cache(cfg: ModelConfig, *, num_slots: int, num_pages: int,
             lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), st)
     if cfg.is_encoder_decoder and enc_len:
         kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        # quantised cache dtypes apply to the paged KV pool only (it carries
+        # k_scale/v_scale); the dense cross-attention K/V have no scale
+        # storage, so int8 here would truncate values to {-2..2} silently.
+        enc_dtype = dtype or cfg.jnp_dtype
+        if jnp.dtype(enc_dtype) == jnp.int8:
+            enc_dtype = cfg.jnp_dtype
         cache["enc_k"] = jnp.zeros(
-            (cfg.num_layers, num_slots, enc_len, kv, hd), dtype or cfg.jnp_dtype)
+            (cfg.num_layers, num_slots, enc_len, kv, hd), enc_dtype)
         cache["enc_v"] = jnp.zeros_like(cache["enc_k"])
         cache["enc_len"] = jnp.zeros((num_slots,), jnp.int32)
     return cache

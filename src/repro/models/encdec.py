@@ -174,8 +174,12 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
 
 def decode(params: dict, cfg: ModelConfig, tokens: jax.Array,
-           cache: Dict[str, Any], slot_ids: jax.Array, active: jax.Array):
-    """One decoder step with paged self-attn + dense cross-attn."""
+           cache: Dict[str, Any], slot_ids: jax.Array, active: jax.Array,
+           attend=None):
+    """One decoder step with paged self-attn + dense cross-attn.
+
+    ``attend``: decode-attention backend (see repro.models.attn_backend)
+    used for the paged self-attention; cross-attention stays dense."""
     from repro.models.transformer import _decode_attn_layer
     B = tokens.shape[0]
     kvc = cache["kv"]
@@ -193,7 +197,8 @@ def decode(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
         def self_fn(bp, h):
             att, kvc2 = _decode_attn_layer(
-                cfg, bp, h, kvc, layer, slot_ids, active, pos, jnp.int32(0))
+                cfg, bp, h, kvc, layer, slot_ids, active, pos, jnp.int32(0),
+                attend)
             self_fn.kvc = kvc2
             return att
 

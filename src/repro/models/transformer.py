@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import attn_backend as attn_backend_lib
 from repro.models import cache as cache_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
@@ -94,7 +95,7 @@ def _moe_leaves(cfg: ModelConfig, L: int) -> Dict[str, Any]:
         "router": _leaf(lead + (D, E)),
         "w_gate": _leaf(lead + (E, D, Fe)),
         "w_up": _leaf(lead + (E, D, Fe)),
-        "w_down": _leaf(lead + (Fe, D) if False else lead + (E, Fe, D)),
+        "w_down": _leaf(lead + (E, Fe, D)),
     }
     if cfg.shared_expert_d_ff:
         Fs = cfg.shared_expert_d_ff
@@ -517,54 +518,48 @@ def _scatter_prompt_kv(cfg, cache, kvs, slot_ids, active, offset, lengths,
 
 
 def decode(params: dict, cfg: ModelConfig, tokens: jax.Array,
-           cache: Dict[str, Any], slot_ids: jax.Array, active: jax.Array):
-    """One decode step. tokens: [B] int32. Returns (logits [B, V], cache')."""
+           cache: Dict[str, Any], slot_ids: jax.Array, active: jax.Array,
+           attend: Optional[Any] = None):
+    """One decode step. tokens: [B] int32. Returns (logits [B, V], cache').
+
+    ``attend`` is a decode-attention backend from
+    ``repro.models.attn_backend`` (None -> resolve the default:
+    REPRO_ATTN_BACKEND env var, else "gather")."""
+    if attend is None:
+        attend = attn_backend_lib.get_backend()
     if cfg.is_encoder_decoder:
         from repro.models import encdec
-        return encdec.decode(params, cfg, tokens, cache, slot_ids, active)
+        return encdec.decode(params, cfg, tokens, cache, slot_ids, active,
+                             attend=attend)
     if cfg.arch_type == "ssm":
         return _decode_rwkv(params, cfg, tokens, cache, slot_ids, active)
     if cfg.arch_type == "hybrid":
-        return _decode_hybrid(params, cfg, tokens, cache, slot_ids, active)
-    return _decode_dense(params, cfg, tokens, cache, slot_ids, active)
+        return _decode_hybrid(params, cfg, tokens, cache, slot_ids, active,
+                              attend)
+    return _decode_dense(params, cfg, tokens, cache, slot_ids, active, attend)
 
 
-def _decode_attn_layer(cfg, bp, x, kvc, layer, slot_ids, active, pos, window):
+def _decode_attn_layer(cfg, bp, x, kvc, layer, slot_ids, active, pos, window,
+                       attend=None):
     """Shared attention-decode: write token KV, attend over pages.
 
     x: [B, 1, D]. Returns (attn output [B, 1, D] pre-wo, updated kvc).
-
-    REPRO_WINDOW_GATHER=1 (§Perf hillclimb): for sliding-window configs,
-    gather only the blocks covering the live window instead of the whole
-    block table. For gemma2 long-context this also restricts the *global*
-    layers to a streaming window (documented beyond-paper deviation)."""
-    B = x.shape[0]
+    The attention itself is delegated to an ``attn_backend`` callable —
+    "gather" (dense jnp reference) or "pallas" (paged-attention kernel,
+    HBM traffic bounded by live KV length)."""
+    if attend is None:
+        attend = attn_backend_lib.get_backend()
     q, k, v = qkv_project(bp, cfg, x)                  # [B,1,H,hd]/[B,1,KV,hd]
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
     k = apply_rope(k, pos[:, None], cfg.rope_theta)
     kvc = cache_lib.write_kv_layer(
         kvc, layer, slot_ids, k, v, start_pos=pos, lengths=pos + 1,
         active=active)
-    windowed = (os.environ.get("REPRO_WINDOW_GATHER") == "1"
-                and cfg.sliding_window is not None)
-    if windowed:
-        k_all, v_all, kv_pos = cache_lib.gather_kv_window(
-            kvc, layer, slot_ids, pos, cfg.sliding_window)
-    else:
-        k_all, v_all = cache_lib.gather_kv(kvc, layer, slot_ids)
-        kv_pos = jnp.broadcast_to(jnp.arange(kvc.max_kv)[None, :],
-                                  (B, kvc.max_kv))
-    kv_valid = kv_pos <= pos[:, None]
-    eff_window = jnp.where(window > 0, window,
-                           jnp.int32(cfg.sliding_window) if windowed
-                           else jnp.int32(2**30))
-    att = gqa_attend(q, k_all, v_all, q_positions=pos[:, None],
-                     k_positions=kv_pos, causal=True, window=eff_window,
-                     kv_mask=kv_valid, softcap=cfg.attn_softcap)
+    att = attend(cfg, q, kvc, layer, slot_ids, pos, window)
     return att, kvc
 
 
-def _decode_dense(params, cfg, tokens, cache, slot_ids, active):
+def _decode_dense(params, cfg, tokens, cache, slot_ids, active, attend=None):
     B = tokens.shape[0]
     kvc = cache["kv"]
     pos = kvc.seq_lens[slot_ids]                      # new token's position
@@ -576,7 +571,7 @@ def _decode_dense(params, cfg, tokens, cache, slot_ids, active):
         bp, layer, window = xs
         h = norm(cfg, x, bp.get("ln1"))
         att, kvc = _decode_attn_layer(cfg, bp, h, kvc, layer, slot_ids,
-                                      active, pos, window)
+                                      active, pos, window, attend)
         x = x + attn_out(bp, att)
         h2 = norm(cfg, x, bp.get("ln2"))
         y = moe_lib.moe_ffn(bp, cfg, h2) if cfg.num_experts else mlp(bp, cfg, h2)
@@ -610,7 +605,7 @@ def _decode_rwkv(params, cfg, tokens, cache, slot_ids, active):
     return logits, cache
 
 
-def _decode_hybrid(params, cfg, tokens, cache, slot_ids, active):
+def _decode_hybrid(params, cfg, tokens, cache, slot_ids, active, attend=None):
     B = tokens.shape[0]
     kvc = cache["kv"]
     pos = kvc.seq_lens[slot_ids]
@@ -630,7 +625,7 @@ def _decode_hybrid(params, cfg, tokens, cache, slot_ids, active):
             h = norm(cfg, x[:, None], sp.get("ln1"))
             att, kvc = _decode_attn_layer(
                 cfg, sp, h, kvc, attn_row, slot_ids, active, pos,
-                jnp.int32(0))
+                jnp.int32(0), attend)
             x = x + attn_out(sp, att)[:, 0]
             h2 = norm(cfg, x[:, None], sp.get("ln2"))
             return x + mlp(sp, cfg, h2)[:, 0], kvc

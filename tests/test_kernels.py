@@ -46,7 +46,8 @@ def test_paged_attention_window_softcap(window, softcap):
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
 
 
-def test_paged_attention_ignores_unassigned_pages():
+@pytest.mark.parametrize("ppb", [1, 2])
+def test_paged_attention_ignores_unassigned_pages(ppb):
     """-1 entries in the block table beyond kv_len must not contribute."""
     B, KV, G, hd, P, ps = 1, 1, 2, 16, 8, 4
     q = jnp.ones((B, KV, G, hd))
@@ -55,8 +56,110 @@ def test_paged_attention_ignores_unassigned_pages():
     kp = kp.at[3].set(1.0)
     vp = vp.at[3].set(2.0)
     bt = jnp.array([[3, -1, -1]])
-    out = ops.paged_attention(q, kp, vp, bt, jnp.array([4]))
+    out = ops.paged_attention(q, kp, vp, bt, jnp.array([4]),
+                              pages_per_block=ppb)
     np.testing.assert_allclose(np.asarray(out), 2.0, atol=1e-5)
+
+
+def test_paged_attention_zero_len_lane():
+    """kv_len == 0 lanes (fresh slot, nothing cached) must produce zeros,
+    not NaN, and must not perturb sibling lanes."""
+    B, KV, G, hd, P, ps, mb = 2, 2, 2, 16, 8, 4, 2
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(keys[0], (B, KV, G, hd), jnp.float32)
+    kp = jax.random.normal(keys[1], (P, ps, KV, hd), jnp.float32)
+    vp = jax.random.normal(keys[2], (P, ps, KV, hd), jnp.float32)
+    bt = jnp.array([[-1, -1], [0, 1]])
+    kv_lens = jnp.array([0, 7])
+    out = ops.paged_attention(q, kp, vp, bt, kv_lens)
+    expect = ref.paged_attention_ref(q, kp, vp, bt, kv_lens)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out[0]), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+@pytest.mark.parametrize("ppb", [1, 2, 3])
+def test_paged_attention_window_softcap_combined(ppb):
+    """Sliding window + softcap together (gemma2 local layers), including
+    the page-skip fast path, across pages_per_block settings."""
+    B, KV, G, hd, P, ps, mb = 3, 2, 2, 32, 16, 8, 4
+    keys = jax.random.split(jax.random.PRNGKey(11), 4)
+    q = jax.random.normal(keys[0], (B, KV, G, hd), jnp.float32)
+    kp = jax.random.normal(keys[1], (P, ps, KV, hd), jnp.float32)
+    vp = jax.random.normal(keys[2], (P, ps, KV, hd), jnp.float32)
+    bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+    kv_lens = jnp.array([1, 19, 32])
+    out = ops.paged_attention(q, kp, vp, bt, kv_lens, window=9, softcap=20.0,
+                              pages_per_block=ppb)
+    expect = ref.paged_attention_ref(q, kp, vp, bt, kv_lens, window=9,
+                                     softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_paged_attention_dynamic_window():
+    """window passed as a traced scalar (the per-layer scan path) matches
+    the static reference."""
+    B, KV, G, hd, P, ps, mb = 2, 1, 2, 16, 8, 4, 3
+    keys = jax.random.split(jax.random.PRNGKey(13), 4)
+    q = jax.random.normal(keys[0], (B, KV, G, hd), jnp.float32)
+    kp = jax.random.normal(keys[1], (P, ps, KV, hd), jnp.float32)
+    vp = jax.random.normal(keys[2], (P, ps, KV, hd), jnp.float32)
+    bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+    kv_lens = jnp.array([5, 12])
+    for w in (0, 6):
+        out = ops.paged_attention(q, kp, vp, bt, kv_lens, window=jnp.int32(w))
+        expect = ref.paged_attention_ref(q, kp, vp, bt, kv_lens, window=w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("ppb", [1, 2])
+def test_paged_attention_int8_fused_dequant(ppb):
+    """int8 pages + per-(token, head) scales: the fused in-kernel dequant
+    matches the dequantising reference, and tracks the float answer within
+    quantisation tolerance."""
+    B, KV, G, hd, P, ps, mb = 2, 2, 2, 32, 8, 8, 3
+    keys = jax.random.split(jax.random.PRNGKey(17), 4)
+    q = jax.random.normal(keys[0], (B, KV, G, hd), jnp.float32)
+    kf = jax.random.normal(keys[1], (P, ps, KV, hd), jnp.float32)
+    vf = jax.random.normal(keys[2], (P, ps, KV, hd), jnp.float32)
+    bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+    kv_lens = jnp.array([6, 20])
+
+    def quant(x):
+        amax = jnp.max(jnp.abs(x), axis=-1)
+        scale = jnp.maximum(amax / 127.0, 1e-8)
+        qx = jnp.clip(jnp.round(x / scale[..., None]), -127, 127)
+        return qx.astype(jnp.int8), scale
+
+    kq, ks = quant(kf)
+    vq, vs = quant(vf)
+    out = ops.paged_attention(q, kq, vq, bt, kv_lens, k_scale=ks, v_scale=vs,
+                              pages_per_block=ppb)
+    expect = ref.paged_attention_ref(q, kq, vq, bt, kv_lens, k_scale=ks,
+                                     v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+    # fused int8 path stays within quantisation error of the float answer
+    float_ref = ref.paged_attention_ref(q, kf, vf, bt, kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(float_ref),
+                               atol=5e-2)
+
+
+def test_paged_attention_pages_per_block_parity():
+    """All pages_per_block settings produce the same output, including a
+    tail group when max_blocks % pages_per_block != 0."""
+    B, KV, G, hd, P, ps, mb = 2, 2, 3, 16, 16, 4, 5
+    keys = jax.random.split(jax.random.PRNGKey(19), 4)
+    q = jax.random.normal(keys[0], (B, KV, G, hd), jnp.float32)
+    kp = jax.random.normal(keys[1], (P, ps, KV, hd), jnp.float32)
+    vp = jax.random.normal(keys[2], (P, ps, KV, hd), jnp.float32)
+    bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+    kv_lens = jnp.array([3, 18])
+    base = ops.paged_attention(q, kp, vp, bt, kv_lens)
+    for ppb in (2, 3, 5):
+        out = ops.paged_attention(q, kp, vp, bt, kv_lens, pages_per_block=ppb)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=1e-6)
 
 
 @pytest.mark.parametrize("S,block", [(64, 16), (128, 64), (256, 32)])
