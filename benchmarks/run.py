@@ -9,7 +9,11 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
   fig8_energy          Fig. 8  energy-per-token proxy
   kernels              §4.2    Pallas kernels vs oracles
   decode_attn          §4.2    decode attention backends: gather vs pallas
+  prefill_attn         §4.2    prefill attention backends: gather vs flash
   roofline             (g)     dry-run roofline table
+
+REPRO_BENCH_SMOKE=1 shrinks the attention-backend sweeps to one tiny point
+(the CI dry-run mode that keeps these scripts from rotting).
 """
 from __future__ import annotations
 
@@ -18,14 +22,15 @@ import time
 import traceback
 
 from benchmarks import (decode_attn, fig3_makespan, fig4_tokenizer,
-                        fig8_energy, kernels, roofline, table6_presaturation,
-                        table7_interference)
+                        fig8_energy, kernels, prefill_attn, roofline,
+                        table6_presaturation, table7_interference)
 from benchmarks.common import emit
 
 MODULES = [
     ("fig4_tokenizer", fig4_tokenizer),
     ("kernels", kernels),
     ("decode_attn", decode_attn),
+    ("prefill_attn", prefill_attn),
     ("fig3_makespan", fig3_makespan),
     ("table6_presaturation", table6_presaturation),
     ("table7_interference", table7_interference),

@@ -151,9 +151,10 @@ class ServeConfig:
     temperature: float = 0.0            # 0 => greedy
     top_p: float = 1.0
     eos_token: int = 2
-    # decode attention backend: "gather" (jnp reference, HBM traffic scales
-    # with max_kv) or "pallas" (paged-attention kernel, traffic scales with
-    # live KV). Env var REPRO_ATTN_BACKEND overrides. See
+    # attention backend for both serving phases: "gather" (jnp reference —
+    # decode HBM traffic scales with max_kv, prefill materialises the T x T
+    # logits) or "pallas" (paged-attention decode kernel + flash prefill
+    # kernel). Env var REPRO_ATTN_BACKEND overrides. See
     # repro.models.attn_backend.
     attn_backend: str = "gather"
     attn_pages_per_block: int = 1       # pallas: KV pages per grid step

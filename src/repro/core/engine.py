@@ -27,14 +27,18 @@ Paper §4.2, mechanism -> JAX mapping:
                                           inside the window program
 
 The engine treats the model as opaque via ``repro.models.api.ModelApi``.
-Decode attention inside that opaque step is pluggable: build the api with
-``make_model(cfg, attn_backend=serve.attn_backend)`` to route the per-token
-KV read through either the jnp gather path ("gather", HBM traffic scales
-with the provisioned ``max_kv``) or the Pallas paged-attention kernel
-("pallas", traffic scales with the live KV length). The
-``REPRO_ATTN_BACKEND`` env var overrides both. ``ServeConfig.kv_cache_dtype
-= "int8"`` serves a quantised KV pool; the pallas backend dequantises fused
-in-kernel.
+Attention inside that opaque step is pluggable for BOTH phases: build the
+api with ``make_model(cfg, attn_backend=serve.attn_backend)`` to route the
+per-token decode KV read through either the jnp gather path ("gather", HBM
+traffic scales with the provisioned ``max_kv``) or the Pallas
+paged-attention kernel ("pallas", traffic scales with the live KV length),
+and the prefill bucket through either dense ``gqa_attend`` ("gather",
+O(T^2) logits in HBM) or the flash prefill kernel ("pallas", tiled online
+softmax, no T x T logits; K/V pages populated inside the layer scan either
+way). The ``REPRO_ATTN_BACKEND`` env var overrides both.
+``ServeConfig.kv_cache_dtype = "int8"`` serves a quantised KV pool; the
+pallas decode backend dequantises fused in-kernel and prefill writes
+quantise inside the scan via ``cache.write_kv_layer``.
 """
 from __future__ import annotations
 
@@ -72,7 +76,9 @@ class EngineState:
 def _check_attn_backend(api: ModelApi, serve: ServeConfig) -> None:
     """ServeConfig.attn_backend is consumed where the model api is built
     (make_model), not here — catch the silent no-op where the config asks
-    for an accelerated backend but the api was built with the default."""
+    for an accelerated backend but the api was built with the default.
+    ``api.attn_backend`` names the backend bound into BOTH the decode and
+    prefill callables, so this check covers prefill too."""
     want = os.environ.get("REPRO_ATTN_BACKEND") or serve.attn_backend
     if want != api.attn_backend and api.attn_backend == "gather":
         raise ValueError(
@@ -298,11 +304,13 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         # admission gating (paper §4.2's three conditions): (i) pending
         # prefills [cand_valid], (ii) KV page availability — candidates whose
         # pages can't be allocated stay PENDING and must NOT pause decode,
-        # (iii) free decode-lane capacity.
+        # (iii) free decode-lane capacity. Page arithmetic only exists for
+        # paged configs — SSM archs admit on lane capacity alone.
         n_free = jnp.sum(state.lane_slot < 0)
-        need = cache_lib.pages_needed(state.ring.prompt_len[cand],
-                                      state.ring.max_new[cand], ps)
-        running = state.alloc.top
+        if paged:
+            need = cache_lib.pages_needed(state.ring.prompt_len[cand],
+                                          state.ring.max_new[cand], ps)
+            running = state.alloc.top
         count = jnp.int32(0)
         gated = []
         for j in range(A):         # A is small & static: unrolled

@@ -1,0 +1,57 @@
+"""Jaxpr-walking helpers for memory-shape assertions.
+
+The flash-prefill acceptance criterion ("no [L, B, T, KV, hd] staging
+buffer, no [B, KV, G, Tq, Tk] logits tensor") is checked by walking every
+intermediate in the traced computation — sub-jaxprs included, since both
+tensors would live inside a ``lax.scan`` body. One shared walker keeps the
+test (`tests/test_prefill_backend.py`) and the benchmark invariant
+(`benchmarks/prefill_attn.py`) from drifting when JAX changes how
+sub-jaxprs hang off equation params.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def iter_jaxprs(jaxpr):
+    """Yield ``jaxpr`` and every sub-jaxpr reachable through eqn params
+    (scan/cond/pjit bodies, pallas_call kernels, ...)."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else (val,)
+            for v in vals:
+                closed = getattr(v, "jaxpr", None)
+                if hasattr(v, "eqns"):                      # raw Jaxpr
+                    yield from iter_jaxprs(v)
+                elif closed is not None and hasattr(closed, "eqns"):
+                    yield from iter_jaxprs(closed)          # ClosedJaxpr
+
+
+def intermediate_shapes(fn, *args) -> set:
+    """All intermediate array shapes in the traced computation of fn."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    shapes = set()
+    for j in iter_jaxprs(jaxpr.jaxpr):
+        for eqn in j.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    shapes.add(tuple(aval.shape))
+    return shapes
+
+
+def max_intermediate_bytes(fn, *args) -> int:
+    """Largest single intermediate (bytes) in the traced computation."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    best = 0
+    for j in iter_jaxprs(jaxpr.jaxpr):
+        for eqn in j.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    n = 1
+                    for d in aval.shape:
+                        n *= int(d)
+                    best = max(best, n * aval.dtype.itemsize)
+    return best

@@ -1,0 +1,210 @@
+"""Fused prefill-attention kernel (Pallas TPU) — the engine prefill hot path.
+
+Prefill is the TTFT-critical phase the paper attacks with its CUDA-graph
+shape cache (§4.2): every admitted prompt runs the whole stack once over a
+``[B, T]`` bucket. The naive path (``layers.gqa_attend``) materialises a
+full ``[B, KV, G, Tq, Tk]`` f32 logits tensor per layer — O(T^2) HBM
+traffic and peak memory that rivals the KV pool for bucket-2048 prefills.
+This kernel is the flash-attention formulation of the same computation:
+
+  * tiled online softmax — queries and keys stream through VMEM in
+    ``(block_q, block_k)`` tiles with running (m, l, acc) scratch, so the
+    T x T logits never exist in HBM;
+  * left-padding aware — prompts are LEFT-padded (lane b's tokens occupy
+    columns ``[offset_b, T)``); per-lane offsets ride in as scalar
+    prefetch, masking both the padded key columns and (together with the
+    causal test) the padded query rows;
+  * causal + sliding-window *block skip* — key blocks entirely outside
+    ``(q_block_start - window, q_block_end)`` skip all compute via
+    ``pl.when``, and the BlockSpec ``index_map`` clamps their block index
+    into the live range so the pipeline issues no fresh HBM fetch (Pallas
+    elides the copy when the index repeats). A window-w layer therefore
+    reads O(T * w) keys, not O(T^2);
+  * the window width is a *dynamic* scalar-prefetch operand (0 = full
+    attention) so per-layer window patterns (gemma2 local/global) pass
+    straight through the transformer's ``lax.scan`` over layers without
+    recompilation — same contract as ``paged_attention``;
+  * attention-logit softcapping (gemma2) and GQA (G = H/KV query heads
+    share one KV head) for arch coverage.
+
+Grid: ``(B, KV, Tp/block_q, Tp/block_k)`` with the key-block dimension
+innermost so the online softmax accumulates over key blocks for a fixed
+query block. ``Tp`` is T left-padded up to a block multiple — padding on
+the LEFT keeps the mask logic identical (offsets just grow), so the
+wrapper never right-pads into the causal region.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_prefill_kernel(
+    # scalar-prefetch refs
+    offsets_ref,       # [B] int32 — first valid column per lane (left pad)
+    window_ref,        # [1] int32 — sliding window (0 = full attention)
+    # inputs
+    q_ref,             # [1, bq, 1, G, hd]
+    k_ref,             # [1, bk, 1, hd]
+    v_ref,             # [1, bk, 1, hd]
+    # output
+    o_ref,             # [1, bq, 1, G, hd]
+    # scratch
+    m_scr,             # [bq*G, 1] f32
+    l_scr,             # [bq*G, 1] f32
+    acc_scr,           # [bq*G, hd] f32
+    *,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+    q_per_kv: int,
+    softcap: float,
+    scale: float,
+):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    G = q_per_kv
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    off = offsets_ref[b]
+    w = window_ref[0]
+    qs = qi * block_q
+    ks = ki * block_k
+    # live key-column range for this query block: causal upper bound is the
+    # block's last query column; lower bound is the left-pad edge, tightened
+    # by the sliding window. Blocks outside skip compute AND (via the
+    # clamped index_map) the HBM fetch.
+    lo = jnp.maximum(off, jnp.where(w > 0, qs - w + 1, 0))
+    live = (ks < qs + block_q) & (ks + block_k > lo)
+
+    @pl.when(live)
+    def _process():
+        hd = q_ref.shape[-1]
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(block_q * G, hd)
+        q = q * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq*G, bk]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        # masks in column space: padding-invariant because query and key
+        # positions shift by the same per-lane offset.
+        q_col = qs + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q * G, block_k), 0) // G
+        k_col = ks + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q * G, block_k), 1)
+        eff_w = jnp.where(w > 0, w, jnp.int32(2**30))
+        mask = (k_col <= q_col) & (k_col >= off) & ((q_col - k_col) < eff_w)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                   # [bq*G, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                                # [bq*G, bk]
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                       # [bq*G, 1]
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        hd = o_ref.shape[-1]
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, :, 0] = (acc_scr[...] / l).reshape(
+            block_q, G, hd).astype(o_ref.dtype)
+
+
+def flash_prefill(
+    q: jax.Array,            # [B, T, H, hd]
+    k: jax.Array,            # [B, T, KV, hd]
+    v: jax.Array,            # [B, T, KV, hd]
+    offsets: jax.Array,      # [B] int32 — left-pad columns (T - prompt_len)
+    *,
+    window=0,                # int or traced scalar; 0 = full attention
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns [B, T, H, hd] causal (windowed) self-attention output.
+
+    Rows in the left-pad region (column < offsets[b]) are zero — they have
+    no live keys; callers never read them (left padding puts every real
+    token at the tail).
+    """
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(int(block_q), T)
+    bk = min(int(block_k), T)
+    Tp = -(-T // math.lcm(bq, bk)) * math.lcm(bq, bk)
+    pad = Tp - T
+    if pad:
+        # pad on the LEFT: offsets grow by `pad` and every mask stays exact
+        q = jnp.pad(q, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    offs = (jnp.asarray(offsets, jnp.int32) + pad).astype(jnp.int32)
+    window_arr = jnp.reshape(jnp.asarray(window, jnp.int32), (1,))
+    qg = q.reshape(B, Tp, KV, G, hd)
+    nq, nk = Tp // bq, Tp // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_map(b, h, qi, ki, off, win):
+        return (b, qi, h, 0, 0)
+
+    def kv_map(b, h, qi, ki, off, win):
+        """Clamp dead key blocks into the live range so skipped grid steps
+        repeat the previous block index (no fresh HBM->VMEM copy)."""
+        qs = qi * bq
+        w = win[0]
+        lo = jnp.maximum(off[b], jnp.where(w > 0, qs - w + 1, 0))
+        lo_blk = jnp.maximum(lo, 0) // bk
+        hi_blk = jnp.maximum(qs + bq - 1, 0) // bk
+        return (b, jnp.clip(ki, lo_blk, hi_blk), h, 0)
+
+    def o_map(b, h, qi, ki, off, win):
+        return (b, qi, h, 0, 0)
+
+    kernel = functools.partial(
+        _flash_prefill_kernel, block_q=bq, block_k=bk, num_k_blocks=nk,
+        q_per_kv=G, softcap=float(softcap), scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, bq, 1, G, hd), q_map),
+                pl.BlockSpec((1, bk, 1, hd), kv_map),
+                pl.BlockSpec((1, bk, 1, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, bq, 1, G, hd), o_map),
+            scratch_shapes=[
+                pltpu.VMEM((bq * G, 1), jnp.float32),
+                pltpu.VMEM((bq * G, 1), jnp.float32),
+                pltpu.VMEM((bq * G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(offs, window_arr, qg, k, v)
+    out = out.reshape(B, Tp, H, hd)
+    return out[:, pad:] if pad else out

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import flash_prefill as _fp
 from repro.kernels import paged_attention as _pa
 from repro.kernels import ring_scan as _rs
 from repro.kernels import ssm_scan as _ss
@@ -34,6 +35,21 @@ def paged_attention(q, k_pages, v_pages, block_table, kv_lens, *,
         q, k_pages, v_pages, block_table, kv_lens,
         window=window, softcap=softcap, k_scale=k_scale, v_scale=v_scale,
         pages_per_block=pages_per_block, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_q", "block_k",
+                                             "interpret"))
+def flash_prefill_attention(q, k, v, offsets, *, window=0, softcap: float = 0.0,
+                            block_q: int = 128, block_k: int = 128,
+                            interpret: bool = None):
+    """Prefill flash attention over left-padded [B, T] prompts. ``window``
+    is a dynamic scalar (0 = full) so per-layer window patterns pass through
+    a ``lax.scan`` over layers; key blocks outside the causal/window range
+    skip compute and HBM fetch (clamped index map)."""
+    interp = INTERPRET if interpret is None else interpret
+    return _fp.flash_prefill(
+        q, k, v, offsets, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interp)
 
 
 @functools.partial(jax.jit,

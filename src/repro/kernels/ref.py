@@ -46,6 +46,33 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, kv_lens, *,
     return out.astype(q.dtype)
 
 
+def flash_prefill_ref(q, k, v, offsets, *, window: int = 0,
+                      softcap: float = 0.0):
+    """q: [B, T, H, hd]; k/v: [B, T, KV, hd]; offsets: [B] left-pad widths.
+
+    Dense causal (windowed) GQA over a left-padded bucket — the oracle for
+    ``kernels.flash_prefill``. Output rows in the pad region (column <
+    offsets[b]) are zeroed to match the kernel's no-live-keys convention."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(B, T, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    col = jnp.arange(T)[None, :]
+    q_col = col[:, :, None]                      # [B, Tq, 1]
+    k_col = col[:, None, :]                      # [B, 1, Tk]
+    mask = (k_col <= q_col) & (k_col >= offsets[:, None, None])
+    if window > 0:
+        mask &= (q_col - k_col) < window
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, axis=2)[:, None, None, :, None], p, 0.0)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
 def ring_scan_blocks_ref(states, arrivals, *, want_state: int,
                          block_size: int = 64):
     S = states.shape[0]

@@ -35,23 +35,28 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
                attn_pages_per_block: int = 1) -> ModelApi:
     """Build the opaque model API.
 
-    ``attn_backend`` selects the decode-attention implementation (see
-    ``repro.models.attn_backend``). Precedence: the REPRO_ATTN_BACKEND env
-    var overrides everything (including an explicit argument), then this
-    argument, then "gather". Callers serving through the engine pass
+    ``attn_backend`` selects the attention implementation for BOTH serving
+    phases (see ``repro.models.attn_backend``): the decode-attention
+    callable bound into ``decode`` and the prefill-attention callable bound
+    into ``prefill``. Precedence: the REPRO_ATTN_BACKEND env var overrides
+    everything (including an explicit argument), then this argument, then
+    "gather". Callers serving through the engine pass
     ``ServeConfig.attn_backend`` / ``ServeConfig.attn_pages_per_block``;
     the engine refuses a config/api mismatch at init.
     """
     attend = attn_backend_lib.get_backend(
         attn_backend, pages_per_block=attn_pages_per_block)
+    pre_attend = attn_backend_lib.get_prefill_backend(attn_backend)
     if cfg.is_encoder_decoder:
         train = lambda params, batch, **kw: encdec_lib.train_loss(
             params, cfg, batch, **kw)
-        pre = lambda params, *a, **kw: encdec_lib.prefill(params, cfg, *a, **kw)
+        pre = lambda params, *a, **kw: encdec_lib.prefill(
+            params, cfg, *a, prefill_attend=pre_attend, **kw)
     else:
         train = lambda params, batch, **kw: tf_lib.train_loss(
             params, cfg, batch, **kw)
-        pre = lambda params, *a, **kw: tf_lib.prefill(params, cfg, *a, **kw)
+        pre = lambda params, *a, **kw: tf_lib.prefill(
+            params, cfg, *a, prefill_attend=pre_attend, **kw)
 
     dec = lambda params, *a, **kw: tf_lib.decode(
         params, cfg, *a, attend=attend, **kw)

@@ -1,26 +1,31 @@
-"""Pluggable decode-attention backends.
+"""Pluggable attention backends for the two serving phases.
 
-The engine's per-token step attends one new query against the paged KV
-cache, once per attention layer — the hottest loop in the system. Two
-implementations are registered:
+Decode: the engine's per-token step attends one new query against the
+paged KV cache, once per attention layer — the hottest loop in the system.
+Prefill: every admitted prompt attends a whole left-padded ``[B, T]``
+bucket against itself — the TTFT-critical phase. Both phases register two
+implementations under the same names:
 
-  * ``"gather"`` — the jnp reference path: materialise the slot's whole
-    page range ``[B, max_kv, KV, hd]`` via ``cache.gather_kv`` and run
-    dense ``gqa_attend``. Per-step HBM traffic scales with ``max_kv``
-    (the provisioned maximum), not the live context. Simple, and the
-    numerical baseline the Pallas path is tested against.
-  * ``"pallas"`` — the ``kernels.paged_attention`` Pallas kernel: pages
-    stream HBM->VMEM through a scalar-prefetched block table, dead pages
-    are skipped (live-page early exit + sliding-window page skip), and
-    int8 caches dequantise fused in-VMEM. Per-step HBM traffic scales
-    with the *live* KV length — the Blink decode-throughput win.
+  * ``"gather"`` — the jnp reference paths. Decode: materialise the slot's
+    whole page range ``[B, max_kv, KV, hd]`` via ``cache.gather_kv`` and
+    run dense ``gqa_attend`` (per-step HBM traffic scales with ``max_kv``).
+    Prefill: dense ``gqa_attend`` over the bucket, which materialises a
+    full ``[B, KV, G, Tq, Tk]`` f32 logits tensor per layer (O(T^2) HBM).
+    Simple, and the numerical baseline the Pallas paths are tested against.
+  * ``"pallas"`` — the Pallas kernels. Decode: ``kernels.paged_attention``
+    (pages stream HBM->VMEM through a scalar-prefetched block table, dead
+    pages skipped, int8 dequant fused; traffic scales with the *live* KV
+    length). Prefill: ``kernels.flash_prefill`` (tiled online softmax; the
+    T x T logits never exist in HBM, key blocks outside the causal/window
+    range skip compute and fetch).
 
 Selection: ``ServeConfig.attn_backend`` (threaded through
-``models.api.make_model``), overridden by the ``REPRO_ATTN_BACKEND``
-environment variable. ``benchmarks/decode_attn.py`` quantifies the
-tradeoff.
+``models.api.make_model``, which binds the decode callable into ``decode``
+and the prefill callable into ``prefill``), overridden by the
+``REPRO_ATTN_BACKEND`` environment variable. ``benchmarks/decode_attn.py``
+and ``benchmarks/prefill_attn.py`` quantify the tradeoffs.
 
-A backend is a callable
+A decode backend is a callable
 
     attend(cfg, q, kvc, layer, slot_ids, pos, window) -> [B, 1, H, hd]
 
@@ -28,6 +33,16 @@ where ``q`` is the current token's query heads ``[B, 1, H, hd]``, ``kvc``
 the ``PagedKVCache`` (with the token's K/V already written), ``pos`` the
 per-lane cache position of that token and ``window`` a traced per-layer
 sliding-window width (0 = full attention).
+
+A prefill backend is a callable
+
+    prefill_attend(cfg, q, k, v, offset, window) -> [B, T, H, hd]
+
+over one layer's freshly projected (RoPE'd) q ``[B, T, H, hd]`` and
+k/v ``[B, T, KV, hd]`` for a LEFT-padded prompt bucket; ``offset`` [B] is
+the per-lane pad width (first valid column), ``window`` a traced scalar as
+above. Softcap comes from ``cfg.attn_softcap``. Rows in the pad region
+may be garbage — callers never read them.
 """
 from __future__ import annotations
 
@@ -42,8 +57,10 @@ from repro.models import cache as cache_lib
 from repro.models.layers import gqa_attend
 
 DecodeAttend = Callable[..., jax.Array]
+PrefillAttend = Callable[..., jax.Array]
 
 _REGISTRY: Dict[str, Callable[..., DecodeAttend]] = {}
+_PREFILL_REGISTRY: Dict[str, Callable[..., PrefillAttend]] = {}
 
 
 def register(name: str):
@@ -53,23 +70,45 @@ def register(name: str):
     return deco
 
 
+def register_prefill(name: str):
+    def deco(factory):
+        _PREFILL_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
 def available():
     return sorted(_REGISTRY)
 
 
-def get_backend(name: Optional[str] = None, *,
-                pages_per_block: int = 1) -> DecodeAttend:
-    """Resolve a decode-attention backend by name.
-
-    Resolution order: ``REPRO_ATTN_BACKEND`` env var > ``name`` argument >
+def _resolve(name: Optional[str], registry: Dict[str, Callable]) -> str:
+    """Resolution order: ``REPRO_ATTN_BACKEND`` env var > ``name`` argument >
     ``"gather"``. Raises ``KeyError`` for unknown names so a typo'd env
-    var fails loudly instead of silently serving the slow path.
-    """
+    var fails loudly instead of silently serving the slow path."""
     resolved = os.environ.get("REPRO_ATTN_BACKEND") or name or "gather"
-    if resolved not in _REGISTRY:
+    if resolved not in registry:
         raise KeyError(f"unknown attention backend {resolved!r}; "
                        f"available: {available()}")
+    return resolved
+
+
+def get_backend(name: Optional[str] = None, *,
+                pages_per_block: int = 1) -> DecodeAttend:
+    """Resolve a decode-attention backend by name (see ``_resolve``)."""
+    resolved = _resolve(name, _REGISTRY)
     fn = _REGISTRY[resolved](pages_per_block=pages_per_block)
+    fn.backend_name = resolved
+    return fn
+
+
+def get_prefill_backend(name: Optional[str] = None, *,
+                        block_q: int = 128,
+                        block_k: int = 128) -> PrefillAttend:
+    """Resolve a prefill-attention backend by name (same resolution and
+    names as ``get_backend`` — one ``ServeConfig.attn_backend`` selects
+    both phases)."""
+    resolved = _resolve(name, _PREFILL_REGISTRY)
+    fn = _PREFILL_REGISTRY[resolved](block_q=block_q, block_k=block_k)
     fn.backend_name = resolved
     return fn
 
@@ -125,3 +164,40 @@ def _make_pallas(*, pages_per_block: int = 1) -> DecodeAttend:
         return att.reshape(B, 1, cfg.num_heads, hd).astype(q.dtype)
 
     return pallas_attend
+
+
+@register_prefill("gather")
+def _make_gather_prefill(*, block_q: int = 128,
+                         block_k: int = 128) -> PrefillAttend:
+    """Reference path: dense ``gqa_attend`` over the whole bucket —
+    materialises the [B, KV, G, Tq, Tk] logits tensor (today's behavior)."""
+
+    def gather_prefill(cfg, q, k, v, offset, window):
+        B, T = q.shape[:2]
+        pos_in_seq = jnp.arange(T)[None, :] - offset[:, None]
+        kv_mask = pos_in_seq >= 0
+        positions = jnp.maximum(pos_in_seq, 0)
+        eff_window = jnp.where(window > 0, window, jnp.int32(2**30))
+        return gqa_attend(q, k, v, q_positions=positions,
+                          k_positions=positions, causal=True,
+                          window=eff_window, kv_mask=kv_mask,
+                          softcap=cfg.attn_softcap)
+
+    return gather_prefill
+
+
+@register_prefill("pallas")
+def _make_pallas_prefill(*, block_q: int = 128,
+                         block_k: int = 128) -> PrefillAttend:
+    """Hot path: the flash prefill kernel — tiled online softmax, no T x T
+    logits in HBM, causal/sliding-window key-block skip."""
+
+    def pallas_prefill(cfg, q, k, v, offset, window):
+        att = ops.flash_prefill_attention(
+            q, k, v, offset,
+            window=jnp.maximum(window, 0).astype(jnp.int32),
+            softcap=float(cfg.attn_softcap or 0.0),
+            block_q=block_q, block_k=block_k)
+        return att.astype(q.dtype)
+
+    return pallas_prefill

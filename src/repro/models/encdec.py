@@ -111,8 +111,16 @@ def _decoder_block(cfg, bp, x, positions, kv_mask, self_attend_fn,
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             lengths: jax.Array, cache: Dict[str, Any], slot_ids: jax.Array,
             active: jax.Array, frames: Optional[jax.Array] = None,
-            frame_mask: Optional[jax.Array] = None):
-    """Encode frames, prefill the decoder prompt (left-padded), fill caches."""
+            frame_mask: Optional[jax.Array] = None,
+            prefill_attend: Optional[Any] = None):
+    """Encode frames, prefill the decoder prompt (left-padded), fill caches.
+
+    Decoder self-attention runs through the pluggable ``prefill_attend``
+    backend (see ``repro.models.attn_backend``) and each layer's self-attn
+    K/V are scattered into the paged pool inside the layer scan (the cache
+    rides the carry) — no [L, B, T, KV, hd] staging buffer. Cross-attention
+    stays dense."""
+    from repro.models import attn_backend as attn_backend_lib
     B, T = tokens.shape
     if frames is None:  # smoke-test path: derive stub frames from tokens
         S_enc = cache["enc_k"].shape[2]
@@ -127,17 +135,19 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
     positions = jnp.maximum(pos_in_seq, 0)
     x = embed(params, cfg, tokens)
     x = jnp.where(kv_mask[..., None], x, 0)
+    if prefill_attend is None:
+        prefill_attend = attn_backend_lib.get_prefill_backend()
 
     def self_attend(bp, h):
         q, k, v = qkv_project(bp, cfg, h)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-        att = gqa_attend(q, k, v, q_positions=positions, k_positions=positions,
-                         causal=True, kv_mask=kv_mask)
+        att = prefill_attend(cfg, q, k, v, offset, jnp.int32(0))
         return att, (k, v)
 
-    def body(h, xs):
-        bp, mk, mv = xs
+    def body(carry, xs):
+        h, kvc = carry
+        bp, layer, mk, mv = xs
         att_and_kv = {}
 
         def fn(bp, hh):
@@ -147,17 +157,20 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
         h = _decoder_block(cfg, bp, h, positions, kv_mask, fn, mk, mv,
                            frame_mask)
-        return h, att_and_kv["kv"]
+        k_l, v_l = att_and_kv["kv"]
+        kvc = cache_lib.write_kv_layer(
+            kvc, layer, slot_ids, k_l, v_l, start_pos=-offset,
+            lengths=lengths, active=active)
+        return (h, kvc), None
 
-    h, kvs = layer_scan(body, x, (params["blocks"], mem_k, mem_v))
+    (h, kvc), _ = layer_scan(
+        body, (x, cache["kv"]),
+        (params["blocks"], jnp.arange(cfg.num_layers), mem_k, mem_v))
     h = norm(cfg, h, params.get("final_norm"))
     last_logits = unembed(params, cfg, h[:, -1:, :])[:, 0]
 
-    # store decoder self-attn KV into pages
-    from repro.models.transformer import _scatter_prompt_kv
-    cache = _scatter_prompt_kv(cfg, cache, kvs, slot_ids, active, offset,
-                               lengths)
-    cache["kv"] = cache_lib.set_seq_lens(cache["kv"], slot_ids, lengths, active)
+    cache = dict(cache)
+    cache["kv"] = cache_lib.set_seq_lens(kvc, slot_ids, lengths, active)
     # store cross K/V + encoder memory per slot
     S_enc = mem_k.shape[2]
     sel = jnp.where(active, slot_ids, cache["enc_k"].shape[1])

@@ -37,8 +37,11 @@ def expert_capacity(num_tokens: int, num_experts: int, top_k: int, factor: float
     return max(8, ((cap + 7) // 8) * 8)
 
 
-def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    """x: [B, T, D] -> [B, T, D].
+def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array,
+            return_router_logits: bool = False):
+    """x: [B, T, D] -> [B, T, D] (or (out, router_logits [B, T, E]) when
+    ``return_router_logits`` — the dispatch already computes them, so the
+    load-balance aux reuses them instead of re-running the router einsum).
 
     p keys: router [D,E], w_gate/w_up [E,D,Fe], w_down [E,Fe,D],
     optionally ws_gate/ws_up [D,Fs], ws_down [Fs,D], shared_gate [D]
@@ -58,24 +61,28 @@ def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
         # global sort — the dispatch becomes collective-free by construction
         # (same effect as shard-local dispatch, without shard_map; capacity
         # is per sequence instead of per shard).
-        inner = lambda xrow: _moe_ffn_impl(p, cfg, xrow[None])[0]
-        return jax.vmap(inner)(x)
+        inner = lambda xrow: tuple(a[0] for a in _moe_ffn_impl(p, cfg,
+                                                               xrow[None]))
+        out, rl = jax.vmap(inner)(x)
+        return (out, rl) if return_router_logits else out
     dp_env = os.environ.get("REPRO_MOE_LOCAL_DISPATCH")
     if dp_env:
         from jax.sharding import PartitionSpec as P
         dp = tuple(dp_env.split(","))
         dp_spec = dp if len(dp) > 1 else dp[0]
         inner = lambda xl, pl: _moe_ffn_impl(pl, cfg, xl)
-        return jax.shard_map(
+        out, rl = jax.shard_map(
             inner,
             in_specs=(P(dp_spec, None, None), P()),
-            out_specs=P(dp_spec, None, None),
+            out_specs=(P(dp_spec, None, None), P(dp_spec, None, None)),
             axis_names=set(dp),
             check_vma=False)(x, p)
-    return _moe_ffn_impl(p, cfg, x)
+        return (out, rl) if return_router_logits else out
+    out, rl = _moe_ffn_impl(p, cfg, x)
+    return (out, rl) if return_router_logits else out
 
 
-def _moe_ffn_impl(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+def _moe_ffn_impl(p: dict, cfg: ModelConfig, x: jax.Array):
     B, T, D = x.shape
     E, k = cfg.num_experts, cfg.top_k
     N = B * T
@@ -149,7 +156,7 @@ def _moe_ffn_impl(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
                                            p["shared_gate"].astype(jnp.float32)))
         out = out + shared * gate_s[:, None].astype(x.dtype)
 
-    return out.reshape(B, T, D)
+    return out.reshape(B, T, D), router_logits.reshape(B, T, E)
 
 
 def load_balance_loss(router_logits: jax.Array, top_k: int, num_experts: int) -> jax.Array:

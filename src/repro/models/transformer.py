@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -257,27 +257,51 @@ def window_array(cfg: ModelConfig) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+class PrefillCtx(NamedTuple):
+    """Paged-KV prefill context threaded through ``forward_hidden``.
+
+    When present, the layer scan (a) routes attention through the pluggable
+    ``attend`` prefill backend and (b) scatters each layer's K/V into the
+    paged pool *inside* the scan body (``kvc`` rides the carry) — no
+    ``[L, B, T, KV, hd]`` staging buffer, no second per-layer scatter pass.
+    """
+    kvc: Any                 # PagedKVCache, threaded through the scan carry
+    slot_ids: jax.Array      # [B]
+    active: jax.Array        # [B] bool
+    offset: jax.Array        # [B] left-pad columns (T - prompt_len)
+    lengths: jax.Array       # [B] prompt lengths
+    attend: Callable         # prefill backend (attn_backend.get_prefill_backend)
+
+
 def _dense_block(cfg: ModelConfig, bp: dict, x: jax.Array,
                  positions: jax.Array, window: jax.Array,
-                 kv_mask: jax.Array):
-    """One transformer block over [B, T, D]. Returns (x, router_aux, (k, v))."""
+                 kv_mask: jax.Array, attend: Optional[Callable] = None,
+                 offset: Optional[jax.Array] = None):
+    """One transformer block over [B, T, D]. Returns (x, router_aux, (k, v)).
+
+    ``attend``/``offset``: prefill-attention backend + left-pad widths; when
+    None (training path) the inline ``gqa_attend`` reference runs."""
     h = norm(cfg, x, bp.get("ln1"))
     q, k, v = qkv_project(bp, cfg, h)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    # window: runtime scalar; 0 means full. Encode as huge width.
-    eff_window = jnp.where(window > 0, window, jnp.int32(2**30))
-    att = gqa_attend(q, k, v, q_positions=positions, k_positions=positions,
-                     causal=True, window=eff_window, kv_mask=kv_mask,
-                     softcap=cfg.attn_softcap)
+    if attend is not None:
+        att = attend(cfg, q, k, v, offset, window)
+    else:
+        # window: runtime scalar; 0 means full. Encode as huge width.
+        eff_window = jnp.where(window > 0, window, jnp.int32(2**30))
+        att = gqa_attend(q, k, v, q_positions=positions,
+                         k_positions=positions, causal=True,
+                         window=eff_window, kv_mask=kv_mask,
+                         softcap=cfg.attn_softcap)
     x = x + attn_out(bp, att)
     h2 = norm(cfg, x, bp.get("ln2"))
     aux = jnp.float32(0)
     if cfg.num_experts:
-        y = moe_lib.moe_ffn(bp, cfg, h2)
         B, T, _ = h2.shape
-        rl = jnp.einsum("btd,de->bte", h2, bp["router"]).reshape(B * T, -1)
-        aux = moe_lib.load_balance_loss(rl, cfg.top_k, cfg.num_experts)
+        y, rl = moe_lib.moe_ffn(bp, cfg, h2, return_router_logits=True)
+        aux = moe_lib.load_balance_loss(rl.reshape(B * T, -1), cfg.top_k,
+                                        cfg.num_experts)
     else:
         y = mlp(bp, cfg, h2)
     return x + y, aux, (k, v)
@@ -285,21 +309,49 @@ def _dense_block(cfg: ModelConfig, bp: dict, x: jax.Array,
 
 def forward_hidden(params: dict, cfg: ModelConfig, x: jax.Array,
                    positions: jax.Array, kv_mask: jax.Array,
-                   *, remat: bool = False):
+                   *, remat: bool = False,
+                   prefill_ctx: Optional[PrefillCtx] = None):
     """Run the full stack over embeddings [B, T, D] (train/prefill path).
 
-    Returns (hidden [B, T, D], aux_loss, per_layer_kv or None).
+    Returns (hidden [B, T, D], aux_loss, extras).
 
-    per_layer_kv is (k, v) stacked [L, B, T, KV, hd] — collected during
-    prefill so the engine can scatter them into KV pages; pass-through of
-    the scan's ys.
+    Without ``prefill_ctx`` (training / reference forward), extras is the
+    per-layer (k, v) stacked [L, B, T, KV, hd] (pass-through of the scan's
+    ys), or SSM final states for recurrent families.
+
+    With ``prefill_ctx`` (paged-KV prefill), each layer's K/V are written
+    into the paged pool inside the scan body (``write_kv_layer``, including
+    int8 quantisation) and extras is the updated ``PagedKVCache`` (hybrid:
+    ``(ssm_final_states, PagedKVCache)``) — the [L, B, T, KV, hd] staging
+    buffer never exists.
     """
     if cfg.arch_type == "ssm":
         return _rwkv_forward(params, cfg, x, kv_mask, remat=remat)
     if cfg.arch_type == "hybrid":
-        return _hybrid_forward(params, cfg, x, positions, kv_mask, remat=remat)
+        return _hybrid_forward(params, cfg, x, positions, kv_mask,
+                               remat=remat, prefill_ctx=prefill_ctx)
 
     windows = jnp.asarray(window_array(cfg))
+
+    if prefill_ctx is not None:
+        ctx = prefill_ctx
+
+        def body_write(carry, xs):
+            h, aux, kvc = carry
+            bp, layer, window = xs
+            h, a, (k, v) = _dense_block(cfg, bp, h, positions, window,
+                                        kv_mask, attend=ctx.attend,
+                                        offset=ctx.offset)
+            kvc = cache_lib.write_kv_layer(
+                kvc, layer, ctx.slot_ids, k, v, start_pos=-ctx.offset,
+                lengths=ctx.lengths, active=ctx.active)
+            return (h, aux + a, kvc), None
+
+        fn = jax.checkpoint(body_write) if remat else body_write
+        (h, aux, kvc), _ = layer_scan(
+            fn, (x, jnp.float32(0), ctx.kvc),
+            (params["blocks"], jnp.arange(cfg.num_layers), windows))
+        return h, aux, kvc
 
     def body_collect(carry, xs):
         h, aux = carry
@@ -335,12 +387,18 @@ def _rwkv_forward(params: dict, cfg: ModelConfig, x: jax.Array,
 
 def _hybrid_forward(params: dict, cfg: ModelConfig, x: jax.Array,
                     positions: jax.Array, kv_mask: jax.Array,
-                    *, remat: bool = False, init_states: Optional[dict] = None):
+                    *, remat: bool = False, init_states: Optional[dict] = None,
+                    prefill_ctx: Optional[PrefillCtx] = None):
     """Zamba2-style stack: Mamba2 every layer, shared attention block every
-    ``attn_every`` layers. Returns (hidden, 0.0, (ssm_states, attn_kvs)).
+    ``attn_every`` layers. Returns (hidden, 0.0, (ssm_states, attn_kvs)),
+    where attn_kvs is (k, v) stacked [L, B, T, KV, hd] (zeros on non-attn
+    layers) plus the [L] attn-layer flags.
 
-    attn_kvs: (k, v) stacked [L_attn, B, T, KV, hd] for the shared-attn
-    invocations (for KV-cache scatter during prefill)."""
+    With ``prefill_ctx`` the shared-attn K/V are written straight into the
+    paged pool at cache row ``layer_idx // attn_every`` inside the scan
+    (the cond carries the cache) and the return is (hidden, 0.0,
+    (ssm_states, PagedKVCache)) — no staging, no layer_select compression
+    pass."""
     B, T, _ = x.shape
     if init_states is None:
         st = ssm_lib.mamba2_init_state(cfg, B)
@@ -348,36 +406,66 @@ def _hybrid_forward(params: dict, cfg: ModelConfig, x: jax.Array,
             lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), st)
     sp = params["shared_attn"]
     every = cfg.attn_every
+    ctx = prefill_ctx
+
+    def attn_block(h):
+        hh = norm(cfg, h, sp.get("ln1"))
+        q, k, v = qkv_project(sp, cfg, hh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if ctx is not None:
+            att = ctx.attend(cfg, q, k, v, ctx.offset, jnp.int32(0))
+        else:
+            att = gqa_attend(q, k, v, q_positions=positions,
+                             k_positions=positions, causal=True,
+                             kv_mask=kv_mask)
+        h = h + attn_out(sp, att)
+        h2 = norm(cfg, h, sp.get("ln2"))
+        return h + mlp(sp, cfg, h2), (k, v)
+
+    if ctx is not None:
+        def body_write(carry, xs):
+            h, kvc = carry
+            bp, st, layer_idx = xs
+            is_attn = (layer_idx % every) == 0
+
+            def with_attn(operand):
+                h, kvc = operand
+                h, (k, v) = attn_block(h)
+                kvc = cache_lib.write_kv_layer(
+                    kvc, layer_idx // every, ctx.slot_ids, k, v,
+                    start_pos=-ctx.offset, lengths=ctx.lengths,
+                    active=ctx.active)
+                return h, kvc
+
+            h, kvc = jax.lax.cond(is_attn, with_attn, lambda o: o, (h, kvc))
+            h, new_st = ssm_lib.mamba2_layer_seq_chunked(bp, cfg, h, st,
+                                                         kv_mask)
+            return (h, kvc), new_st
+
+        fn = jax.checkpoint(body_write) if remat else body_write
+        (h, kvc), final_states = layer_scan(
+            fn, (x, ctx.kvc),
+            (params["blocks"], init_states, jnp.arange(cfg.num_layers)))
+        return h, jnp.float32(0), (final_states, kvc)
 
     def body(h, xs):
         bp, st, layer_idx = xs
         is_attn = (layer_idx % every) == 0
-
-        def with_attn(h):
-            hh = norm(cfg, h, sp.get("ln1"))
-            q, k, v = qkv_project(sp, cfg, hh)
-            q = apply_rope(q, positions, cfg.rope_theta)
-            k = apply_rope(k, positions, cfg.rope_theta)
-            att = gqa_attend(q, k, v, q_positions=positions,
-                             k_positions=positions, causal=True,
-                             kv_mask=kv_mask)
-            h = h + attn_out(sp, att)
-            h2 = norm(cfg, h, sp.get("ln2"))
-            return h + mlp(sp, cfg, h2), (k, v)
 
         def no_attn(h):
             kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
             zeros = jnp.zeros((B, T, kv, hd), h.dtype)
             return h, (zeros, zeros)
 
-        h, (k, v) = jax.lax.cond(is_attn, with_attn, no_attn, h)
+        h, (k, v) = jax.lax.cond(is_attn, attn_block, no_attn, h)
         h, new_st = ssm_lib.mamba2_layer_seq_chunked(bp, cfg, h, st, kv_mask)
         return h, (new_st, (k, v), is_attn)
 
     fn = jax.checkpoint(body) if remat else body
     layer_idx = jnp.arange(cfg.num_layers)
     h, (final_states, kvs, attn_flags) = layer_scan(
-        body if not remat else fn, x, (params["blocks"], init_states, layer_idx))
+        fn, x, (params["blocks"], init_states, layer_idx))
     return h, jnp.float32(0), (final_states, kvs, attn_flags)
 
 
@@ -416,11 +504,18 @@ def train_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             lengths: jax.Array, cache: Dict[str, Any], slot_ids: jax.Array,
-            active: jax.Array, modal_embeds: Optional[jax.Array] = None):
+            active: jax.Array, modal_embeds: Optional[jax.Array] = None,
+            prefill_attend: Optional[Any] = None):
     """Process left-padded prompts [B, T]; fill the cache; return last logits.
 
     tokens must be LEFT-padded (lane b's prompt occupies [T-len_b, T)).
     Returns (logits [B, V] at the last prompt token, cache').
+
+    ``prefill_attend`` is a prefill-attention backend from
+    ``repro.models.attn_backend`` (None -> resolve the default:
+    REPRO_ATTN_BACKEND env var, else "gather"). K/V pages are populated
+    inside the layer scan (see ``PrefillCtx``), so no per-layer staging
+    buffer is allocated on either backend.
     """
     B, T = tokens.shape
     offset = T - lengths                                    # [B]
@@ -439,24 +534,33 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
     x = jnp.where(kv_mask[..., None], x, 0)
     positions = jnp.maximum(pos_in_seq, 0)
 
-    h, _aux, extras = forward_hidden(params, cfg, x, positions, kv_mask)
+    ctx = None
+    if cfg.uses_paged_kv:
+        if prefill_attend is None:
+            prefill_attend = attn_backend_lib.get_prefill_backend()
+        ctx = PrefillCtx(kvc=cache["kv"], slot_ids=slot_ids, active=active,
+                         offset=offset, lengths=lengths,
+                         attend=prefill_attend)
+
+    h, _aux, extras = forward_hidden(params, cfg, x, positions, kv_mask,
+                                     prefill_ctx=ctx)
     h = norm(cfg, h, params.get("final_norm"))
     last_logits = unembed(params, cfg, h[:, -1:, :])[:, 0]
 
-    # scatter cache state
+    # store cache state (K/V pages were already written inside the scan)
     if cfg.arch_type == "ssm":
-        final_states = extras
-        cache = _store_ssm_states(cache, final_states, slot_ids, active)
+        cache = _store_ssm_states(cache, extras, slot_ids, active)
     elif cfg.arch_type == "hybrid":
-        final_states, kvs, attn_flags = extras
-        cache = _store_ssm_states(cache, final_states, slot_ids, active)
-        cache = _scatter_prompt_kv(
-            cfg, cache, kvs, slot_ids, active, offset, lengths,
-            layer_select=attn_flags)
+        if ctx is not None:
+            final_states, kvc = extras
+            cache = _store_ssm_states(dict(cache, kv=kvc), final_states,
+                                      slot_ids, active)
+        else:  # attn-free hybrid (attn_every == 0): recurrent state only
+            final_states = extras[0]
+            cache = _store_ssm_states(cache, final_states, slot_ids, active)
     else:
-        kvs = extras
-        cache = _scatter_prompt_kv(cfg, cache, kvs, slot_ids, active,
-                                   offset, lengths)
+        cache = dict(cache)
+        cache["kv"] = extras
     if cfg.uses_paged_kv:
         cache["kv"] = cache_lib.set_seq_lens(
             cache["kv"], slot_ids, lengths, active)
@@ -476,39 +580,6 @@ def _store_ssm_states(cache, final_states, slot_ids, active):
 
     cache = dict(cache)
     cache["ssm"] = jax.tree.map(scatter, cache["ssm"], final_states)
-    return cache
-
-
-def _scatter_prompt_kv(cfg, cache, kvs, slot_ids, active, offset, lengths,
-                       layer_select=None):
-    """kvs: (k, v) each [L, B, T, KV, hd] (L = num_layers). For hybrid,
-    layer_select [L] bool marks shared-attn layers; only those map to the
-    L_attn cache rows."""
-    k_all, v_all = kvs
-    kvc = cache["kv"]
-    if layer_select is not None:
-        # compress selected layers into the first L_attn rows
-        idx = jnp.cumsum(layer_select.astype(jnp.int32)) - 1   # [L]
-        L_attn = kvc.k_pages.shape[0]
-        sel_rows = jnp.where(layer_select, idx, L_attn)        # OOB -> drop
-        k_sel = jnp.zeros((L_attn + 1,) + k_all.shape[1:], k_all.dtype)
-        k_sel = k_sel.at[sel_rows].set(k_all)[:L_attn]
-        v_sel = jnp.zeros((L_attn + 1,) + v_all.shape[1:], v_all.dtype)
-        v_sel = v_sel.at[sel_rows].set(v_all)[:L_attn]
-        k_all, v_all = k_sel, v_sel
-
-    L = k_all.shape[0]
-
-    def body(kvc, xs):
-        layer, k_l, v_l = xs
-        kvc = cache_lib.write_kv_layer(
-            kvc, layer, slot_ids, k_l, v_l,
-            start_pos=-offset, lengths=lengths, active=active)
-        return kvc, None
-
-    kvc, _ = layer_scan(body, kvc, (jnp.arange(L), k_all, v_all))
-    cache = dict(cache)
-    cache["kv"] = kvc
     return cache
 
 

@@ -222,3 +222,80 @@ def test_ssd_kernel_matches_model_chunked_form():
     y_j, h_j = ref.ssd_chunk_scan_ref(x, B_in, C_in, dt, A, h0, chunk=8)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_j), atol=1e-4)
     np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_j), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash prefill attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,KV,G,hd,bq,bk", [
+    (2, 16, 2, 2, 16, 128, 128),    # blocks clamp to T
+    (3, 24, 2, 4, 32, 8, 8),        # multi-block
+    (2, 20, 1, 2, 16, 8, 16),       # T not a block multiple -> left pad
+    (1, 7, 1, 1, 8, 4, 4),          # odd everything
+])
+def test_flash_prefill_matches_reference(B, T, KV, G, hd, bq, bk):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (B, T, KV * G, hd), jnp.float32)
+    k = jax.random.normal(keys[1], (B, T, KV, hd), jnp.float32)
+    v = jax.random.normal(keys[2], (B, T, KV, hd), jnp.float32)
+    offs = jnp.asarray(np.random.default_rng(1).integers(0, T, B), jnp.int32)
+    out = ops.flash_prefill_attention(q, k, v, offs, block_q=bq, block_k=bk)
+    expect = ref.flash_prefill_ref(q, k, v, offs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (5, 0.0), (0, 20.0),
+                                            (9, 20.0)])
+def test_flash_prefill_window_softcap(window, softcap):
+    B, T, KV, G, hd = 2, 32, 2, 2, 16
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (B, T, KV * G, hd), jnp.float32)
+    k = jax.random.normal(keys[1], (B, T, KV, hd), jnp.float32)
+    v = jax.random.normal(keys[2], (B, T, KV, hd), jnp.float32)
+    offs = jnp.array([0, 13], jnp.int32)
+    out = ops.flash_prefill_attention(q, k, v, offs, window=window,
+                                      softcap=softcap, block_q=8, block_k=8)
+    expect = ref.flash_prefill_ref(q, k, v, offs, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_flash_prefill_dynamic_window_scans_over_layers():
+    """The window is a traced scalar: a lax.scan over per-layer widths must
+    produce per-layer results matching per-layer references (the gemma2
+    local/global pattern through one compiled kernel)."""
+    B, T, KV, G, hd = 2, 16, 1, 2, 16
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(keys[0], (B, T, KV * G, hd), jnp.float32)
+    k = jax.random.normal(keys[1], (B, T, KV, hd), jnp.float32)
+    v = jax.random.normal(keys[2], (B, T, KV, hd), jnp.float32)
+    offs = jnp.array([0, 5], jnp.int32)
+    windows = jnp.array([0, 4, 7], jnp.int32)
+
+    def body(_, w):
+        return None, ops.flash_prefill_attention(q, k, v, offs, window=w,
+                                                 block_q=8, block_k=8)
+
+    _, outs = jax.lax.scan(body, None, windows)
+    for i, w in enumerate([0, 4, 7]):
+        expect = ref.flash_prefill_ref(q, k, v, offs, window=w)
+        np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(expect),
+                                   atol=1e-5)
+
+
+def test_flash_prefill_fully_padded_lane_is_finite():
+    """offset == T (no valid tokens, e.g. an inactive engine lane) must
+    yield zeros, not NaN, and not perturb sibling lanes."""
+    B, T, KV, G, hd = 2, 8, 1, 1, 8
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(keys[0], (B, T, KV * G, hd), jnp.float32)
+    k = jax.random.normal(keys[1], (B, T, KV, hd), jnp.float32)
+    v = jax.random.normal(keys[2], (B, T, KV, hd), jnp.float32)
+    offs = jnp.array([T, 0], jnp.int32)
+    out = ops.flash_prefill_attention(q, k, v, offs, block_q=4, block_k=4)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out[0]), 0.0, atol=1e-6)
+    expect = ref.flash_prefill_ref(q, k, v, offs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)

@@ -1,0 +1,205 @@
+"""Prefill-attention backend equivalence + memory-shape guarantees.
+
+The flash prefill path ("pallas") must match the dense gqa_attend reference
+("gather") over left-padded ragged batches across every paged-KV family —
+and, by construction of the in-scan KV writes, neither backend may allocate
+the [L, B, T, KV, hd] staging buffer; the pallas backend must additionally
+never materialise the [B, KV, G, Tq, Tk] logits tensor (asserted by walking
+the prefill jaxpr)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import TINY_ARCHS
+from repro.models import attn_backend
+from repro.models import transformer as tf_lib
+from repro.models.api import cache_for_serve, make_model
+
+# dense GQA / softcap + local-global / SWA + MoE / hybrid shared attention /
+# encoder-decoder — every prefill path that fills a paged KV cache.
+PREFILL_ARCHS = ["qwen2-1.5b", "gemma2-9b", "mixtral-8x7b", "zamba2-2.7b",
+                 "seamless-m4t-medium"]
+
+
+def _serve(**kw):
+    base = dict(num_slots=4, max_prompt_len=16, max_new_tokens=8,
+                page_size=4, num_pages=64)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _ragged_prefill_inputs(cfg, serve, lens=(6, 11, 3), seed=5):
+    """Left-padded [B, T] prompts with distinct lengths + a wired cache."""
+    B, T = len(lens), serve.max_prompt_len
+    rng = np.random.default_rng(seed)
+    prompt = np.zeros((B, T), np.int32)
+    for b, n in enumerate(lens):
+        prompt[b, T - n:] = rng.integers(3, cfg.vocab_size, n)
+    slot_ids = jnp.arange(B)
+    active = jnp.ones((B,), bool)
+    return (jnp.asarray(prompt), jnp.asarray(lens, jnp.int32), slot_ids,
+            active)
+
+
+def _wired_cache(api, serve, B, kv_dtype=None, enc_len=0):
+    cache = cache_for_serve(api, _serve(kv_cache_dtype=kv_dtype),
+                            enc_len=enc_len)
+    if "kv" in cache:
+        ppr = serve.pages_per_req
+        bt = np.full((serve.num_slots, ppr), -1, np.int32)
+        for b in range(B):
+            bt[b] = np.arange(b * ppr, (b + 1) * ppr)
+        cache["kv"] = dataclasses.replace(cache["kv"],
+                                          block_table=jnp.asarray(bt))
+    return cache
+
+
+@pytest.mark.parametrize("name", PREFILL_ARCHS)
+def test_prefill_logits_close_across_backends(name):
+    """Ragged left-padded prefill: flash logits match the gather reference
+    within the decode-equivalence tolerance."""
+    cfg = TINY_ARCHS[name].replace(dtype="float32")
+    serve = _serve()
+    enc_len = 8 if cfg.is_encoder_decoder else 0
+    api_g = make_model(cfg, attn_backend="gather")
+    api_p = make_model(cfg, attn_backend="pallas")
+    params = api_g.init_params(jax.random.PRNGKey(0))
+    prompt, lens, slots, active = _ragged_prefill_inputs(cfg, serve)
+    cache_g = _wired_cache(api_g, serve, 3, enc_len=enc_len)
+    cache_p = _wired_cache(api_p, serve, 3, enc_len=enc_len)
+    lg, cache_g = api_g.prefill(params, prompt, lens, cache_g, slots, active)
+    lp, cache_p = api_p.prefill(params, prompt, lens, cache_p, slots, active)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lp), atol=1e-4)
+    # both backends write the same pages through the same in-scan path
+    np.testing.assert_array_equal(np.asarray(cache_g["kv"].seq_lens),
+                                  np.asarray(cache_p["kv"].seq_lens))
+
+
+@pytest.mark.parametrize("name,kv_dtype,atol", [
+    ("qwen2-1.5b", None, 1e-4),
+    ("gemma2-9b", None, 2e-4),          # softcap + local/global windows
+    ("zamba2-2.7b", None, 1e-4),        # hybrid: shared-attn rows only
+    ("qwen2-1.5b", "int8", 5e-2),       # quantised pool, written in-scan
+])
+def test_decode_after_flash_prefill_consistent(name, kv_dtype, atol):
+    """End-to-end: prefill + 3 decode steps all-pallas vs all-gather — the
+    flash-prefilled cache must serve identical decodes."""
+    cfg = TINY_ARCHS[name].replace(dtype="float32")
+    serve = _serve(kv_cache_dtype=kv_dtype)
+    api_g = make_model(cfg, attn_backend="gather")
+    api_p = make_model(cfg, attn_backend="pallas")
+    params = api_g.init_params(jax.random.PRNGKey(0))
+    prompt, lens, slots, active = _ragged_prefill_inputs(cfg, serve)
+    rng = np.random.default_rng(9)
+    next_toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (3, 3)),
+                            jnp.int32)
+
+    def run(api):
+        cache = _wired_cache(api, serve, 3, kv_dtype)
+        lg, cache = api.prefill(params, prompt, lens, cache, slots, active)
+        outs = [lg]
+        for i in range(3):
+            lg, cache = api.decode(params, next_toks[:, i], cache, slots,
+                                   active)
+            outs.append(lg)
+        return np.asarray(jnp.stack(outs))
+
+    np.testing.assert_allclose(run(api_g), run(api_p), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Memory-shape guarantees (the tentpole's acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _prefill_shapes(api, params, serve, cache, prompt, lens, slots, active):
+    """All intermediate array shapes in the jitted prefill computation."""
+    from repro.jaxpr_inspect import intermediate_shapes
+    return intermediate_shapes(
+        lambda p, t, l, c: api.prefill(p, t, l, c, slots, active),
+        params, prompt, lens, cache)
+
+
+@pytest.mark.parametrize("backend", ["gather", "pallas"])
+def test_prefill_allocates_no_staging_and_flash_no_logits(backend):
+    cfg = TINY_ARCHS["qwen2-1.5b"].replace(dtype="float32")
+    serve = _serve()
+    api = make_model(cfg, attn_backend=backend)
+    params = api.init_params(jax.random.PRNGKey(0))
+    prompt, lens, slots, active = _ragged_prefill_inputs(cfg, serve)
+    cache = _wired_cache(api, serve, 3)
+    shapes = _prefill_shapes(api, params, serve, cache, prompt, lens, slots,
+                             active)
+    B, T = prompt.shape
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = cfg.num_heads // KV
+    staging = (L, B, T, KV, hd)
+    logits = (B, KV, G, T, T)
+    # in-scan KV writes: the per-layer staging buffer exists on NO backend
+    assert staging not in shapes, \
+        f"[L,B,T,KV,hd] staging buffer {staging} allocated"
+    if backend == "gather":
+        # sanity: the detector actually sees the dense logits tensor
+        assert logits in shapes
+    else:
+        assert logits not in shapes, \
+            f"[B,KV,G,Tq,Tk] logits tensor {logits} allocated by flash"
+
+
+# ---------------------------------------------------------------------------
+# Backend plumbing + satellites
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_env_override_and_unknown_name(monkeypatch):
+    monkeypatch.setenv("REPRO_ATTN_BACKEND", "pallas")
+    assert attn_backend.get_prefill_backend("gather").backend_name == "pallas"
+    monkeypatch.delenv("REPRO_ATTN_BACKEND")
+    assert attn_backend.get_prefill_backend().backend_name == "gather"
+    with pytest.raises(KeyError):
+        attn_backend.get_prefill_backend("flashinfer")
+
+
+def test_hybrid_remat_matches_plain():
+    """The checkpointed hybrid scan path (remat=True) must agree with the
+    plain path — it used to be silently unexercised by the `body if not
+    remat else fn` binding."""
+    cfg = TINY_ARCHS["zamba2-2.7b"].replace(dtype="float32")
+    api = make_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    B, T = 2, 8
+    rng = np.random.default_rng(2)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(3, cfg.vocab_size, (B, T))),
+        "labels": jnp.asarray(rng.integers(3, cfg.vocab_size, (B, T))),
+        "mask": jnp.ones((B, T), bool),
+    }
+    loss_plain, _ = tf_lib.train_loss(params, cfg, batch, remat=False)
+    loss_remat, _ = tf_lib.train_loss(params, cfg, batch, remat=True)
+    assert np.isfinite(float(loss_remat))
+    np.testing.assert_allclose(float(loss_plain), float(loss_remat),
+                               rtol=1e-5)
+
+
+def test_moe_ffn_router_logits_consistent():
+    """moe_ffn(return_router_logits=True) must return the same output as the
+    plain call plus router logits equal to x @ router (shared with the
+    load-balance aux instead of a second einsum)."""
+    from repro.models import moe as moe_lib
+    cfg = TINY_ARCHS["mixtral-8x7b"].replace(dtype="float32")
+    api = make_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    bp = jax.tree.map(lambda a: a[0], params["blocks"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    out_plain = moe_lib.moe_ffn(bp, cfg, x)
+    out, rl = moe_lib.moe_ffn(bp, cfg, x, return_router_logits=True)
+    np.testing.assert_allclose(np.asarray(out_plain), np.asarray(out))
+    expect_rl = jnp.einsum("btd,de->bte", x, bp["router"])
+    np.testing.assert_allclose(np.asarray(rl), np.asarray(expect_rl),
+                               atol=1e-5)
+    assert rl.shape == (2, 8, cfg.num_experts)
