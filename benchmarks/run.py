@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
   kernels              §4.2    Pallas kernels vs oracles
   decode_attn          §4.2    decode attention backends: gather vs pallas
   prefill_attn         §4.2    prefill attention backends: gather vs flash
+  prefix_cache         §4.2    radix prefix reuse: hit rate vs TTFT / pages
   roofline             (g)     dry-run roofline table
 
 REPRO_BENCH_SMOKE=1 shrinks the attention-backend sweeps to one tiny point
@@ -22,8 +23,8 @@ import time
 import traceback
 
 from benchmarks import (decode_attn, fig3_makespan, fig4_tokenizer,
-                        fig8_energy, kernels, prefill_attn, roofline,
-                        table6_presaturation, table7_interference)
+                        fig8_energy, kernels, prefill_attn, prefix_cache,
+                        roofline, table6_presaturation, table7_interference)
 from benchmarks.common import emit
 
 MODULES = [
@@ -31,6 +32,7 @@ MODULES = [
     ("kernels", kernels),
     ("decode_attn", decode_attn),
     ("prefill_attn", prefill_attn),
+    ("prefix_cache", prefix_cache),
     ("fig3_makespan", fig3_makespan),
     ("table6_presaturation", table6_presaturation),
     ("table7_interference", table7_interference),

@@ -159,6 +159,23 @@ class ServeConfig:
     attn_backend: str = "gather"
     attn_pages_per_block: int = 1       # pallas: KV pages per grid step
     kv_cache_dtype: Optional[str] = None  # e.g. "int8" (None = model dtype)
+    # flash-prefill tile sizes (ROADMAP follow-up): forwarded to
+    # make_model(prefill_block_q=..., prefill_block_k=...) by callers and
+    # validated there (attn_backend.get_prefill_backend) at model-build time.
+    prefill_block_q: int = 128
+    prefill_block_k: int = 128
+    # device-resident prefix KV cache (radix prefix reuse). When enabled the
+    # frontend matches prompts against a DPU-plane radix trie
+    # (frontend.prefix_index), shared prefix pages are refcounted in the
+    # PageAllocator, admission allocates suffix pages only, and page release
+    # moves from the decode branch to the frontend's slot-release path (the
+    # trie must index freshly prefilled pages before they can be freed).
+    prefix_cache: bool = False
+    # evict LRU zero-external-ref trie chains when the free-page count drops
+    # below this watermark. Independently of the watermark, both engines
+    # always evict enough for the largest ring-pending admission (the
+    # starvation fallback) — 0 means evict ONLY in that starving case.
+    prefix_evict_watermark: int = 0
 
     @property
     def max_seq(self) -> int:

@@ -39,6 +39,23 @@ way). The ``REPRO_ATTN_BACKEND`` env var overrides both.
 ``ServeConfig.kv_cache_dtype = "int8"`` serves a quantised KV pool; the
 pallas decode backend dequantises fused in-kernel and prefill writes
 quantise inside the scan via ``cache.write_kv_layer``.
+
+Prefix plane (``ServeConfig.prefix_cache``), mapped onto the paper's
+Fig. 2 DPU/GPU split: the radix prefix index
+(``frontend.prefix_index.PrefixIndex``) is request-metadata-only state, so
+it lives on the DPU plane next to the tokenizer (②) — matching happens at
+submission (③), before the one-sided ring write (⑤), and stamps
+``cached_len`` + the shared page chain into the slot's ring metadata. The
+GPU plane stays CPU-free: at admission the engine wires the shared pages
+into the block table, allocates SUFFIX pages only (the admission gate
+likewise charges only the suffix), and runs a suffix-only prefill whose
+attention folds the cached prefix in from the paged pool (the prefix-aware
+flash kernel / gather reference). Page lifetime is arbitrated by per-page
+refcounts inside ``PageAllocator``: slots and the trie co-own shared
+pages, and release moves from the decode branch to the frontend's
+slot-drain path (⑪→⑬) so freshly prefilled prefixes are indexed before
+they can be freed; LRU eviction of zero-ref chains under page
+backpressure happens on the same DPU plane, between windows.
 """
 from __future__ import annotations
 
@@ -85,12 +102,29 @@ def _check_attn_backend(api: ModelApi, serve: ServeConfig) -> None:
             f"ServeConfig.attn_backend={serve.attn_backend!r} but the model "
             f"api was built with {api.attn_backend!r}; pass "
             f"make_model(cfg, attn_backend=serve.attn_backend, "
-            f"attn_pages_per_block=serve.attn_pages_per_block)")
+            f"attn_pages_per_block=serve.attn_pages_per_block, "
+            f"prefill_block_q=serve.prefill_block_q, "
+            f"prefill_block_k=serve.prefill_block_k)")
+
+
+def _check_prefix_cache(api: ModelApi, serve: ServeConfig) -> None:
+    """Prefix reuse restores context from paged KV alone; recurrent state
+    (SSM/hybrid) and per-slot dense cross-attention K/V (enc-dec) cannot be
+    rebuilt from shared pages — refuse at init instead of serving garbage."""
+    if not serve.prefix_cache:
+        return
+    cfg = api.cfg
+    if (cfg.arch_type not in ("dense", "moe", "vlm")
+            or cfg.is_encoder_decoder or not cfg.uses_paged_kv):
+        raise ValueError(
+            f"ServeConfig.prefix_cache requires a paged-KV decoder-only "
+            f"attention arch; {cfg.name!r} is {cfg.arch_type!r}")
 
 
 def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
                       enc_len: int = 0) -> EngineState:
     _check_attn_backend(api, serve)
+    _check_prefix_cache(api, serve)
     cache = cache_for_serve(api, serve, enc_len=enc_len)
     return EngineState(
         ring=rb.make_ring(serve),
@@ -128,7 +162,8 @@ def select_pending_fcfs(ring: rb.RingState, max_admit: int):
 
 
 def _left_pad_prompts(ring: rb.RingState, slots: jax.Array,
-                      bucket: Optional[int] = None):
+                      bucket: Optional[int] = None,
+                      start: Optional[jax.Array] = None):
     """Gather [A, bucket] prompts, left-padded (right-aligned).
 
     ``bucket`` < max_prompt_len realizes the paper's CUDA-graph-cache shape
@@ -136,13 +171,18 @@ def _left_pad_prompts(ring: rb.RingState, slots: jax.Array,
     prompts don't pay max-shape compute. Prompts longer than the bucket are
     the caller's responsibility (WindowCache routes them to a bigger
     executable; the max-shape window is the paper's fallback graph).
+
+    ``start`` [A]: skip each slot's first ``start`` prompt tokens (the
+    cached prefix) — the gathered bucket then holds only the suffix.
     """
     rows = ring.input_arena[slots]                    # [A, P] left-aligned
     A, P = rows.shape
     B = bucket or P
-    lens = jnp.minimum(ring.prompt_len[slots], B)
-    src = jnp.arange(B)[None, :] - (B - lens)[:, None]  # [A, B]
-    valid = src >= 0
+    st = jnp.zeros((A,), jnp.int32) if start is None else start
+    lens = jnp.minimum(ring.prompt_len[slots] - st, B)
+    col = jnp.arange(B)[None, :]
+    src = col - (B - lens)[:, None] + st[:, None]       # [A, B]
+    valid = col >= (B - lens)[:, None]
     gathered = jnp.take_along_axis(rows, jnp.clip(src, 0, P - 1), axis=1)
     return jnp.where(valid, gathered, 0), lens
 
@@ -156,6 +196,37 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
     ps = serve.page_size
     ppr = serve.pages_per_req
     paged = cfg.uses_paged_kv
+    use_prefix = serve.prefix_cache
+
+    def suffix_pages_needed(ring, cand):
+        """Pages a candidate still needs: lifetime total minus its cached
+        prefix pages (0 cached = the full formula — one code path)."""
+        total = cache_lib.pages_needed(ring.prompt_len[cand],
+                                       ring.max_new[cand], ps)
+        if not use_prefix:
+            return total
+        return jnp.maximum(total - ring.cached_len[cand] // ps, 0)
+
+    def free_done_rows(alloc, block_table, slots, done):
+        """Release the block-table rows of ``done`` slots (one allocator ref
+        per page) and clear them — shared by the prefill branch (max_new==1
+        completions) and the decode branch."""
+        S = block_table.shape[0]
+
+        def free_one(carry, xs):
+            alloc, block_table = carry
+            slot, is_done = xs
+            row = block_table[jnp.clip(slot, 0, S - 1)]
+            alloc2 = cache_lib.free_pages(alloc, row)
+            alloc = jax.tree.map(
+                lambda a, b: jnp.where(is_done, b, a), alloc, alloc2)
+            block_table = block_table.at[
+                jnp.where(is_done, slot, S)].set(-1, mode="drop")
+            return (alloc, block_table), None
+
+        (alloc, block_table), _ = jax.lax.scan(
+            free_one, (alloc, block_table), (slots, done))
+        return alloc, block_table
 
     def prefill_branch(params, state: EngineState, cand, cand_valid):
         ring, cache, alloc = state.ring, state.cache, state.alloc
@@ -174,10 +245,10 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         lane_free = state.lane_slot[lanes] < 0
         admit = cand_valid & lane_free
 
-        # page allocation: all-or-nothing per request (backpressure)
+        # page allocation: all-or-nothing per request (backpressure),
+        # charging only the SUFFIX beyond a cached prefix
         if paged:
-            need = cache_lib.pages_needed(ring.prompt_len[cand],
-                                          ring.max_new[cand], ps)
+            need = suffix_pages_needed(ring, cand)
 
             def alloc_one(carry, xs):
                 alloc, = carry
@@ -191,18 +262,40 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             (alloc,), (page_rows, alloc_ok) = jax.lax.scan(
                 alloc_one, (alloc,), (need, admit))
             admit = admit & alloc_ok
+            if use_prefix:
+                # block-table row = shared prefix chain (frontend-owned
+                # refs, read-only) followed by the freshly allocated
+                # suffix pages shifted past it
+                cached_pages = ring.cached_len[cand] // ps      # [A]
+                blk = jnp.arange(ppr)[None, :]
+                shift = blk - cached_pages[:, None]
+                suffix_rows = jnp.where(
+                    shift >= 0,
+                    jnp.take_along_axis(page_rows,
+                                        jnp.clip(shift, 0, ppr - 1), axis=1),
+                    -1)
+                page_rows = jnp.where(blk < cached_pages[:, None],
+                                      ring.shared_pages[cand], suffix_rows)
             kvc = cache["kv"]
             sel = jnp.where(admit, cand, kvc.block_table.shape[0])
             block_table = kvc.block_table.at[sel].set(page_rows, mode="drop")
             cache = dict(cache, kv=dataclasses.replace(
                 kvc, block_table=block_table))
 
-        # run the (max-shape) prefill for admitted requests
-        prompts, lens = _left_pad_prompts(ring, cand, prompt_bucket)
+        # run the (max-shape) prefill for admitted requests — suffix-only
+        # when a cached prefix is present
+        cached = ring.cached_len[cand] if use_prefix else None
+        prompts, lens = _left_pad_prompts(ring, cand, prompt_bucket,
+                                          start=cached)
         mark = jnp.where(admit, cand, ring.num_slots)
         ring_states = ring_states.at[mark].set(rb.PREFILL_PROCESSING,
                                                mode="drop")
-        logits, cache = api.prefill(params, prompts, lens, cache, cand, admit)
+        if use_prefix:
+            logits, cache = api.prefill(params, prompts, lens, cache, cand,
+                                        admit, cached_lens=cached)
+        else:
+            logits, cache = api.prefill(params, prompts, lens, cache, cand,
+                                        admit)
 
         # first-token sampling (on-device, per-slot temperature)
         tok = sample_tokens(state.key, logits.astype(jnp.float32),
@@ -221,6 +314,15 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         new_state_code = jnp.where(done, rb.DECODE_COMPLETED,
                                    rb.DECODE_PROCESSING)
         ring_states = ring_states.at[mark].set(new_state_code, mode="drop")
+
+        # free prefill-completed requests' pages right here — they never
+        # occupy a decode lane, so the decode branch's free pass would
+        # never see them (under prefix_cache release is the frontend's)
+        if paged and not use_prefix:
+            alloc, block_table = free_done_rows(
+                alloc, cache["kv"].block_table, cand, done)
+            cache = dict(cache, kv=dataclasses.replace(
+                cache["kv"], block_table=block_table))
 
         # resume paused decode lanes
         ring_states = ring_states.at[safe_lane_slots].set(
@@ -267,25 +369,13 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
                                          ].set(rb.DECODE_COMPLETED,
                                                mode="drop")
 
-        # free KV pages of finished requests (device-side page management)
-        if paged:
-            kvc = cache["kv"]
-            block_table = kvc.block_table
-
-            def free_one(carry, xs):
-                alloc, block_table = carry
-                slot, is_done = xs
-                row = block_table[slot]
-                alloc2 = cache_lib.free_pages(alloc, row)
-                alloc = jax.tree.map(
-                    lambda a, b: jnp.where(is_done, b, a), alloc, alloc2)
-                block_table = block_table.at[
-                    jnp.where(is_done, slot, block_table.shape[0])
-                ].set(-1, mode="drop")
-                return (alloc, block_table), None
-
-            (alloc, block_table), _ = jax.lax.scan(
-                free_one, (alloc, block_table), (slots, done))
+        # free KV pages of finished requests (device-side page management).
+        # Under prefix_cache release is DEFERRED to the frontend's slot
+        # drain: the trie must index freshly prefilled prefix pages (taking
+        # its reference) before the slot's references are dropped.
+        if paged and not use_prefix:
+            alloc, block_table = free_done_rows(
+                alloc, cache["kv"].block_table, slots, done)
             cache = dict(cache, kv=dataclasses.replace(
                 cache["kv"], block_table=block_table))
 
@@ -308,8 +398,7 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         # paged configs — SSM archs admit on lane capacity alone.
         n_free = jnp.sum(state.lane_slot < 0)
         if paged:
-            need = cache_lib.pages_needed(state.ring.prompt_len[cand],
-                                          state.ring.max_new[cand], ps)
+            need = suffix_pages_needed(state.ring, cand)
             running = state.alloc.top
         count = jnp.int32(0)
         gated = []
@@ -420,7 +509,10 @@ class WindowCache:
         return self._fns[self.buckets[-1]]
 
     def max_pending_len(self, ring: rb.RingState) -> int:
+        """Longest pending prefill SUFFIX (prompt minus its cached prefix) —
+        with prefix reuse a long shared-prompt request still fits the small
+        bucket, which is where the TTFT win materialises."""
         states = np.asarray(ring.slot_state)
-        lens = np.asarray(ring.prompt_len)
+        lens = np.asarray(ring.prompt_len) - np.asarray(ring.cached_len)
         pend = lens[states == rb.PREFILL_PENDING]
         return int(pend.max()) if pend.size else 0

@@ -5,8 +5,10 @@ admission, batching and page allocation happen in Python/NumPy; sampled
 tokens are copied device->host every step (the PCIe round-trip of Fig. 3's
 CPU-resident scheduler); the next step is dispatched from the host.
 
-The scheduling *policy* (FCFS, admission conditions, page accounting) is
-identical to ``repro.core.engine`` — the paper's controlled-comparison
+The scheduling *policy* (FCFS, admission conditions, page accounting — and,
+when ``ServeConfig.prefix_cache`` is on, radix prefix matching, refcounted
+page sharing, suffix-only admission/prefill, trie commit and LRU eviction)
+is identical to ``repro.core.engine`` — the paper's controlled-comparison
 requirement ("identical scheduling policy", §4.2) — so benchmark deltas
 isolate WHERE control runs, not WHAT it decides.
 
@@ -28,6 +30,7 @@ import numpy as np
 from repro.configs.base import ServeConfig
 from repro.core import ring_buffer as rb
 from repro.core.sampling import sample_tokens
+from repro.frontend.prefix_index import PrefixIndex
 from repro.models.api import ModelApi, cache_for_serve
 
 
@@ -42,6 +45,9 @@ class HostEngine:
         self.cache = cache_for_serve(api, serve, enc_len=enc_len)
         self._enc_len = enc_len
         self.paged = api.cfg.uses_paged_kv
+        if serve.prefix_cache:
+            from repro.core.engine import _check_prefix_cache
+            _check_prefix_cache(api, serve)
         S = serve.num_slots
         # host-side scheduling state (the CPU-resident control plane)
         self.slot_state = np.zeros(S, np.int32)
@@ -53,7 +59,12 @@ class HostEngine:
         self.temperature = np.zeros(S, np.float32)
         self.outputs: List[List[int]] = [[] for _ in range(S)]
         self.free_pages = list(range(serve.num_pages - 1, -1, -1))
+        self.refcount = np.zeros(serve.num_pages, np.int32)
         self.slot_pages: Dict[int, List[int]] = {}
+        # prefix plane (identical policy to the device engine's frontend)
+        self.prefix = PrefixIndex(serve.page_size) if serve.prefix_cache \
+            else None
+        self.slot_cached = np.zeros(S, np.int32)
         self.lane_slot = np.full(serve.decode_batch, -1, np.int32)
         self.key = jax.random.PRNGKey(seed)
         self.step_count = 0
@@ -65,10 +76,11 @@ class HostEngine:
         # jitted compute steps (the GPU work; CUDA-graph analogue)
         cfg = api.cfg
 
-        def _prefill(params, prompts, lens, cache, slots, active, key, step):
+        def _prefill(params, prompts, lens, cached, cache, slots, active,
+                     temps, key, step):
+            kw = {} if cached is None else {"cached_lens": cached}
             logits, cache = api.prefill(params, prompts, lens, cache, slots,
-                                        active)
-            temps = jnp.zeros((prompts.shape[0],), jnp.float32)
+                                        active, **kw)
             tok = sample_tokens(key, logits.astype(jnp.float32), temps,
                                 top_p=serve.top_p, slot_ids=slots, step=step)
             return tok, cache
@@ -79,7 +91,7 @@ class HostEngine:
                                 top_p=serve.top_p, slot_ids=slots, step=step)
             return tok, cache
 
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=(3,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(4,))
         self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
 
     def reset(self, seed: int = 0) -> None:
@@ -97,7 +109,11 @@ class HostEngine:
         self.temperature = np.zeros(S, np.float32)
         self.outputs = [[] for _ in range(S)]
         self.free_pages = list(range(serve.num_pages - 1, -1, -1))
+        self.refcount = np.zeros(serve.num_pages, np.int32)
         self.slot_pages = {}
+        self.prefix = PrefixIndex(serve.page_size) if serve.prefix_cache \
+            else None
+        self.slot_cached = np.zeros(S, np.int32)
         self.lane_slot = np.full(serve.decode_batch, -1, np.int32)
         self.key = jax.random.PRNGKey(seed)
         self.step_count = 0
@@ -118,6 +134,16 @@ class HostEngine:
         self.temperature[s] = temperature
         self.outputs[s] = []
         self.token_times[s] = []
+        self.slot_cached[s] = 0
+        self.slot_pages[s] = []
+        if self.prefix is not None:
+            # identical policy to the device frontend: match at submit and
+            # take the request's reference on the shared chain
+            cached_len, shared = self.prefix.match(self.prompt[s])
+            self.slot_cached[s] = cached_len
+            self.slot_pages[s] = list(shared)
+            for p in shared:
+                self.refcount[p] += 1
         self.arrival[s] = arrival if arrival is not None else self.step_count
         self.slot_state[s] = rb.PREFILL_PENDING
         self.submit_time[s] = time.perf_counter()
@@ -130,6 +156,23 @@ class HostEngine:
         self.arrival[slot] = np.iinfo(np.int32).max
         return toks
 
+    def _release_row(self, pages: List[int]) -> None:
+        """Drop one reference per page; refcount-zero pages rejoin the pool."""
+        for p in pages:
+            self.refcount[p] -= 1
+            if self.refcount[p] <= 0:
+                self.free_pages.append(p)
+
+    def maybe_evict(self, want_free: int) -> None:
+        """LRU-evict zero-external-ref trie chains under page backpressure
+        (mirror of the device frontend's valve)."""
+        if self.prefix is None:
+            return
+        deficit = int(want_free) - len(self.free_pages)
+        if deficit > 0:
+            self._release_row(self.prefix.evict(deficit,
+                                                refcount=self.refcount))
+
     # -- one host-driven scheduler iteration --------------------------------
     def step(self) -> None:
         serve = self.serve
@@ -140,21 +183,37 @@ class HostEngine:
         pending = pending[np.argsort(self.arrival[pending], kind="stable")]
         free_lanes = np.where(self.lane_slot < 0)[0]
         self.jitter()                      # host touch 2: batch assembly
+        # starvation fallback (identical policy to the device frontend):
+        # the trie must never hoard the pool against pending admissions
+        starved = 0
+        if self.prefix is not None:
+            for s in pending:
+                total = -(-(len(self.prompt[s]) + int(self.max_new[s]))
+                          // serve.page_size)
+                starved = max(starved,
+                              total - int(self.slot_cached[s])
+                              // serve.page_size)
+        self.maybe_evict(max(serve.prefix_evict_watermark, starved))
 
         admit: List[int] = []
         for s in pending[: serve.admit_per_step]:
             if len(admit) >= len(free_lanes):
                 break
             if self.paged:
+                cached_pages = int(self.slot_cached[s]) // serve.page_size
                 need = -(-(len(self.prompt[s]) + int(self.max_new[s]))
-                         // serve.page_size)
+                         // serve.page_size) - cached_pages
                 if need > len(self.free_pages):
                     continue                # backpressure: stay pending
                 pages = [self.free_pages.pop() for _ in range(need)]
-                self.slot_pages[s] = pages
+                for p in pages:
+                    self.refcount[p] = 1
+                # row = shared prefix chain + freshly allocated suffix
+                self.slot_pages[s] = self.slot_pages.get(s, [])[:cached_pages] \
+                    + pages
                 bt = self.cache["kv"].block_table
                 row = np.full(bt.shape[1], -1, np.int32)
-                row[:need] = pages
+                row[:len(self.slot_pages[s])] = self.slot_pages[s]
                 self.cache["kv"] = dc.replace(
                     self.cache["kv"], block_table=bt.at[s].set(
                         jnp.asarray(row)))
@@ -172,23 +231,38 @@ class HostEngine:
         P = serve.max_prompt_len
         prompts = np.zeros((A, P), np.int32)
         lens = np.zeros(A, np.int32)
+        cached = np.zeros(A, np.int32)
         slots = np.zeros(A, np.int32)
         active = np.zeros(A, bool)
+        temps = np.zeros(A, np.float32)
         for j, s in enumerate(admit):
-            toks = self.prompt[s]
+            c = int(self.slot_cached[s])
+            toks = self.prompt[s][c:]             # suffix only beyond cache
             prompts[j, P - len(toks):] = toks     # left pad
             lens[j] = len(toks)
+            cached[j] = c
             slots[j] = s
             active[j] = True
+            temps[j] = self.temperature[s]        # per-request temperature
             self.slot_state[s] = rb.PREFILL_PROCESSING
         self.jitter()                      # host touch 3: kernel dispatch
 
+        cached_arg = jnp.asarray(cached) if self.prefix is not None else None
         tok, self.cache = self._prefill_fn(
-            self.params, jnp.asarray(prompts), jnp.asarray(lens), self.cache,
-            jnp.asarray(slots), jnp.asarray(active), self.key,
+            self.params, jnp.asarray(prompts), jnp.asarray(lens), cached_arg,
+            self.cache, jnp.asarray(slots), jnp.asarray(active),
+            jnp.asarray(temps), self.key,
             jnp.asarray(self.step_count, jnp.int32))
         tok_host = np.asarray(jax.device_get(tok))   # PCIe round-trip
         self.jitter()                      # host touch 4: copy-back handling
+
+        if self.prefix is not None:
+            # commit freshly prefilled full pages into the trie (trie ref)
+            for s in admit:
+                n_full = len(self.prompt[s]) // serve.page_size
+                row = self.slot_pages.get(s, [])[:n_full]
+                for p in self.prefix.insert(self.prompt[s], row):
+                    self.refcount[p] += 1
 
         now = time.perf_counter()
         for j, s in enumerate(admit):
@@ -239,8 +313,14 @@ class HostEngine:
 
     def _complete(self, slot: int) -> None:
         self.slot_state[slot] = rb.DECODE_COMPLETED
-        if self.paged and slot in self.slot_pages:
-            self.free_pages.extend(reversed(self.slot_pages.pop(slot)))
+        if self.paged and self.slot_pages.get(slot):
+            pages = self.slot_pages.pop(slot)
+            if self.prefix is not None:
+                self._release_row(pages)  # shared pages survive via refs
+            else:
+                self.free_pages.extend(reversed(pages))
+                for p in pages:
+                    self.refcount[p] = 0
             bt = self.cache["kv"].block_table
             self.cache["kv"] = dc.replace(
                 self.cache["kv"],

@@ -55,6 +55,12 @@ class RingState:
     generated: jax.Array      # [S] int32 tokens generated so far
     last_token: jax.Array     # [S] int32 most recent token (decode input)
     temperature: jax.Array    # [S] f32 (0 = greedy)
+    # prefix-reuse metadata (written by the frontend at submit, read by the
+    # engine at admission): cached_len tokens of the prompt are already
+    # resident in the paged pool; shared_pages holds the page chain covering
+    # them (-1 padded). 0 / all -1 = no reuse — the default protocol.
+    cached_len: jax.Array     # [S] int32 (page-aligned, < prompt_len)
+    shared_pages: jax.Array   # [S, pages_per_req] int32
     input_arena: jax.Array    # [S, max_prompt] int32
     output_arena: jax.Array   # [S, max_new_tokens] int32
     # telemetry (device step stamps; host converts to wall time)
@@ -78,6 +84,8 @@ def make_ring(serve: ServeConfig) -> RingState:
         generated=jnp.zeros((S,), jnp.int32),
         last_token=jnp.zeros((S,), jnp.int32),
         temperature=jnp.zeros((S,), jnp.float32),
+        cached_len=jnp.zeros((S,), jnp.int32),
+        shared_pages=jnp.full((S, serve.pages_per_req), -1, jnp.int32),
         input_arena=jnp.zeros((S, serve.max_prompt_len), jnp.int32),
         output_arena=jnp.full((S, serve.max_new_tokens), -1, jnp.int32),
         submit_step=jnp.zeros((S,), jnp.int32),
@@ -96,15 +104,27 @@ def make_ring(serve: ServeConfig) -> RingState:
 
 def submit_request(ring: RingState, slot: int, *, tokens, request_id: int,
                    max_new: int, arrival: int, temperature: float = 0.0,
-                   step: int = 0) -> RingState:
-    """Write a tokenized prompt into an EMPTY slot -> PREFILL_PENDING."""
+                   step: int = 0, cached_len: int = 0,
+                   shared_pages=None) -> RingState:
+    """Write a tokenized prompt into an EMPTY slot -> PREFILL_PENDING.
+
+    ``cached_len``/``shared_pages``: prefix-reuse metadata from the DPU
+    prefix index — the first ``cached_len`` tokens' K/V already live in
+    ``shared_pages`` (the frontend takes the allocator reference; the
+    engine only wires them into the block table at admission)."""
     n = len(tokens)
     arena_row = jnp.zeros((ring.input_arena.shape[1],), jnp.int32)
     arena_row = arena_row.at[:n].set(jnp.asarray(tokens, jnp.int32))
+    page_row = jnp.full((ring.shared_pages.shape[1],), -1, jnp.int32)
+    if shared_pages is not None and len(shared_pages):
+        page_row = page_row.at[:len(shared_pages)].set(
+            jnp.asarray(shared_pages, jnp.int32))
     return dataclasses.replace(
         ring,
         input_arena=ring.input_arena.at[slot].set(arena_row),
         prompt_len=ring.prompt_len.at[slot].set(n),
+        cached_len=ring.cached_len.at[slot].set(int(cached_len)),
+        shared_pages=ring.shared_pages.at[slot].set(page_row),
         max_new=ring.max_new.at[slot].set(max_new),
         arrival=ring.arrival.at[slot].set(arrival),
         request_id=ring.request_id.at[slot].set(request_id),
@@ -125,4 +145,6 @@ def release_slot(ring: RingState, slot: int) -> RingState:
         ring,
         slot_state=ring.slot_state.at[slot].set(EMPTY),
         arrival=ring.arrival.at[slot].set(jnp.iinfo(jnp.int32).max),
+        cached_len=ring.cached_len.at[slot].set(0),
+        shared_pages=ring.shared_pages.at[slot].set(-1),
     )

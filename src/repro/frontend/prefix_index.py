@@ -1,0 +1,156 @@
+"""DPU-plane radix prefix index: token-id pages -> resident KV page chains.
+
+The shared-system-prompt workload (thousands of requests opening with the
+same instruction block) is the dominant production pattern RadixAttention-
+style prefix caching exploits. Blink keeps the whole KV-management plane
+on device (paper §4.2); the *matching* structure, however, is pure request
+metadata — token ids — so it lives on the DPU plane next to the tokenizer
+(Fig. 2 ②), exactly like slot tracking: a host/DPU-side index over
+device-resident state, reconciled between windows.
+
+Structure: a radix trie in PAGE granularity. Each node covers exactly
+``page_size`` consecutive token ids and names the pool page caching their
+K/V. Page granularity is forced by sharing semantics: a partially filled
+page cannot be shared (the next request's suffix would have to write into
+it), so prefixes match in whole pages only.
+
+Ownership protocol (the cross-plane contract, enforced by the allocator's
+per-page refcounts):
+
+  * the trie holds one allocator reference on every page it indexes
+    (taken by the caller via ``cache.share_pages`` on the ids ``insert``
+    returns, released via ``cache.free_pages`` on the ids ``evict``
+    returns);
+  * every request whose submission matched a chain holds one reference on
+    each matched page (taken at submit, released with the rest of the
+    slot's block-table row when the slot is drained);
+  * a page is reusable by the pool only at refcount zero — so eviction is
+    always safe: running requests keep their prefix pages alive even after
+    the trie forgets them.
+
+Eviction is LRU over *zero-external-ref* leaf chains: under page
+backpressure the frontend pops the least-recently-matched leaves whose
+pages no request currently co-owns (allocator refcount <= the trie's own
+reference), walking chains bottom-up as nodes become leaves.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class _Node:
+    __slots__ = ("key", "page", "children", "parent", "last_used")
+
+    def __init__(self, key, page: int, parent: Optional["_Node"]):
+        self.key = key                      # tuple of page_size token ids
+        self.page = page                    # pool page id caching their K/V
+        self.children: Dict[tuple, "_Node"] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+class PrefixIndex:
+    def __init__(self, page_size: int):
+        assert page_size > 0
+        self.page_size = page_size
+        self.root = _Node(None, -1, None)
+        self._clock = 0
+        # telemetry: pages served from cache vs pages prefilled fresh
+        self.hit_pages = 0
+        self.miss_pages = 0
+
+    # -- introspection -------------------------------------------------------
+    def _walk(self, node: Optional[_Node] = None):
+        node = node or self.root
+        for child in node.children.values():
+            yield child
+            yield from self._walk(child)
+
+    @property
+    def num_pages(self) -> int:
+        """Pages currently indexed (= allocator references the trie holds)."""
+        return sum(1 for _ in self._walk())
+
+    @property
+    def pages(self) -> List[int]:
+        return [n.page for n in self._walk()]
+
+    # -- matching (submit path) ---------------------------------------------
+    def match(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest cached prefix of ``tokens`` in whole pages.
+
+        Returns (cached_len, page chain). cached_len is capped at
+        ``len(tokens) - 1``: at least one suffix token must go through
+        prefill so the engine still produces last-token logits from a live
+        forward. Matched nodes are LRU-bumped."""
+        ps = self.page_size
+        limit = max(len(tokens) - 1, 0) // ps
+        now = self._tick()
+        node, pages = self.root, []
+        for i in range(limit):
+            child = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+            if child is None:
+                break
+            child.last_used = now
+            pages.append(child.page)
+            node = child
+        self.hit_pages += len(pages)
+        self.miss_pages += max((len(tokens) + ps - 1) // ps - len(pages), 0)
+        return len(pages) * ps, pages
+
+    # -- commit (post-prefill path) ------------------------------------------
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> List[int]:
+        """Index a freshly prefilled prompt's full pages.
+
+        ``pages[i]`` caches tokens [i*ps, (i+1)*ps) — the leading entries of
+        the slot's block-table row. Only pages extending the trie are
+        adopted (a concurrent identical prompt keeps the first request's
+        chain); returns the newly indexed page ids, for which the caller
+        must take one allocator reference each on the trie's behalf."""
+        ps = self.page_size
+        n = min(len(tokens) // ps, len(pages))
+        now = self._tick()
+        node, new = self.root, []
+        for i in range(n):
+            if pages[i] < 0:
+                break
+            key = tuple(tokens[i * ps:(i + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(key, int(pages[i]), node)
+                node.children[key] = child
+                new.append(int(pages[i]))
+            child.last_used = now
+            node = child
+        return new
+
+    # -- eviction (backpressure path) ----------------------------------------
+    def evict(self, max_pages: int,
+              refcount=None) -> List[int]:
+        """Drop up to ``max_pages`` LRU zero-external-ref leaf chains.
+
+        ``refcount``: optional host view of the allocator refcounts; leaves
+        whose page is co-owned beyond the trie's own reference
+        (refcount > 1) are skipped — their chain is hot, evicting it would
+        only lose reuse without freeing memory. Returns the evicted page
+        ids; the caller releases the trie's reference on each
+        (``cache.free_pages``), returning unshared pages to the pool."""
+        out: List[int] = []
+        while len(out) < max_pages:
+            victims = [n for n in self._walk() if not n.children
+                       and (refcount is None or refcount[n.page] <= 1)]
+            if not victims:
+                break
+            victim = min(victims, key=lambda n: n.last_used)
+            del victim.parent.children[victim.key]
+            out.append(victim.page)
+        return out
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hit_pages + self.miss_pages
+        return self.hit_pages / total if total else 0.0

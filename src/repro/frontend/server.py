@@ -14,6 +14,16 @@ program — mirroring the paper's decoupling of the two planes.
 the paper the frontend lives on the DPU and is immune to host interference;
 benchmarks use this to show Blink's *engine* is jitter-free even when the
 (simulated) frontend is slowed.
+
+Prefix plane (``ServeConfig.prefix_cache``): the radix prefix index lives
+here, on the DPU plane with the tokenizer. Submission matches each prompt
+against the trie (stamping ``cached_len`` + the shared page chain into the
+ring and taking one allocator reference per matched page); the poll path
+commits freshly prefilled prompts' full pages back into the trie (taking
+the trie's reference) and, on drain, releases the slot's references —
+refcounted pages return to the pool only when the last co-owner lets go.
+LRU eviction of zero-ref chains runs under page backpressure, between
+windows, like every other frontend touch.
 """
 from __future__ import annotations
 
@@ -23,14 +33,17 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.core import engine as eng
 from repro.core import ring_buffer as rb
+from repro.frontend.prefix_index import PrefixIndex
 from repro.frontend.slot_tracker import SlotTracker
 from repro.frontend.token_reader import TokenReader
 from repro.frontend.tokenizer import BPETokenizer
+from repro.models import cache as cache_lib
 from repro.models.api import ModelApi
 
 
@@ -46,6 +59,8 @@ class Request:
     slot: int = -1
     output: List[int] = field(default_factory=list)
     text: Optional[str] = None
+    cached_len: int = 0          # prefix tokens served from the radix trie
+    committed: bool = False      # prompt pages indexed into the trie
 
 
 class BlinkFrontend:
@@ -58,6 +73,8 @@ class BlinkFrontend:
         self.jitter = jitter or (lambda: None)
         self.tracker = SlotTracker(serve.num_slots)
         self.reader = TokenReader(serve.num_slots, on_token=on_token)
+        self.prefix = PrefixIndex(serve.page_size) if serve.prefix_cache \
+            else None
         self.queue: List[Request] = []           # not yet in the ring
         self.in_flight: Dict[int, Request] = {}  # slot -> request
         self.done: Dict[int, Request] = {}       # request_id -> request
@@ -80,9 +97,15 @@ class BlinkFrontend:
         return req.request_id
 
     # -- submission plane (the RDMA writes, between windows) -----------------
-    def flush_submissions(self, ring: rb.RingState, step: int) -> rb.RingState:
+    def flush_submissions(self, ring: rb.RingState, step: int, alloc=None):
+        """Move queued requests into EMPTY ring slots. With the prefix
+        plane enabled, each prompt is first matched against the radix trie:
+        the cached length + shared page chain ride into the ring slot and
+        the request takes one allocator reference per matched page (so the
+        chain cannot be freed or evicted while the request is pending).
+        Returns (ring, alloc)."""
         if not self.queue:
-            return ring
+            return ring, alloc
         self.tracker.refresh(np.asarray(ring.slot_state))  # bulk read
         still: List[Request] = []
         for req in self.queue:
@@ -90,20 +113,34 @@ class BlinkFrontend:
             if slot is None:
                 still.append(req)                  # ring full: queue on DPU
                 continue
+            cached_len, shared = 0, None
+            if self.prefix is not None:
+                cached_len, shared = self.prefix.match(req.tokens)  # DPU walk
+                if shared:
+                    alloc = cache_lib.share_pages(
+                        alloc, jnp.asarray(shared, jnp.int32))
+            req.cached_len = cached_len
             self.jitter()                          # staging + RDMA write
             ring = rb.submit_request(
                 ring, slot, tokens=req.tokens, request_id=req.request_id,
                 max_new=req.max_new, arrival=self._arrival,
-                temperature=req.temperature, step=step)
+                temperature=req.temperature, step=step,
+                cached_len=cached_len, shared_pages=shared)
             self._arrival += 1
             req.slot = slot
             self.in_flight[slot] = req
             self.reader.mark_urgent(slot)
         self.queue = still
-        return ring
+        return ring, alloc
 
     # -- retrieval plane (token reader poll, between windows) ----------------
-    def poll(self, ring: rb.RingState) -> rb.RingState:
+    def poll(self, ring: rb.RingState, alloc=None, kvc=None):
+        """Drain new tokens / completions. With the prefix plane enabled
+        this is also where page lifetime is arbitrated: freshly prefilled
+        prompts' full pages are committed into the trie (trie takes its
+        reference) BEFORE any drained slot's references are released, and
+        drained rows return to the pool only at refcount zero.
+        Returns (ring, alloc, kvc)."""
         self.jitter()                              # poll cycle
         slot_states = np.asarray(ring.slot_state)
         generated = np.asarray(ring.generated)
@@ -117,6 +154,14 @@ class BlinkFrontend:
             if req.first_token_wall < 0:
                 req.first_token_wall = now
             req.output.extend(int(t) for t in toks)
+        if self.prefix is not None:
+            # commit pass: runs over completing slots too — their pages are
+            # still live (release is deferred to the drain below)
+            prefilled = (rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
+                         rb.DECODE_COMPLETED)
+            for slot, req in self.in_flight.items():
+                if not req.committed and slot_states[slot] in prefilled:
+                    alloc = self._commit_prefix(slot, req, alloc, kvc)
         for slot in completed:
             req = self.in_flight.pop(slot, None)
             if req is None:
@@ -125,9 +170,66 @@ class BlinkFrontend:
             if self.tokenizer is not None:
                 req.text = self.tokenizer.decode(req.output)  # detokenize
             self.done[req.request_id] = req
+            if self.prefix is not None:
+                # release the slot's page references (shared prefix pages
+                # survive via the trie's / other slots' refs)
+                row = kvc.block_table[slot]
+                alloc = cache_lib.free_pages(alloc, row)
+                kvc = dataclasses.replace(
+                    kvc, block_table=kvc.block_table.at[slot].set(-1))
             ring = rb.release_slot(ring, slot)     # slot -> EMPTY
             self.tracker.mark_free(slot)
-        return ring
+        return ring, alloc, kvc
+
+    def _commit_prefix(self, slot: int, req: Request, alloc, kvc):
+        """Index the prompt's full pages into the trie; the trie takes one
+        allocator reference per newly indexed page. Duplicate chains (two
+        identical prompts prefilled concurrently) keep the first request's
+        pages — insert returns only the extension."""
+        ps = self.serve.page_size
+        n_full = len(req.tokens) // ps
+        if n_full:
+            row = np.asarray(kvc.block_table[slot])[:n_full]
+            if (row >= 0).all():
+                new = self.prefix.insert(req.tokens, row.tolist())
+                if new:
+                    alloc = cache_lib.share_pages(
+                        alloc, jnp.asarray(new, jnp.int32))
+        req.committed = True
+        return alloc
+
+    def starved_pages_needed(self, ring: rb.RingState) -> int:
+        """Largest suffix-page demand among ring-pending requests. The
+        engine's admission gate is all-or-nothing per candidate, so
+        freeing this many pages guarantees the FCFS head can make
+        progress — the trie must never wedge admission by hoarding the
+        pool (a starved request's own matched chain is co-owned by the
+        request, so eviction cannot take it out from under it)."""
+        if self.prefix is None or not self.in_flight:
+            return 0
+        states = np.asarray(ring.slot_state)
+        ps = self.serve.page_size
+        need = 0
+        for slot, req in self.in_flight.items():
+            if states[slot] == rb.PREFILL_PENDING:
+                total = -(-(len(req.tokens) + req.max_new) // ps)
+                need = max(need, total - req.cached_len // ps)
+        return need
+
+    def maybe_evict(self, alloc, want_free: int):
+        """Page backpressure valve: when fewer than ``want_free`` pages are
+        free, drop LRU zero-external-ref trie chains until the deficit is
+        covered (or the trie runs out of cold chains)."""
+        if self.prefix is None:
+            return alloc
+        deficit = int(want_free) - int(alloc.top)
+        if deficit > 0:
+            pages = self.prefix.evict(deficit,
+                                      refcount=np.asarray(alloc.refcount))
+            if pages:
+                alloc = cache_lib.free_pages(
+                    alloc, jnp.asarray(pages, jnp.int32))
+        return alloc
 
     @property
     def idle(self) -> bool:
@@ -174,9 +276,15 @@ class BlinkServer:
     def run_window(self) -> None:
         fe = self.frontend
         step = int(self.state.step)
-        ring = fe.flush_submissions(self.state.ring, step)
-        if ring is not self.state.ring:
-            self.state = dataclasses.replace(self.state, ring=ring)
+        alloc = self.state.alloc
+        if fe.prefix is not None:
+            alloc = fe.maybe_evict(
+                alloc, max(self.serve.prefix_evict_watermark,
+                           fe.starved_pages_needed(self.state.ring)))
+        ring, alloc = fe.flush_submissions(self.state.ring, step, alloc)
+        if ring is not self.state.ring or alloc is not self.state.alloc:
+            self.state = dataclasses.replace(self.state, ring=ring,
+                                             alloc=alloc)
         self.host_jitter()                 # the ONE host touch per window
         window_fn = self.windows.select(
             self.windows.max_pending_len(self.state.ring))
@@ -184,9 +292,15 @@ class BlinkServer:
         self.state = window_fn(self.params, self.state)
         jax.block_until_ready(self.state.step)
         self.window_wall.append(time.perf_counter() - t0)
-        ring = fe.poll(self.state.ring)
-        if ring is not self.state.ring:
-            self.state = dataclasses.replace(self.state, ring=ring)
+        kvc = self.state.cache.get("kv")
+        ring, alloc, kvc = fe.poll(self.state.ring, self.state.alloc, kvc)
+        st = self.state
+        if ring is not st.ring or alloc is not st.alloc \
+                or kvc is not st.cache.get("kv"):
+            cache = st.cache if kvc is st.cache.get("kv") \
+                else dict(st.cache, kv=kvc)
+            self.state = dataclasses.replace(st, ring=ring, alloc=alloc,
+                                             cache=cache)
 
     def run_until_idle(self, max_windows: int = 1000) -> int:
         n = 0
@@ -208,5 +322,7 @@ class BlinkServer:
                     if req.finish_wall > 0 else float("nan"))
             out.append({"request_id": req.request_id, "ttft": ttft,
                         "tpot": tpot, "tokens": ntok,
-                        "latency": req.finish_wall - req.submit_wall})
+                        "latency": req.finish_wall - req.submit_wall,
+                        "cached_len": req.cached_len,
+                        "prompt_len": len(req.tokens)})
         return out

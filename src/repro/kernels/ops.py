@@ -41,15 +41,23 @@ def paged_attention(q, k_pages, v_pages, block_table, kv_lens, *,
                                              "interpret"))
 def flash_prefill_attention(q, k, v, offsets, *, window=0, softcap: float = 0.0,
                             block_q: int = 128, block_k: int = 128,
+                            k_pages=None, v_pages=None, block_rows=None,
+                            cached_lens=None, k_scale=None, v_scale=None,
                             interpret: bool = None):
     """Prefill flash attention over left-padded [B, T] prompts. ``window``
     is a dynamic scalar (0 = full) so per-layer window patterns pass through
     a ``lax.scan`` over layers; key blocks outside the causal/window range
-    skip compute and HBM fetch (clamped index map)."""
+    skip compute and HBM fetch (clamped index map). Optional
+    ``k_pages``/``v_pages``/``block_rows``/``cached_lens`` (+ int8
+    ``k_scale``/``v_scale``) prepend a cached paged-pool prefix per lane —
+    the prefix-reuse / chunked-prefill mode."""
     interp = INTERPRET if interpret is None else interpret
     return _fp.flash_prefill(
         q, k, v, offsets, window=window, softcap=softcap,
-        block_q=block_q, block_k=block_k, interpret=interp)
+        block_q=block_q, block_k=block_k,
+        k_pages=k_pages, v_pages=v_pages, block_rows=block_rows,
+        cached_lens=cached_lens, k_scale=k_scale, v_scale=v_scale,
+        interpret=interp)
 
 
 @functools.partial(jax.jit,

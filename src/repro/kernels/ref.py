@@ -47,20 +47,64 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, kv_lens, *,
 
 
 def flash_prefill_ref(q, k, v, offsets, *, window: int = 0,
-                      softcap: float = 0.0):
+                      softcap: float = 0.0, k_pages=None, v_pages=None,
+                      block_rows=None, cached_lens=None, k_scale=None,
+                      v_scale=None):
     """q: [B, T, H, hd]; k/v: [B, T, KV, hd]; offsets: [B] left-pad widths.
 
     Dense causal (windowed) GQA over a left-padded bucket — the oracle for
     ``kernels.flash_prefill``. Output rows in the pad region (column <
-    offsets[b]) are zeroed to match the kernel's no-live-keys convention."""
+    offsets[b]) are zeroed to match the kernel's no-live-keys convention.
+
+    With ``k_pages``/``v_pages``/``block_rows``/``cached_lens`` the oracle
+    additionally gathers lane b's cached prefix (``cached_lens[b]`` tokens
+    at absolute positions [0, cached)) densely from the paged pool and
+    prepends it to the key axis — the reference for the kernel's
+    prefix-reuse / chunked-prefill mode."""
     B, T, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
     qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(B, T, KV, G, hd)
+    col = jnp.arange(T)[None, :]
+    if k_pages is not None:
+        P, ps = k_pages.shape[0], k_pages.shape[1]
+        safe = jnp.clip(block_rows, 0, P - 1)
+        kp = k_pages[safe].astype(jnp.float32)   # [B, mb, ps, KV, hd]
+        vp = v_pages[safe].astype(jnp.float32)
+        if k_scale is not None:
+            kp = kp * k_scale[safe].astype(jnp.float32)[..., None]
+            vp = vp * v_scale[safe].astype(jnp.float32)[..., None]
+        mbps = kp.shape[1] * ps
+        k_all = jnp.concatenate([kp.reshape(B, mbps, KV, hd),
+                                 k.astype(jnp.float32)], axis=1)
+        v_all = jnp.concatenate([vp.reshape(B, mbps, KV, hd),
+                                 v.astype(jnp.float32)], axis=1)
+        cached = jnp.asarray(cached_lens, jnp.int32)
+        # absolute positions: prefix tokens at [0, cached); suffix column c
+        # at cached + c - offset
+        q_pos = cached[:, None] + col - offsets[:, None]        # [B, Tq]
+        k_pos = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(mbps)[None, :], (B, mbps)),
+             q_pos], axis=1)                                    # [B, Tk]
+        k_valid = jnp.concatenate(
+            [jnp.arange(mbps)[None, :] < cached[:, None],
+             col >= offsets[:, None]], axis=1)
+        q_valid = col >= offsets[:, None]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k_all)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = (k_pos[:, None, :] <= q_pos[:, :, None]) \
+            & k_valid[:, None, :] & q_valid[:, :, None]
+        if window > 0:
+            mask &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+        s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.any(mask, axis=2)[:, None, None, :, None], p, 0.0)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_all)
+        return out.reshape(B, T, H, hd).astype(q.dtype)
     s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
-    col = jnp.arange(T)[None, :]
     q_col = col[:, :, None]                      # [B, Tq, 1]
     k_col = col[:, None, :]                      # [B, 1, Tk]
     mask = (k_col <= q_col) & (k_col >= offsets[:, None, None])

@@ -41,7 +41,9 @@ def main():
                         num_pages=160, eos_token=-1,
                         attn_backend=args.attn_backend)
     api = make_model(cfg, attn_backend=serve.attn_backend,
-                     attn_pages_per_block=serve.attn_pages_per_block)
+                     attn_pages_per_block=serve.attn_pages_per_block,
+                     prefill_block_q=serve.prefill_block_q,
+                     prefill_block_k=serve.prefill_block_k)
     params = api.init_params(jax.random.PRNGKey(0))
     jitter = None
     if args.interfere:

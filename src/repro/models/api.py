@@ -29,10 +29,15 @@ class ModelApi(NamedTuple):
     decode: Callable[..., Any]
     make_cache: Callable[..., Dict[str, Any]]
     attn_backend: str = "gather"
+    # chunked prefill (bucket > VMEM budget): same contract as ``prefill``
+    # plus a ``chunk`` kwarg; None for families without paged prefix support
+    prefill_chunked: Optional[Callable[..., Any]] = None
 
 
 def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
-               attn_pages_per_block: int = 1) -> ModelApi:
+               attn_pages_per_block: int = 1,
+               prefill_block_q: int = 128,
+               prefill_block_k: int = 128) -> ModelApi:
     """Build the opaque model API.
 
     ``attn_backend`` selects the attention implementation for BOTH serving
@@ -41,12 +46,16 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
     into ``prefill``. Precedence: the REPRO_ATTN_BACKEND env var overrides
     everything (including an explicit argument), then this argument, then
     "gather". Callers serving through the engine pass
-    ``ServeConfig.attn_backend`` / ``ServeConfig.attn_pages_per_block``;
-    the engine refuses a config/api mismatch at init.
+    ``ServeConfig.attn_backend`` / ``ServeConfig.attn_pages_per_block`` /
+    ``ServeConfig.prefill_block_q`` / ``ServeConfig.prefill_block_k``;
+    the engine refuses a config/api mismatch at init and the flash-prefill
+    tile sizes are validated here, at model-build time.
     """
     attend = attn_backend_lib.get_backend(
         attn_backend, pages_per_block=attn_pages_per_block)
-    pre_attend = attn_backend_lib.get_prefill_backend(attn_backend)
+    pre_attend = attn_backend_lib.get_prefill_backend(
+        attn_backend, block_q=prefill_block_q, block_k=prefill_block_k)
+    chunked = None
     if cfg.is_encoder_decoder:
         train = lambda params, batch, **kw: encdec_lib.train_loss(
             params, cfg, batch, **kw)
@@ -57,6 +66,9 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
             params, cfg, batch, **kw)
         pre = lambda params, *a, **kw: tf_lib.prefill(
             params, cfg, *a, prefill_attend=pre_attend, **kw)
+        if cfg.arch_type in ("dense", "moe", "vlm"):
+            chunked = lambda params, *a, **kw: tf_lib.chunked_prefill(
+                params, cfg, *a, prefill_attend=pre_attend, **kw)
 
     dec = lambda params, *a, **kw: tf_lib.decode(
         params, cfg, *a, attend=attend, **kw)
@@ -77,6 +89,7 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
         decode=dec,
         make_cache=mk_cache,
         attn_backend=attend.backend_name,
+        prefill_chunked=chunked,
     )
 
 

@@ -36,18 +36,23 @@ sliding-window width (0 = full attention).
 
 A prefill backend is a callable
 
-    prefill_attend(cfg, q, k, v, offset, window) -> [B, T, H, hd]
+    prefill_attend(cfg, q, k, v, offset, window, prefix=None) -> [B, T, H, hd]
 
 over one layer's freshly projected (RoPE'd) q ``[B, T, H, hd]`` and
 k/v ``[B, T, KV, hd]`` for a LEFT-padded prompt bucket; ``offset`` [B] is
 the per-lane pad width (first valid column), ``window`` a traced scalar as
 above. Softcap comes from ``cfg.attn_softcap``. Rows in the pad region
-may be garbage — callers never read them.
+may be garbage — callers never read them. ``prefix`` is an optional
+``PagedPrefix``: per-lane cached-prefix K/V resident in the paged pool
+(radix prefix reuse / chunked prefill) that query tiles fold in before the
+in-flight suffix keys — the gather backend gathers the pages densely, the
+pallas backend streams them through the flash kernel's block-table
+prefetch.
 """
 from __future__ import annotations
 
 import os
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +63,20 @@ from repro.models.layers import gqa_attend
 
 DecodeAttend = Callable[..., jax.Array]
 PrefillAttend = Callable[..., jax.Array]
+
+
+class PagedPrefix(NamedTuple):
+    """One layer's cached-prefix view for a prefill batch.
+
+    ``cached_lens[b]`` tokens at absolute positions [0, cached) already
+    live in ``k_pages``/``v_pages`` through ``block_rows[b]``; the in-flight
+    suffix token at column c sits at position ``cached + c - offset``."""
+    k_pages: jax.Array                    # [P, ps, KV, hd] (this layer)
+    v_pages: jax.Array
+    block_rows: jax.Array                 # [B, max_blocks] int32
+    cached_lens: jax.Array                # [B] int32
+    k_scale: Optional[jax.Array] = None   # [P, ps, KV] int8 dequant scales
+    v_scale: Optional[jax.Array] = None
 
 _REGISTRY: Dict[str, Callable[..., DecodeAttend]] = {}
 _PREFILL_REGISTRY: Dict[str, Callable[..., PrefillAttend]] = {}
@@ -101,6 +120,20 @@ def get_backend(name: Optional[str] = None, *,
     return fn
 
 
+def validate_prefill_tiles(block_q: int, block_k: int) -> None:
+    """Model-build-time validation of the flash-prefill tile sizes
+    (``ServeConfig.prefill_block_q``/``prefill_block_k``): a bad tile must
+    fail at ``make_model``, not as a shape error deep inside the first
+    jitted window. TPU lanes want multiples of 8; the wrapper clamps tiles
+    to the bucket length, so only the lower bound and alignment matter."""
+    for nm, val in (("prefill_block_q", block_q), ("prefill_block_k", block_k)):
+        if not isinstance(val, int) or val <= 0:
+            raise ValueError(f"{nm} must be a positive int, got {val!r}")
+        if val % 8 != 0:
+            raise ValueError(f"{nm} must be a multiple of 8 (TPU lane "
+                             f"alignment), got {val}")
+
+
 def get_prefill_backend(name: Optional[str] = None, *,
                         block_q: int = 128,
                         block_k: int = 128) -> PrefillAttend:
@@ -108,6 +141,7 @@ def get_prefill_backend(name: Optional[str] = None, *,
     names as ``get_backend`` — one ``ServeConfig.attn_backend`` selects
     both phases)."""
     resolved = _resolve(name, _PREFILL_REGISTRY)
+    validate_prefill_tiles(block_q, block_k)
     fn = _PREFILL_REGISTRY[resolved](block_q=block_q, block_k=block_k)
     fn.backend_name = resolved
     return fn
@@ -172,16 +206,46 @@ def _make_gather_prefill(*, block_q: int = 128,
     """Reference path: dense ``gqa_attend`` over the whole bucket —
     materialises the [B, KV, G, Tq, Tk] logits tensor (today's behavior)."""
 
-    def gather_prefill(cfg, q, k, v, offset, window):
+    def gather_prefill(cfg, q, k, v, offset, window, prefix=None):
         B, T = q.shape[:2]
         pos_in_seq = jnp.arange(T)[None, :] - offset[:, None]
         kv_mask = pos_in_seq >= 0
-        positions = jnp.maximum(pos_in_seq, 0)
         eff_window = jnp.where(window > 0, window, jnp.int32(2**30))
-        return gqa_attend(q, k, v, q_positions=positions,
-                          k_positions=positions, causal=True,
-                          window=eff_window, kv_mask=kv_mask,
-                          softcap=cfg.attn_softcap)
+        if prefix is None:
+            positions = jnp.maximum(pos_in_seq, 0)
+            return gqa_attend(q, k, v, q_positions=positions,
+                              k_positions=positions, causal=True,
+                              window=eff_window, kv_mask=kv_mask,
+                              softcap=cfg.attn_softcap)
+        # cached-prefix mode: gather the prefix densely from the paged pool
+        # into a POSITION-INDEXED key buffer [B, mb*ps] and scatter the
+        # in-flight suffix K/V at their absolute positions. Every chunk of
+        # a chunked prefill (and a zero-cache single shot) then reduces
+        # over an identically laid-out key axis, so the reference backend
+        # is bitwise-reproducible across chunkings — the oracle the
+        # equivalence tests pin the flash kernel against.
+        kp, vp = cache_lib.gather_pages(
+            prefix.k_pages, prefix.v_pages, prefix.block_rows,
+            prefix.k_scale, prefix.v_scale)
+        cached = prefix.cached_lens
+        mbps = kp.shape[1]
+        pos_axis = jnp.arange(mbps)[None, :]                  # [1, mb*ps]
+        pre_valid = pos_axis < cached[:, None]
+        k_buf = jnp.where(pre_valid[..., None, None], kp.astype(k.dtype), 0)
+        v_buf = jnp.where(pre_valid[..., None, None], vp.astype(v.dtype), 0)
+        suf_pos = cached[:, None] + pos_in_seq                # [B, T]
+        tgt = jnp.where(kv_mask, suf_pos, mbps)               # pads dropped
+        b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], tgt.shape)
+        k_buf = k_buf.at[b_idx, tgt].set(k, mode="drop")
+        v_buf = v_buf.at[b_idx, tgt].set(v, mode="drop")
+        total = cached + (T - offset)                         # [B] seq lens
+        return gqa_attend(
+            q, k_buf, v_buf,
+            q_positions=jnp.maximum(suf_pos, 0),
+            k_positions=jnp.broadcast_to(pos_axis, (B, mbps)),
+            causal=True, window=eff_window,
+            kv_mask=pos_axis < total[:, None],
+            softcap=cfg.attn_softcap)
 
     return gather_prefill
 
@@ -192,12 +256,18 @@ def _make_pallas_prefill(*, block_q: int = 128,
     """Hot path: the flash prefill kernel — tiled online softmax, no T x T
     logits in HBM, causal/sliding-window key-block skip."""
 
-    def pallas_prefill(cfg, q, k, v, offset, window):
+    def pallas_prefill(cfg, q, k, v, offset, window, prefix=None):
+        extra = {}
+        if prefix is not None:
+            extra = dict(k_pages=prefix.k_pages, v_pages=prefix.v_pages,
+                         block_rows=prefix.block_rows,
+                         cached_lens=prefix.cached_lens,
+                         k_scale=prefix.k_scale, v_scale=prefix.v_scale)
         att = ops.flash_prefill_attention(
             q, k, v, offset,
             window=jnp.maximum(window, 0).astype(jnp.int32),
             softcap=float(cfg.attn_softcap or 0.0),
-            block_q=block_q, block_k=block_k)
+            block_q=block_q, block_k=block_k, **extra)
         return att.astype(q.dtype)
 
     return pallas_prefill

@@ -104,6 +104,9 @@ def write_kv_layer(
     lengths: jax.Array,       # [B] number of valid trailing tokens is
                               #     enforced via pos in [0, lengths)
     active: jax.Array,        # [B] bool — lane participates
+    min_pos: Optional[jax.Array] = None,  # [B] writes below this cache
+                              #     position are dropped (prefix reuse:
+                              #     shared pages are read-only)
 ) -> PagedKVCache:
     """Scatter one layer's new K/V into the slots' pages.
 
@@ -120,6 +123,8 @@ def write_kv_layer(
     page_of = jnp.take_along_axis(pages, blk, axis=1)     # [B, Tq]
     valid = (pos >= 0) & (pos < lengths[:, None]) & active[:, None] \
         & (page_of >= 0) & (pos // ps < cache.max_blocks)
+    if min_pos is not None:
+        valid &= pos >= min_pos[:, None]
     page_idx = jnp.where(valid, page_of, cache.k_pages.shape[1])  # OOB -> drop
     l_idx = jnp.broadcast_to(layer, (B, Tq))
     extra = {}
@@ -154,9 +159,11 @@ def _dequant(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
 
 def set_seq_lens(cache: PagedKVCache, slot_ids: jax.Array, new_lens: jax.Array,
                  active: jax.Array) -> PagedKVCache:
-    cur = cache.seq_lens[slot_ids]
-    seq_lens = cache.seq_lens.at[slot_ids].set(
-        jnp.where(active, new_lens, cur), mode="drop")
+    # inactive lanes scatter to an OOB index (dropped) — slot_ids are often
+    # zero-padded, and a duplicate-index scatter would leave the winner to
+    # XLA (an inactive lane's stale read could overwrite an active write)
+    sel = jnp.where(active, slot_ids, cache.seq_lens.shape[0])
+    seq_lens = cache.seq_lens.at[sel].set(new_lens, mode="drop")
     return dataclasses.replace(cache, seq_lens=seq_lens)
 
 
@@ -191,6 +198,23 @@ def gather_kv_window(cache: PagedKVCache, layer: jax.Array,
             kv_pos.reshape(B_, W_ * ps_))
 
 
+def gather_pages(k_pages: jax.Array, v_pages: jax.Array,
+                 block_rows: jax.Array, k_scale=None, v_scale=None):
+    """Materialise [B, mb*ps, KV, hd] K/V from raw page arrays through
+    per-lane block-table rows (jnp reference path for the prefix-aware
+    prefill; the Pallas flash-prefill kernel fuses this gather). Rows may
+    contain -1 (unassigned) — callers mask by cached length."""
+    P = k_pages.shape[0]
+    safe = jnp.clip(block_rows, 0, P - 1)
+    k = k_pages[safe]                                     # [B, mb, ps, KV, hd]
+    v = v_pages[safe]
+    if k_scale is not None:
+        k = _dequant(k, k_scale[safe])
+        v = _dequant(v, v_scale[safe])
+    B, mb, ps, KV, hd = k.shape
+    return k.reshape(B, mb * ps, KV, hd), v.reshape(B, mb * ps, KV, hd)
+
+
 def gather_kv(cache: PagedKVCache, layer: jax.Array, slot_ids: jax.Array):
     """Materialise [B, max_kv, KV, hd] K/V for one layer (jnp reference path;
     the Pallas `paged_attention` kernel fuses this gather)."""
@@ -214,15 +238,24 @@ def gather_kv(cache: PagedKVCache, layer: jax.Array, slot_ids: jax.Array):
 @jax.tree_util.register_dataclass
 @dataclass
 class PageAllocator:
-    """LIFO free list. free_stack holds page ids; top = next free index."""
+    """LIFO free list + per-page reference counts.
+
+    ``refcount[p]`` is the number of owners of page ``p`` (0 = free). A page
+    can be co-owned — by several slots sharing a cached prefix and by the
+    frontend's prefix trie — and returns to the free stack only when the
+    last owner releases it (``free_pages``). Everything is device-resident
+    so sharing decisions made on the DPU plane (the radix prefix index)
+    materialise as pure array updates between windows."""
     free_stack: jax.Array    # [P] int32
     top: jax.Array           # [] int32 — number of free pages
+    refcount: jax.Array      # [P] int32 — owners per page (0 = free)
 
 
 def make_page_allocator(num_pages: int) -> PageAllocator:
     return PageAllocator(
         free_stack=jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
         top=jnp.asarray(num_pages, jnp.int32),
+        refcount=jnp.zeros((num_pages,), jnp.int32),
     )
 
 
@@ -232,28 +265,51 @@ def alloc_pages(alloc: PageAllocator, n: jax.Array, max_n: int):
     Returns (pages [max_n] int32 (-1 beyond n), new_alloc, ok bool).
     Allocation is all-or-nothing: if fewer than n pages are free, ok=False
     and the allocator is unchanged (backpressure — the request stays
-    PREFILL_PENDING in the ring, the paper's admission gating).
+    PREFILL_PENDING in the ring, the paper's admission gating). Allocated
+    pages start with refcount 1 (sole owner: the allocating slot).
     """
+    P = alloc.free_stack.shape[0]
     ok = alloc.top >= n
     idx = alloc.top - 1 - jnp.arange(max_n)
     take = (jnp.arange(max_n) < n) & ok
     pages = jnp.where(take, alloc.free_stack[jnp.clip(idx, 0, None)], -1)
     new_top = jnp.where(ok, alloc.top - n, alloc.top)
-    return pages, dataclasses.replace(alloc, top=new_top), ok
+    refcount = alloc.refcount.at[jnp.where(pages >= 0, pages, P)].set(
+        1, mode="drop")
+    return (pages,
+            dataclasses.replace(alloc, top=new_top, refcount=refcount), ok)
+
+
+def share_pages(alloc: PageAllocator, pages: jax.Array):
+    """Add one reference to each valid (>=0) entry of ``pages`` — a new
+    co-owner (a slot reusing a cached prefix, or the prefix trie indexing
+    freshly prefilled pages) of already-resident pages."""
+    P = alloc.free_stack.shape[0]
+    refcount = alloc.refcount.at[jnp.where(pages >= 0, pages, P)].add(
+        1, mode="drop")
+    return dataclasses.replace(alloc, refcount=refcount)
 
 
 def free_pages(alloc: PageAllocator, pages: jax.Array):
-    """Push back the valid (>=0) entries of ``pages`` [max_n]."""
+    """Release one reference on each valid (>=0) entry of ``pages`` [max_n];
+    pages whose refcount reaches zero return to the free stack. With all
+    refcounts at 1 (no sharing) this is the plain free of the original
+    allocator."""
+    P = alloc.free_stack.shape[0]
     valid = pages >= 0
-    n = jnp.sum(valid.astype(jnp.int32))
-    # compact valid pages to the front
-    order = jnp.argsort(~valid, stable=True)
+    safe = jnp.where(valid, pages, P)
+    refcount = alloc.refcount.at[safe].add(-1, mode="drop")
+    freeable = valid & (refcount[jnp.where(valid, pages, 0)] <= 0)
+    n = jnp.sum(freeable.astype(jnp.int32))
+    # compact freeable pages to the front
+    order = jnp.argsort(~freeable, stable=True)
     compacted = pages[order]
     idx = alloc.top + jnp.arange(pages.shape[0])
     write = jnp.arange(pages.shape[0]) < n
-    stack = alloc.free_stack.at[jnp.where(write, idx, alloc.free_stack.shape[0])].set(
+    stack = alloc.free_stack.at[jnp.where(write, idx, P)].set(
         compacted, mode="drop")
-    return dataclasses.replace(alloc, free_stack=stack, top=alloc.top + n)
+    return dataclasses.replace(alloc, free_stack=stack, top=alloc.top + n,
+                               refcount=refcount)
 
 
 # ---------------------------------------------------------------------------

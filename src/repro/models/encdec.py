@@ -112,15 +112,21 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             lengths: jax.Array, cache: Dict[str, Any], slot_ids: jax.Array,
             active: jax.Array, frames: Optional[jax.Array] = None,
             frame_mask: Optional[jax.Array] = None,
-            prefill_attend: Optional[Any] = None):
+            prefill_attend: Optional[Any] = None,
+            cached_lens: Optional[jax.Array] = None):
     """Encode frames, prefill the decoder prompt (left-padded), fill caches.
 
     Decoder self-attention runs through the pluggable ``prefill_attend``
     backend (see ``repro.models.attn_backend``) and each layer's self-attn
     K/V are scattered into the paged pool inside the layer scan (the cache
     rides the carry) — no [L, B, T, KV, hd] staging buffer. Cross-attention
-    stays dense."""
+    stays dense. ``cached_lens`` (prefix reuse) is unsupported here — the
+    dense cross-attention K/V are per-slot, not shareable pages — and must
+    be None (the engine refuses prefix_cache for enc-dec archs at init)."""
     from repro.models import attn_backend as attn_backend_lib
+    if cached_lens is not None:
+        raise ValueError("prefix reuse (cached_lens) is unsupported for "
+                         "encoder-decoder prefill")
     B, T = tokens.shape
     if frames is None:  # smoke-test path: derive stub frames from tokens
         S_enc = cache["enc_k"].shape[2]

@@ -264,29 +264,51 @@ class PrefillCtx(NamedTuple):
     ``attend`` prefill backend and (b) scatters each layer's K/V into the
     paged pool *inside* the scan body (``kvc`` rides the carry) — no
     ``[L, B, T, KV, hd]`` staging buffer, no second per-layer scatter pass.
+
+    ``cached_lens`` (prefix reuse / chunked prefill): when not None, lane
+    b's first ``cached_lens[b]`` tokens already live in the paged pool
+    (through the slot's block table); the in-flight bucket holds only the
+    suffix. Each layer's attention then folds the cached prefix in via a
+    ``attn_backend.PagedPrefix`` view, and the K/V writes are clamped to
+    positions >= cached so shared prefix pages stay read-only.
     """
     kvc: Any                 # PagedKVCache, threaded through the scan carry
     slot_ids: jax.Array      # [B]
     active: jax.Array        # [B] bool
-    offset: jax.Array        # [B] left-pad columns (T - prompt_len)
-    lengths: jax.Array       # [B] prompt lengths
+    offset: jax.Array        # [B] left-pad columns (T - suffix_len)
+    lengths: jax.Array       # [B] suffix lengths (in-flight tokens)
     attend: Callable         # prefill backend (attn_backend.get_prefill_backend)
+    cached_lens: Optional[jax.Array] = None  # [B] cached prefix tokens
+
+
+def _layer_prefix(ctx: PrefillCtx, kvc, layer):
+    """PagedPrefix view of one layer's cached-prefix pages (None when the
+    prefill carries no cached prefix)."""
+    if ctx.cached_lens is None:
+        return None
+    return attn_backend_lib.PagedPrefix(
+        k_pages=kvc.k_pages[layer], v_pages=kvc.v_pages[layer],
+        block_rows=kvc.block_table[ctx.slot_ids],
+        cached_lens=ctx.cached_lens,
+        k_scale=kvc.k_scale[layer] if kvc.quantized else None,
+        v_scale=kvc.v_scale[layer] if kvc.quantized else None)
 
 
 def _dense_block(cfg: ModelConfig, bp: dict, x: jax.Array,
                  positions: jax.Array, window: jax.Array,
                  kv_mask: jax.Array, attend: Optional[Callable] = None,
-                 offset: Optional[jax.Array] = None):
+                 offset: Optional[jax.Array] = None, prefix=None):
     """One transformer block over [B, T, D]. Returns (x, router_aux, (k, v)).
 
     ``attend``/``offset``: prefill-attention backend + left-pad widths; when
-    None (training path) the inline ``gqa_attend`` reference runs."""
+    None (training path) the inline ``gqa_attend`` reference runs.
+    ``prefix``: optional ``PagedPrefix`` forwarded to the backend."""
     h = norm(cfg, x, bp.get("ln1"))
     q, k, v = qkv_project(bp, cfg, h)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     if attend is not None:
-        att = attend(cfg, q, k, v, offset, window)
+        att = attend(cfg, q, k, v, offset, window, prefix=prefix)
     else:
         # window: runtime scalar; 0 means full. Encode as huge width.
         eff_window = jnp.where(window > 0, window, jnp.int32(2**30))
@@ -339,12 +361,16 @@ def forward_hidden(params: dict, cfg: ModelConfig, x: jax.Array,
         def body_write(carry, xs):
             h, aux, kvc = carry
             bp, layer, window = xs
+            cached = ctx.cached_lens
             h, a, (k, v) = _dense_block(cfg, bp, h, positions, window,
                                         kv_mask, attend=ctx.attend,
-                                        offset=ctx.offset)
+                                        offset=ctx.offset,
+                                        prefix=_layer_prefix(ctx, kvc, layer))
+            start = -ctx.offset if cached is None else cached - ctx.offset
+            total = ctx.lengths if cached is None else ctx.lengths + cached
             kvc = cache_lib.write_kv_layer(
-                kvc, layer, ctx.slot_ids, k, v, start_pos=-ctx.offset,
-                lengths=ctx.lengths, active=ctx.active)
+                kvc, layer, ctx.slot_ids, k, v, start_pos=start,
+                lengths=total, active=ctx.active, min_pos=cached)
             return (h, aux + a, kvc), None
 
         fn = jax.checkpoint(body_write) if remat else body_write
@@ -505,7 +531,8 @@ def train_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             lengths: jax.Array, cache: Dict[str, Any], slot_ids: jax.Array,
             active: jax.Array, modal_embeds: Optional[jax.Array] = None,
-            prefill_attend: Optional[Any] = None):
+            prefill_attend: Optional[Any] = None,
+            cached_lens: Optional[jax.Array] = None):
     """Process left-padded prompts [B, T]; fill the cache; return last logits.
 
     tokens must be LEFT-padded (lane b's prompt occupies [T-len_b, T)).
@@ -516,8 +543,21 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
     REPRO_ATTN_BACKEND env var, else "gather"). K/V pages are populated
     inside the layer scan (see ``PrefillCtx``), so no per-layer staging
     buffer is allocated on either backend.
+
+    ``cached_lens`` (prefix reuse / chunked prefill): when given, ``tokens``
+    holds only each lane's SUFFIX (``lengths`` = suffix lengths) and lane
+    b's first ``cached_lens[b]`` tokens' K/V are already resident in the
+    slot's paged-pool pages — attention folds them in, RoPE positions shift
+    by cached, only suffix pages are written, and seq_lens lands on
+    cached + suffix. Requires a paged-KV decoder-only attention arch
+    (SSM/hybrid recurrent state cannot be restored from KV pages).
     """
     B, T = tokens.shape
+    if cached_lens is not None and (cfg.arch_type not in ("dense", "moe", "vlm")
+                                    or cfg.is_encoder_decoder):
+        raise ValueError(
+            f"cached_lens (prefix reuse) requires a paged-KV decoder-only "
+            f"arch; {cfg.name!r} is {cfg.arch_type!r}")
     offset = T - lengths                                    # [B]
     pos_in_seq = jnp.arange(T)[None, :] - offset[:, None]   # [-off .. len)
     kv_mask = pos_in_seq >= 0
@@ -533,6 +573,8 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             modal_embeds.astype(x.dtype))
     x = jnp.where(kv_mask[..., None], x, 0)
     positions = jnp.maximum(pos_in_seq, 0)
+    if cached_lens is not None:
+        positions = positions + cached_lens[:, None]
 
     ctx = None
     if cfg.uses_paged_kv:
@@ -540,7 +582,7 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             prefill_attend = attn_backend_lib.get_prefill_backend()
         ctx = PrefillCtx(kvc=cache["kv"], slot_ids=slot_ids, active=active,
                          offset=offset, lengths=lengths,
-                         attend=prefill_attend)
+                         attend=prefill_attend, cached_lens=cached_lens)
 
     h, _aux, extras = forward_hidden(params, cfg, x, positions, kv_mask,
                                      prefill_ctx=ctx)
@@ -562,9 +604,52 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
         cache = dict(cache)
         cache["kv"] = extras
     if cfg.uses_paged_kv:
+        total = lengths if cached_lens is None else lengths + cached_lens
         cache["kv"] = cache_lib.set_seq_lens(
-            cache["kv"], slot_ids, lengths, active)
+            cache["kv"], slot_ids, total, active)
     return last_logits, cache
+
+
+def chunked_prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                    lengths: jax.Array, cache: Dict[str, Any],
+                    slot_ids: jax.Array, active: jax.Array, *, chunk: int,
+                    prefill_attend: Optional[Any] = None):
+    """Prefill left-padded prompts [B, T] in ``chunk``-token pieces.
+
+    The ROADMAP's "bucket > VMEM budget" follow-up: instead of one prefill
+    over the whole bucket, run ceil(T / chunk) prefills of ``chunk`` tokens
+    each; chunk i reads chunks [0, i)'s K/V from the paged pool via the
+    same ``cached_lens`` machinery as radix prefix reuse (each chunk's
+    cached prefix = the tokens already written). Per-lane ragged: a lane
+    whose prompt ends inside chunk i goes inactive for later chunks and its
+    final-token logits are taken from its last live chunk.
+
+    Returns (logits [B, V] at each lane's last prompt token, cache') —
+    identical to single-shot ``prefill`` (the equivalence test asserts it).
+    """
+    B, T = tokens.shape
+    n_chunks = -(-T // chunk)
+    col = jnp.arange(chunk)[None, :]
+    logits = None
+    for i in range(n_chunks):
+        clen = jnp.clip(lengths - i * chunk, 0, chunk)          # [B]
+        cached = jnp.minimum(lengths, i * chunk)
+        live = clen > 0
+        # gather chunk i's tokens (prompt positions [i*chunk, i*chunk+clen))
+        # right-aligned into a [B, chunk] bucket
+        src = col - (chunk - clen)[:, None] + (T - lengths)[:, None] \
+            + i * chunk
+        valid = col >= (chunk - clen)[:, None]
+        toks = jnp.where(valid,
+                         jnp.take_along_axis(tokens,
+                                             jnp.clip(src, 0, T - 1), axis=1),
+                         0)
+        lg, cache = prefill(params, cfg, toks, clen, cache, slot_ids,
+                            active & live, prefill_attend=prefill_attend,
+                            cached_lens=cached)
+        logits = lg if logits is None else jnp.where(live[:, None], lg,
+                                                     logits)
+    return logits, cache
 
 
 def _store_ssm_states(cache, final_states, slot_ids, active):

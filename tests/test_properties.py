@@ -70,6 +70,54 @@ def test_allocator_all_or_nothing(n):
         assert int(alloc2.top) == 8          # unchanged: backpressure
 
 
+@HSET
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 5)),
+                min_size=1, max_size=40))
+def test_refcount_conservation_alloc_share_free(script):
+    """Refcounted sharing never leaks or double-frees: across random
+    alloc / share (co-own) / free (release) scripts, (i) free pages +
+    pages with refcount > 0 partition the pool, (ii) every page's refcount
+    equals the number of owners the model says it has, (iii) a page returns
+    to the free stack exactly when its last owner releases it."""
+    P, MAXN = 16, 5
+    alloc = cache_lib.make_page_allocator(P)
+    owners = {}                 # page -> model refcount
+    held = []                   # allocations that still hold their pages
+    for op, n in script:
+        if op == 0:             # alloc n pages (one owner each)
+            pages, alloc2, ok = cache_lib.alloc_pages(
+                alloc, jnp.asarray(n), MAXN)
+            if bool(ok):
+                alloc = alloc2
+                got = [int(p) for p in np.asarray(pages) if p >= 0]
+                assert len(got) == n
+                for p in got:
+                    assert owners.get(p, 0) == 0, "double-allocated page"
+                    owners[p] = 1
+                held.append(got)
+        elif op == 1 and held:  # share: a second owner joins the oldest row
+            row = held[0]
+            alloc = cache_lib.share_pages(
+                alloc, jnp.asarray(row, jnp.int32))
+            for p in row:
+                owners[p] += 1
+            held.append(list(row))
+        elif op == 2 and held:  # free: one owner releases its row
+            row = held.pop(0)
+            alloc = cache_lib.free_pages(alloc, jnp.asarray(row, jnp.int32))
+            for p in row:
+                owners[p] -= 1
+        rc = np.asarray(alloc.refcount)
+        expect = np.zeros(P, np.int64)
+        for p, c in owners.items():
+            expect[p] = c
+        np.testing.assert_array_equal(rc, expect)
+        free_now = np.asarray(alloc.free_stack)[: int(alloc.top)]
+        assert len(np.unique(free_now)) == len(free_now)
+        assert set(free_now.tolist()) == {p for p in range(P)
+                                          if expect[p] == 0}
+
+
 # ---------------------------------------------------------------------------
 # FCFS selection: engine jnp formulation == Pallas ring-scan kernel
 # ---------------------------------------------------------------------------
@@ -100,6 +148,73 @@ def test_fcfs_engine_equals_kernel(seed, k):
 # ---------------------------------------------------------------------------
 # Ring lifecycle protocol
 # ---------------------------------------------------------------------------
+
+# legal lifecycle edges (paper §4.2) as observable at WINDOW boundaries: a
+# window may advance a slot several states at once, so the observable
+# relation is the transitive closure of the per-step machine (plus self
+# loops; EMPTY is only re-entered through the frontend's release).
+_LIFECYCLE_CLOSURE = {
+    rb.EMPTY: {rb.EMPTY},
+    rb.PREFILL_PENDING: {rb.PREFILL_PENDING, rb.PREFILL_PROCESSING,
+                         rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
+                         rb.DECODE_COMPLETED},
+    rb.PREFILL_PROCESSING: {rb.PREFILL_PROCESSING, rb.DECODE_PROCESSING,
+                            rb.DECODE_PAUSED, rb.DECODE_COMPLETED},
+    rb.DECODE_PROCESSING: {rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
+                           rb.DECODE_COMPLETED},
+    rb.DECODE_PAUSED: {rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
+                       rb.DECODE_COMPLETED},
+    rb.DECODE_COMPLETED: {rb.DECODE_COMPLETED},
+}
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 2))
+def test_ring_lifecycle_under_admission_backpressure(seed, tiny_apis):
+    """Random shared-prefix-free workloads against a page pool too small
+    for the whole batch: every observed slot transition stays inside the
+    lifecycle state machine, the allocator conserves pages at every window
+    boundary, and everything eventually completes (backpressure never
+    wedges admission)."""
+    from repro.core import engine as eng
+    api, params = tiny_apis("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    serve = ServeConfig(num_slots=8, max_prompt_len=16, max_new_tokens=8,
+                        decode_batch=4, window=4, admit_per_step=4,
+                        page_size=4, num_pages=14, eos_token=-1)
+    n_req = int(rng.integers(3, 7))
+    state = eng.init_engine_state(api, serve)
+    ring = state.ring
+    for i in range(n_req):
+        toks = rng.integers(3, api.cfg.vocab_size,
+                            int(rng.integers(2, 15))).tolist()
+        ring = rb.submit_request(ring, i, tokens=toks, request_id=i,
+                                 max_new=int(rng.integers(1, 8)), arrival=i,
+                                 step=0)
+    state = dataclasses.replace(state, ring=ring)
+    fn = eng.make_serve_window(api, serve)
+    prev = np.asarray(state.ring.slot_state)
+    saw_backpressure = False
+    for _ in range(40):
+        state = fn(params, state)
+        cur = np.asarray(state.ring.slot_state)
+        for s in range(serve.num_slots):
+            assert cur[s] in _LIFECYCLE_CLOSURE[prev[s]], \
+                f"illegal transition {rb.STATE_NAMES[prev[s]]} -> " \
+                f"{rb.STATE_NAMES[cur[s]]} (slot {s})"
+        saw_backpressure |= bool((cur[:n_req] == rb.PREFILL_PENDING).any())
+        # page conservation at every window boundary: free + referenced
+        # partition the pool (all refcounts 1: no sharing in this workload)
+        rc = np.asarray(state.alloc.refcount)
+        assert int(state.alloc.top) + int((rc > 0).sum()) == serve.num_pages
+        free_now = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
+        assert len(np.unique(free_now)) == len(free_now)
+        prev = cur
+        if (cur[:n_req] == rb.DECODE_COMPLETED).all():
+            break
+    assert (prev[:n_req] == rb.DECODE_COMPLETED).all(), \
+        "backpressure wedged admission"
+    assert int(state.alloc.top) == serve.num_pages
 
 
 def test_ring_submit_release_protocol():
