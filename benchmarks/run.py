@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
   decode_attn          §4.2    decode attention backends: gather vs pallas
   prefill_attn         §4.2    prefill attention backends: gather vs flash
   prefix_cache         §4.2    radix prefix reuse: hit rate vs TTFT / pages
+  tpot_under_load      Table 6 P99 inter-token gap: mixed-phase vs
+                               phase-exclusive scheduling under admission
   roofline             (g)     dry-run roofline table
 
 REPRO_BENCH_SMOKE=1 shrinks the attention-backend sweeps to one tiny point
@@ -24,7 +26,8 @@ import traceback
 
 from benchmarks import (decode_attn, fig3_makespan, fig4_tokenizer,
                         fig8_energy, kernels, prefill_attn, prefix_cache,
-                        roofline, table6_presaturation, table7_interference)
+                        roofline, table6_presaturation, table7_interference,
+                        tpot_under_load)
 from benchmarks.common import emit
 
 MODULES = [
@@ -33,6 +36,7 @@ MODULES = [
     ("decode_attn", decode_attn),
     ("prefill_attn", prefill_attn),
     ("prefix_cache", prefix_cache),
+    ("tpot_under_load", tpot_under_load),
     ("fig3_makespan", fig3_makespan),
     ("table6_presaturation", table6_presaturation),
     ("table7_interference", table7_interference),

@@ -176,6 +176,44 @@ class ServeConfig:
     # always evict enough for the largest ring-pending admission (the
     # starvation fallback) — 0 means evict ONLY in that starving case.
     prefix_evict_watermark: int = 0
+    # mixed-phase continuous batching (paper §4.2 pause-free variant):
+    # 0 = phase-exclusive legacy scheduler (a step runs prefill OR decode);
+    # > 0 = every engine step decodes ALL generating lanes AND advances at
+    # most this many prompt tokens of pending prefill (chunk cursor carried
+    # in ring.prefill_done_len through the PREFILLING lifecycle state), so
+    # admission never head-of-line-blocks token emission. Requires a
+    # paged-KV decoder-only arch (chunk resume rides the same cached_lens
+    # machinery as radix prefix reuse). Greedy token streams are identical
+    # under both policies — chunked prefill is bitwise-equal to single shot.
+    prefill_chunk_tokens: int = 0
+    # how many PREFILLING slots advance one chunk per step (bounds the
+    # per-step prefill compute riding alongside decode; FCFS beyond it)
+    max_prefills_per_step: int = 1
+
+    def __post_init__(self):
+        if self.prefill_chunk_tokens < 0:
+            raise ValueError(
+                f"prefill_chunk_tokens must be >= 0, got "
+                f"{self.prefill_chunk_tokens}")
+        if self.prefill_chunk_tokens > 0:
+            if self.max_prefills_per_step < 1:
+                raise ValueError(
+                    f"max_prefills_per_step must be >= 1 under the "
+                    f"mixed-phase scheduler, got {self.max_prefills_per_step}")
+            if self.prefill_chunk_tokens > self.max_prompt_len:
+                raise ValueError(
+                    f"prefill_chunk_tokens={self.prefill_chunk_tokens} "
+                    f"exceeds max_prompt_len={self.max_prompt_len}; a chunk "
+                    f"larger than any prompt is the phase-exclusive "
+                    f"scheduler with extra compile shapes")
+            if (self.prefill_chunk_tokens > self.prefill_block_q
+                    and self.prefill_chunk_tokens % self.prefill_block_q):
+                raise ValueError(
+                    f"prefill_chunk_tokens={self.prefill_chunk_tokens} is "
+                    f"not a multiple of prefill_block_q="
+                    f"{self.prefill_block_q}: the flash-prefill kernel "
+                    f"tiles queries at block_q, so a ragged last tile "
+                    f"burns a full tile of compute every chunk")
 
     @property
     def max_seq(self) -> int:

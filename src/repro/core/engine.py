@@ -13,11 +13,18 @@ Paper §4.2, mechanism -> JAX mapping:
   * parallel slot scanning + CAS claim -> vectorized FCFS selection over the
                                           slot-state array (ring_scan Pallas
                                           kernel is the TPU hot-path form)
-  * pause-and-resume continuous        -> admission cond: a step either runs
-    batching with inline prefill          a (max-shape) prefill for <= A new
-                                          requests while decode lanes are
+  * pause-and-resume continuous        -> two policies, selected by
+    batching with inline prefill          ``ServeConfig.prefill_chunk_tokens``:
+                                          (0) phase-exclusive: a step either
+                                          runs a (max-shape) prefill for <= A
+                                          new requests while decode lanes are
                                           DECODE_PAUSED, or one decode step
-                                          for all active lanes
+                                          for all active lanes; (>0) MIXED-
+                                          PHASE: every step decodes all
+                                          generating lanes AND advances at
+                                          most ``prefill_chunk_tokens`` of
+                                          pending prefill (see below), so
+                                          admission never stalls decode
   * admission gating (3 conditions)    -> (i) pending prefills, (ii) free
                                           decode-lane capacity, (iii) KV page
                                           availability (all-or-nothing alloc
@@ -39,6 +46,37 @@ way). The ``REPRO_ATTN_BACKEND`` env var overrides both.
 ``ServeConfig.kv_cache_dtype = "int8"`` serves a quantised KV pool; the
 pallas decode backend dequantises fused in-kernel and prefill writes
 quantise inside the scan via ``cache.write_kv_layer``.
+
+Mixed-phase step (``ServeConfig.prefill_chunk_tokens > 0``), mapped onto
+the paper's persistent-kernel scheduling loop (Fig. 2 / §4): the paper's
+GPU-resident scheduler never leaves its control loop — each iteration
+scans the ring, admits work and runs whatever compute is due, so a newly
+arrived prompt costs running requests at most one bounded iteration, never
+a full prefill. The phase-exclusive policy above approximates that loop
+but re-introduces the head-of-line blocking the paper's P99 TPOT
+comparison (Table 6) penalises in vLLM-class schedulers: one admitted
+long prompt suspends every decode lane for its whole prefill. The mixed
+step restores the bounded-iteration property with three sub-phases per
+iteration, all inside the same fused program:
+
+  1. admit: up to A PREFILL_PENDING slots pass the 3-condition gate
+     (pending / lane capacity / suffix pages), get their pages wired and
+     enter ``PREFILLING`` with chunk cursor ``ring.prefill_done_len`` =
+     ``cached_len`` — no model compute yet;
+  2. chunk: up to ``max_prefills_per_step`` PREFILLING slots (FCFS)
+     advance one ``prefill_chunk_tokens`` chunk of suffix prefill,
+     resuming from the cursor via the same ``cached_lens`` machinery as
+     radix prefix reuse (``api.prefill_chunked``'s inner step, bitwise-
+     equal to single shot); the final chunk samples the first token;
+  3. decode: ALL lanes that were DECODE_PROCESSING at the top of the step
+     run one decode step — a prefill in flight never pauses them, so the
+     per-lane inter-token gap is bounded by one (decode + chunk) step.
+
+Greedy token streams are identical under both policies (chunking is
+bitwise-equal and each request's KV/positions don't depend on the
+interleave); ``tests/test_scheduler_diff.py`` holds both engines to that.
+The chunk size trades TTFT against TPOT jitter — ``benchmarks/
+tpot_under_load.py`` sweeps it.
 
 Prefix plane (``ServeConfig.prefix_cache``), mapped onto the paper's
 Fig. 2 DPU/GPU split: the radix prefix index
@@ -121,10 +159,27 @@ def _check_prefix_cache(api: ModelApi, serve: ServeConfig) -> None:
             f"attention arch; {cfg.name!r} is {cfg.arch_type!r}")
 
 
+def _check_mixed_phase(api: ModelApi, serve: ServeConfig) -> None:
+    """The mixed-phase scheduler resumes a prompt from its already-written
+    KV pages chunk by chunk (the ``cached_lens`` machinery); recurrent
+    state (SSM/hybrid) and enc-dec cross-attention cannot be suspended
+    mid-prompt that way — refuse at init instead of serving garbage."""
+    if serve.prefill_chunk_tokens <= 0:
+        return
+    cfg = api.cfg
+    if (cfg.arch_type not in ("dense", "moe", "vlm")
+            or cfg.is_encoder_decoder or not cfg.uses_paged_kv):
+        raise ValueError(
+            f"ServeConfig.prefill_chunk_tokens (mixed-phase scheduling) "
+            f"requires a paged-KV decoder-only attention arch; "
+            f"{cfg.name!r} is {cfg.arch_type!r}")
+
+
 def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
                       enc_len: int = 0) -> EngineState:
     _check_attn_backend(api, serve)
     _check_prefix_cache(api, serve)
+    _check_mixed_phase(api, serve)
     cache = cache_for_serve(api, serve, enc_len=enc_len)
     return EngineState(
         ring=rb.make_ring(serve),
@@ -135,6 +190,63 @@ def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
         step=jnp.asarray(0, jnp.int32),
         windows_done=jnp.asarray(0, jnp.int32),
     )
+
+
+def free_done_rows(alloc, block_table, slots, done):
+    """Release the block-table rows of ``done`` slots (one allocator ref
+    per page) and clear them — shared by the prefill/chunk branches
+    (max_new==1 completions), the decode branch, and ``drain_completed``."""
+    S = block_table.shape[0]
+
+    def free_one(carry, xs):
+        alloc, block_table = carry
+        slot, is_done = xs
+        row = block_table[jnp.clip(slot, 0, S - 1)]
+        alloc2 = cache_lib.free_pages(alloc, row)
+        alloc = jax.tree.map(
+            lambda a, b: jnp.where(is_done, b, a), alloc, alloc2)
+        block_table = block_table.at[
+            jnp.where(is_done, slot, S)].set(-1, mode="drop")
+        return (alloc, block_table), None
+
+    (alloc, block_table), _ = jax.lax.scan(
+        free_one, (alloc, block_table), (slots, done))
+    return alloc, block_table
+
+
+def drain_completed(state: EngineState) -> EngineState:
+    """Engine-side slot drain for FRONTEND-LESS serving: release every
+    DECODE_COMPLETED slot — free its block-table row (one allocator ref per
+    page) and return the slot to EMPTY — after the caller has read its
+    output tokens from ``ring.output_arena``.
+
+    This closes the ROADMAP-noted leak: under ``ServeConfig.prefix_cache``
+    page release is frontend-owned by design (the trie must index freshly
+    prefilled pages before the slot's references drop), so engine-only
+    serving used to strand completed slots' pages forever. Without a
+    ``BlinkFrontend`` nothing ever populates the prefix trie or
+    ``ring.shared_pages`` — every page has exactly one owner — so this
+    plain release is conservation-exact. With a frontend attached, use
+    ``BlinkFrontend.poll`` instead: draining here would bypass the trie
+    commit and evict reusable prefixes."""
+    ring = state.ring
+    S = ring.num_slots
+    done = ring.slot_state == rb.DECODE_COMPLETED
+    alloc, cache = state.alloc, state.cache
+    kvc = cache.get("kv")
+    if kvc is not None:
+        alloc, bt = free_done_rows(alloc, kvc.block_table,
+                                   jnp.arange(S, dtype=jnp.int32), done)
+        cache = dict(cache, kv=dataclasses.replace(kvc, block_table=bt))
+    ring = dataclasses.replace(
+        ring,
+        slot_state=jnp.where(done, rb.EMPTY, ring.slot_state),
+        arrival=jnp.where(done, INT_MAX, ring.arrival),
+        cached_len=jnp.where(done, 0, ring.cached_len),
+        prefill_done_len=jnp.where(done, 0, ring.prefill_done_len),
+        shared_pages=jnp.where(done[:, None], -1, ring.shared_pages),
+    )
+    return dataclasses.replace(state, ring=ring, alloc=alloc, cache=cache)
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +291,7 @@ def _left_pad_prompts(ring: rb.RingState, slots: jax.Array,
     A, P = rows.shape
     B = bucket or P
     st = jnp.zeros((A,), jnp.int32) if start is None else start
-    lens = jnp.minimum(ring.prompt_len[slots] - st, B)
+    lens = jnp.clip(ring.prompt_len[slots] - st, 0, B)
     col = jnp.arange(B)[None, :]
     src = col - (B - lens)[:, None] + st[:, None]       # [A, B]
     valid = col >= (B - lens)[:, None]
@@ -197,6 +309,9 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
     ppr = serve.pages_per_req
     paged = cfg.uses_paged_kv
     use_prefix = serve.prefix_cache
+    C = serve.prefill_chunk_tokens
+    Mp = serve.max_prefills_per_step
+    mixed = C > 0
 
     def suffix_pages_needed(ring, cand):
         """Pages a candidate still needs: lifetime total minus its cached
@@ -207,26 +322,83 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             return total
         return jnp.maximum(total - ring.cached_len[cand] // ps, 0)
 
-    def free_done_rows(alloc, block_table, slots, done):
-        """Release the block-table rows of ``done`` slots (one allocator ref
-        per page) and clear them — shared by the prefill branch (max_new==1
-        completions) and the decode branch."""
-        S = block_table.shape[0]
+    def assign_lanes(state, cand, cand_valid):
+        """Reserve one free decode lane per valid candidate (FCFS order).
+        Lanes are assigned by rank AMONG THE VALID candidates (cumsum
+        compaction), not by candidate position — when the page gate drops a
+        mid-list candidate, later candidates still land on genuinely free
+        lanes (the host baseline compacts the same way; positional
+        assignment would defer an admission the gate already passed).
+        Returns (lanes [A], admit [A] — valid & lane available)."""
+        free_lane_order = jnp.argsort(
+            jnp.where(state.lane_slot < 0, 0, 1), stable=True)
+        pos = jnp.cumsum(cand_valid.astype(jnp.int32)) - 1   # rank if valid
+        lanes = free_lane_order[jnp.clip(pos, 0, Bd - 1)].astype(jnp.int32)
+        lane_free = state.lane_slot[lanes] < 0
+        return lanes, cand_valid & lane_free
 
-        def free_one(carry, xs):
-            alloc, block_table = carry
-            slot, is_done = xs
-            row = block_table[jnp.clip(slot, 0, S - 1)]
-            alloc2 = cache_lib.free_pages(alloc, row)
+    def wire_pages(ring, cache, alloc, cand, admit):
+        """Page allocation: all-or-nothing per request (backpressure),
+        charging only the SUFFIX beyond a cached prefix; wires the
+        block-table row (shared prefix chain + fresh suffix pages).
+        Returns (cache, alloc, admit) with admit &= allocation ok."""
+        if not paged:
+            return cache, alloc, admit
+        need = suffix_pages_needed(ring, cand)
+
+        def alloc_one(carry, xs):
+            alloc, = carry
+            n, want = xs
+            pages, alloc2, ok = cache_lib.alloc_pages(alloc, n, ppr)
+            ok = ok & want
             alloc = jax.tree.map(
-                lambda a, b: jnp.where(is_done, b, a), alloc, alloc2)
-            block_table = block_table.at[
-                jnp.where(is_done, slot, S)].set(-1, mode="drop")
-            return (alloc, block_table), None
+                lambda a, b: jnp.where(ok, b, a), alloc, alloc2)
+            return (alloc,), (jnp.where(ok, pages, -1), ok)
 
-        (alloc, block_table), _ = jax.lax.scan(
-            free_one, (alloc, block_table), (slots, done))
-        return alloc, block_table
+        (alloc,), (page_rows, alloc_ok) = jax.lax.scan(
+            alloc_one, (alloc,), (need, admit))
+        admit = admit & alloc_ok
+        if use_prefix:
+            # block-table row = shared prefix chain (frontend-owned
+            # refs, read-only) followed by the freshly allocated
+            # suffix pages shifted past it
+            cached_pages = ring.cached_len[cand] // ps      # [A]
+            blk = jnp.arange(ppr)[None, :]
+            shift = blk - cached_pages[:, None]
+            suffix_rows = jnp.where(
+                shift >= 0,
+                jnp.take_along_axis(page_rows,
+                                    jnp.clip(shift, 0, ppr - 1), axis=1),
+                -1)
+            page_rows = jnp.where(blk < cached_pages[:, None],
+                                  ring.shared_pages[cand], suffix_rows)
+        kvc = cache["kv"]
+        sel = jnp.where(admit, cand, kvc.block_table.shape[0])
+        block_table = kvc.block_table.at[sel].set(page_rows, mode="drop")
+        cache = dict(cache, kv=dataclasses.replace(
+            kvc, block_table=block_table))
+        return cache, alloc, admit
+
+    def gate_candidates(state, cand, cand_valid):
+        """Admission gating (paper §4.2's three conditions): (i) pending
+        prefills [cand_valid], (ii) KV page availability — candidates whose
+        pages can't be allocated stay PENDING and must NOT block the step,
+        (iii) free decode-lane capacity. Page arithmetic only exists for
+        paged configs — SSM archs admit on lane capacity alone."""
+        n_free = jnp.sum(state.lane_slot < 0)
+        if paged:
+            need = suffix_pages_needed(state.ring, cand)
+            running = state.alloc.top
+        count = jnp.int32(0)
+        gated = []
+        for j in range(A):         # A is small & static: unrolled
+            fits = cand_valid[j] & (count < n_free)
+            if paged:
+                fits &= need[j] <= running
+                running = jnp.where(fits, running - need[j], running)
+            count = count + fits.astype(jnp.int32)
+            gated.append(fits)
+        return jnp.stack(gated)
 
     def prefill_branch(params, state: EngineState, cand, cand_valid):
         ring, cache, alloc = state.ring, state.cache, state.alloc
@@ -238,49 +410,8 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             jnp.where(running, rb.DECODE_PAUSED,
                       ring.slot_state[safe_lane_slots]), mode="drop")
 
-        # assign free lanes to candidates (FCFS order)
-        free_lane_order = jnp.argsort(
-            jnp.where(state.lane_slot < 0, 0, 1), stable=True)
-        lanes = free_lane_order[:A].astype(jnp.int32)
-        lane_free = state.lane_slot[lanes] < 0
-        admit = cand_valid & lane_free
-
-        # page allocation: all-or-nothing per request (backpressure),
-        # charging only the SUFFIX beyond a cached prefix
-        if paged:
-            need = suffix_pages_needed(ring, cand)
-
-            def alloc_one(carry, xs):
-                alloc, = carry
-                n, want = xs
-                pages, alloc2, ok = cache_lib.alloc_pages(alloc, n, ppr)
-                ok = ok & want
-                alloc = jax.tree.map(
-                    lambda a, b: jnp.where(ok, b, a), alloc, alloc2)
-                return (alloc,), (jnp.where(ok, pages, -1), ok)
-
-            (alloc,), (page_rows, alloc_ok) = jax.lax.scan(
-                alloc_one, (alloc,), (need, admit))
-            admit = admit & alloc_ok
-            if use_prefix:
-                # block-table row = shared prefix chain (frontend-owned
-                # refs, read-only) followed by the freshly allocated
-                # suffix pages shifted past it
-                cached_pages = ring.cached_len[cand] // ps      # [A]
-                blk = jnp.arange(ppr)[None, :]
-                shift = blk - cached_pages[:, None]
-                suffix_rows = jnp.where(
-                    shift >= 0,
-                    jnp.take_along_axis(page_rows,
-                                        jnp.clip(shift, 0, ppr - 1), axis=1),
-                    -1)
-                page_rows = jnp.where(blk < cached_pages[:, None],
-                                      ring.shared_pages[cand], suffix_rows)
-            kvc = cache["kv"]
-            sel = jnp.where(admit, cand, kvc.block_table.shape[0])
-            block_table = kvc.block_table.at[sel].set(page_rows, mode="drop")
-            cache = dict(cache, kv=dataclasses.replace(
-                kvc, block_table=block_table))
+        lanes, admit = assign_lanes(state, cand, cand_valid)
+        cache, alloc, admit = wire_pages(ring, cache, alloc, cand, admit)
 
         # run the (max-shape) prefill for admitted requests — suffix-only
         # when a cached prefix is present
@@ -340,9 +471,12 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         return dataclasses.replace(
             state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
 
-    def decode_branch(params, state: EngineState, cand, cand_valid):
+    def decode_branch(params, state: EngineState, active):
+        """One decode step over ``active`` lanes ([Bd] bool). Phase-exclusive
+        passes every occupied lane; the mixed step passes its top-of-step
+        snapshot of DECODE_PROCESSING lanes (a slot still PREFILLING holds
+        its reserved lane but must not decode)."""
         ring, cache, alloc = state.ring, state.cache, state.alloc
-        active = state.lane_slot >= 0
         slots = jnp.maximum(state.lane_slot, 0)
         tokens = ring.last_token[slots]
 
@@ -386,30 +520,92 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         return dataclasses.replace(
             state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
 
-    def engine_step(params, state: EngineState) -> EngineState:
+    # -- mixed-phase sub-branches (ServeConfig.prefill_chunk_tokens > 0) ----
+
+    def admit_branch(state: EngineState, cand, cand_valid):
+        """Admission WITHOUT model compute: reserve a lane, wire pages,
+        enter PREFILLING with the chunk cursor at the cached prefix."""
+        ring, cache, alloc = state.ring, state.cache, state.alloc
+        lanes, admit = assign_lanes(state, cand, cand_valid)
+        cache, alloc, admit = wire_pages(ring, cache, alloc, cand, admit)
+        mark = jnp.where(admit, cand, ring.num_slots)
+        ring = dataclasses.replace(
+            ring,
+            slot_state=ring.slot_state.at[mark].set(rb.PREFILLING,
+                                                    mode="drop"),
+            prefill_done_len=ring.prefill_done_len.at[mark].set(
+                ring.cached_len[cand] if use_prefix
+                else jnp.zeros_like(cand), mode="drop"))
+        lane_slot = state.lane_slot.at[jnp.where(admit, lanes, Bd)
+                                       ].set(cand, mode="drop")
+        return dataclasses.replace(
+            state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
+
+    def chunk_branch(params, state: EngineState):
+        """Advance up to ``max_prefills_per_step`` PREFILLING slots (FCFS)
+        by one ``prefill_chunk_tokens`` chunk, resuming from the cursor via
+        the cached_lens machinery (chunk i's cached prefix = everything
+        already written). The final chunk samples the first token."""
+        ring, cache, alloc = state.ring, state.cache, state.alloc
+        keyed = jnp.where(ring.slot_state == rb.PREFILLING, ring.arrival,
+                          INT_MAX)
+        pslots = jnp.argsort(keyed)[:Mp].astype(jnp.int32)
+        pvalid = keyed[pslots] != INT_MAX
+        cursor = ring.prefill_done_len[pslots]                  # [Mp]
+        prompts, lens = _left_pad_prompts(ring, pslots, C, start=cursor)
+        lens = jnp.where(pvalid, lens, 0)
+        logits, cache = api.prefill(params, prompts, lens, cache, pslots,
+                                    pvalid, cached_lens=cursor)
+        tok = sample_tokens(state.key, logits.astype(jnp.float32),
+                            ring.temperature[pslots], top_p=serve.top_p,
+                            slot_ids=pslots, step=state.step)
+
+        new_done = cursor + lens
+        completing = pvalid & (new_done >= ring.prompt_len[pslots])
+        adv = jnp.where(pvalid, pslots, ring.num_slots)
+        done_len = ring.prefill_done_len.at[adv].set(new_done, mode="drop")
+
+        # first-token bookkeeping for completing slots only — partial
+        # chunks emit nothing (the poll plane sees generated == 0)
+        mark = jnp.where(completing, pslots, ring.num_slots)
+        out_arena = ring.output_arena.at[mark, 0].set(tok, mode="drop")
+        tok_step = ring.token_step.at[mark, 0].set(state.step, mode="drop")
+        generated = ring.generated.at[mark].set(1, mode="drop")
+        last_token = ring.last_token.at[mark].set(tok, mode="drop")
+        prefill_step = ring.prefill_step.at[mark].set(state.step, mode="drop")
+
+        # single-token completions (max_new == 1) finish at the final chunk
+        done = completing & (ring.max_new[pslots] <= 1)
+        new_state_code = jnp.where(done, rb.DECODE_COMPLETED,
+                                   rb.DECODE_PROCESSING)
+        ring_states = ring.slot_state.at[mark].set(new_state_code,
+                                                   mode="drop")
+        if paged and not use_prefix:
+            alloc, block_table = free_done_rows(
+                alloc, cache["kv"].block_table, pslots, done)
+            cache = dict(cache, kv=dataclasses.replace(
+                cache["kv"], block_table=block_table))
+
+        # release the reserved lane of max_new==1 completions
+        lane_done = jnp.any(
+            (state.lane_slot[:, None] == pslots[None, :]) & done[None, :],
+            axis=1)
+        lane_slot = jnp.where(lane_done, -1, state.lane_slot)
+
+        ring = dataclasses.replace(
+            ring, slot_state=ring_states, prefill_done_len=done_len,
+            output_arena=out_arena, token_step=tok_step, generated=generated,
+            last_token=last_token, prefill_step=prefill_step)
+        return dataclasses.replace(
+            state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
+
+    # -- the per-iteration scheduler functions ------------------------------
+
+    def engine_step_exclusive(params, state: EngineState) -> EngineState:
         # overlapped ring scan (paper: scan happens while decode executes;
         # here: same fused program, no host involvement either way)
         cand, cand_valid = select_pending_fcfs(state.ring, A)
-
-        # admission gating (paper §4.2's three conditions): (i) pending
-        # prefills [cand_valid], (ii) KV page availability — candidates whose
-        # pages can't be allocated stay PENDING and must NOT pause decode,
-        # (iii) free decode-lane capacity. Page arithmetic only exists for
-        # paged configs — SSM archs admit on lane capacity alone.
-        n_free = jnp.sum(state.lane_slot < 0)
-        if paged:
-            need = suffix_pages_needed(state.ring, cand)
-            running = state.alloc.top
-        count = jnp.int32(0)
-        gated = []
-        for j in range(A):         # A is small & static: unrolled
-            fits = cand_valid[j] & (count < n_free)
-            if paged:
-                fits &= need[j] <= running
-                running = jnp.where(fits, running - need[j], running)
-            count = count + fits.astype(jnp.int32)
-            gated.append(fits)
-        cand_valid = jnp.stack(gated)
+        cand_valid = gate_candidates(state, cand, cand_valid)
         do_prefill = jnp.any(cand_valid)
         any_active = jnp.any(state.lane_slot >= 0)
 
@@ -418,7 +614,7 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             # the slot scan — like the persistent kernel spinning on the ring
             return jax.lax.cond(
                 any_active,
-                lambda st: decode_branch(params, st, cand, cand_valid),
+                lambda st: decode_branch(params, st, st.lane_slot >= 0),
                 lambda st: st,
                 s)
 
@@ -433,7 +629,46 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             key=state.key,  # key reuse is safe: folded with (slot, step)
         )
 
-    return engine_step
+    def engine_step_mixed(params, state: EngineState) -> EngineState:
+        # decode-lane snapshot FIRST: lanes generating at the top of the
+        # step decode this step no matter what admission/chunking does —
+        # the no-lane-ever-skips-a-step guarantee the differential harness
+        # asserts (a slot completing its prefill this step starts decoding
+        # next step, exactly like the phase-exclusive policy).
+        slots0 = jnp.maximum(state.lane_slot, 0)
+        decode_active = (state.lane_slot >= 0) & \
+            (state.ring.slot_state[slots0] == rb.DECODE_PROCESSING)
+
+        # 1. admit (no model compute — PREFILLING + cursor at cached_len)
+        cand, cand_valid = select_pending_fcfs(state.ring, A)
+        cand_valid = gate_candidates(state, cand, cand_valid)
+        state = jax.lax.cond(
+            jnp.any(cand_valid),
+            lambda s: admit_branch(s, cand, cand_valid),
+            lambda s: s,
+            state)
+
+        # 2. chunk: freshly admitted slots run their first chunk this very
+        # step (TTFT parity with phase-exclusive for single-chunk prompts)
+        state = jax.lax.cond(
+            jnp.any(state.ring.slot_state == rb.PREFILLING),
+            lambda s: chunk_branch(params, s),
+            lambda s: s,
+            state)
+
+        # 3. decode all snapshot lanes
+        state = jax.lax.cond(
+            jnp.any(decode_active),
+            lambda s: decode_branch(params, s, decode_active),
+            lambda s: s,
+            state)
+        return dataclasses.replace(
+            state,
+            step=state.step + 1,
+            key=state.key,  # key reuse is safe: folded with (slot, step)
+        )
+
+    return engine_step_mixed if mixed else engine_step_exclusive
 
 
 # ---------------------------------------------------------------------------
@@ -494,6 +729,11 @@ class WindowCache:
         self.serve = serve
         bs = sorted(set(list(buckets or ()) + [serve.max_prompt_len]))
         assert all(1 <= b <= serve.max_prompt_len for b in bs)
+        if serve.prefill_chunk_tokens > 0:
+            # mixed-phase scheduling prefills at the FIXED chunk shape —
+            # prompt-length buckets would compile identical programs, so
+            # the cache degenerates to the single fallback executable
+            bs = [serve.max_prompt_len]
         self.buckets = bs
         self._fns = {b: make_serve_window(api, serve, prompt_bucket=b)
                      for b in bs}

@@ -7,10 +7,13 @@ CPU-resident scheduler); the next step is dispatched from the host.
 
 The scheduling *policy* (FCFS, admission conditions, page accounting — and,
 when ``ServeConfig.prefix_cache`` is on, radix prefix matching, refcounted
-page sharing, suffix-only admission/prefill, trie commit and LRU eviction)
-is identical to ``repro.core.engine`` — the paper's controlled-comparison
-requirement ("identical scheduling policy", §4.2) — so benchmark deltas
-isolate WHERE control runs, not WHAT it decides.
+page sharing, suffix-only admission/prefill, trie commit and LRU eviction;
+and, when ``ServeConfig.prefill_chunk_tokens`` is set, the mixed-phase
+admit/chunk/decode step with its PREFILLING cursor) is identical to
+``repro.core.engine`` — the paper's controlled-comparison requirement
+("identical scheduling policy", §4.2) — so benchmark deltas isolate WHERE
+control runs, not WHAT it decides. ``tests/test_scheduler_diff.py`` holds
+the two engines to bitwise-identical token streams over random traces.
 
 ``jitter`` models CPU interference: a callable invoked once per *host touch*
 (scheduler iteration, dispatch, copy-back). Under colocation the paper
@@ -45,9 +48,10 @@ class HostEngine:
         self.cache = cache_for_serve(api, serve, enc_len=enc_len)
         self._enc_len = enc_len
         self.paged = api.cfg.uses_paged_kv
+        from repro.core.engine import _check_mixed_phase, _check_prefix_cache
         if serve.prefix_cache:
-            from repro.core.engine import _check_prefix_cache
             _check_prefix_cache(api, serve)
+        _check_mixed_phase(api, serve)
         S = serve.num_slots
         # host-side scheduling state (the CPU-resident control plane)
         self.slot_state = np.zeros(S, np.int32)
@@ -65,6 +69,8 @@ class HostEngine:
         self.prefix = PrefixIndex(serve.page_size) if serve.prefix_cache \
             else None
         self.slot_cached = np.zeros(S, np.int32)
+        # mixed-phase chunk cursor (mirror of ring.prefill_done_len)
+        self.prefill_done = np.zeros(S, np.int32)
         self.lane_slot = np.full(serve.decode_batch, -1, np.int32)
         self.key = jax.random.PRNGKey(seed)
         self.step_count = 0
@@ -114,6 +120,7 @@ class HostEngine:
         self.prefix = PrefixIndex(serve.page_size) if serve.prefix_cache \
             else None
         self.slot_cached = np.zeros(S, np.int32)
+        self.prefill_done = np.zeros(S, np.int32)
         self.lane_slot = np.full(serve.decode_batch, -1, np.int32)
         self.key = jax.random.PRNGKey(seed)
         self.step_count = 0
@@ -135,6 +142,7 @@ class HostEngine:
         self.outputs[s] = []
         self.token_times[s] = []
         self.slot_cached[s] = 0
+        self.prefill_done[s] = 0
         self.slot_pages[s] = []
         if self.prefix is not None:
             # identical policy to the device frontend: match at submit and
@@ -156,6 +164,31 @@ class HostEngine:
         self.arrival[slot] = np.iinfo(np.int32).max
         return toks
 
+    def _commit_prompt_to_trie(self, slot: int) -> None:
+        """Index a fully prefilled prompt's full pages into the trie (the
+        trie takes one ref per newly indexed page) — at prefill complete,
+        never off a partial chunk."""
+        if self.prefix is None:
+            return
+        n_full = len(self.prompt[slot]) // self.serve.page_size
+        row = self.slot_pages.get(slot, [])[:n_full]
+        for p in self.prefix.insert(self.prompt[slot], row):
+            self.refcount[p] += 1
+
+    def _emit_first_token(self, slot: int, tok: int, now: float) -> bool:
+        """First-token bookkeeping shared by the exclusive prefill and the
+        mixed final chunk. Returns True if the request completed
+        (max_new == 1)."""
+        self.outputs[slot].append(tok)
+        self.token_times[slot].append(now)
+        self.first_token_time[slot] = now
+        self.generated[slot] = 1
+        self.last_token[slot] = tok
+        if self.generated[slot] >= self.max_new[slot]:
+            self._complete(slot)
+            return True
+        return False
+
     def _release_row(self, pages: List[int]) -> None:
         """Drop one reference per page; refcount-zero pages rejoin the pool."""
         for p in pages:
@@ -175,10 +208,16 @@ class HostEngine:
 
     # -- one host-driven scheduler iteration --------------------------------
     def step(self) -> None:
-        serve = self.serve
-        self.jitter()                      # host touch 1: scheduler wakeup
+        if self.serve.prefill_chunk_tokens > 0:
+            self._step_mixed()
+        else:
+            self._step_exclusive()
+        self.step_count += 1
 
-        # host-side ring scan (FCFS)
+    def _scan_pending(self):
+        """Host-side ring scan (FCFS) + the prefix-eviction starvation
+        valve. Returns (pending slots by arrival, free lanes)."""
+        serve = self.serve
         pending = np.where(self.slot_state == rb.PREFILL_PENDING)[0]
         pending = pending[np.argsort(self.arrival[pending], kind="stable")]
         free_lanes = np.where(self.lane_slot < 0)[0]
@@ -194,7 +233,13 @@ class HostEngine:
                               total - int(self.slot_cached[s])
                               // serve.page_size)
         self.maybe_evict(max(serve.prefix_evict_watermark, starved))
+        return pending, free_lanes
 
+    def _admit_scan(self, pending, free_lanes) -> List[int]:
+        """FCFS admission under the 3-condition gate (pending / lane
+        capacity / suffix pages, all-or-nothing). Pops the pages and wires
+        block-table rows; returns the admitted slots."""
+        serve = self.serve
         admit: List[int] = []
         for s in pending[: serve.admit_per_step]:
             if len(admit) >= len(free_lanes):
@@ -218,36 +263,67 @@ class HostEngine:
                     self.cache["kv"], block_table=bt.at[s].set(
                         jnp.asarray(row)))
             admit.append(int(s))
+        return admit
 
+    def _step_exclusive(self) -> None:
+        """Legacy phase-exclusive iteration: a step runs prefill for the
+        admitted batch OR one decode step, never both (vLLM-class)."""
+        self.jitter()                      # host touch 1: scheduler wakeup
+        pending, free_lanes = self._scan_pending()
+        admit = self._admit_scan(pending, free_lanes)
         if admit:
             self._run_prefill(admit, free_lanes)
         else:
             self._run_decode()
-        self.step_count += 1
 
-    def _run_prefill(self, admit: List[int], free_lanes) -> None:
-        serve = self.serve
-        A = serve.admit_per_step
-        P = serve.max_prompt_len
-        prompts = np.zeros((A, P), np.int32)
-        lens = np.zeros(A, np.int32)
-        cached = np.zeros(A, np.int32)
-        slots = np.zeros(A, np.int32)
-        active = np.zeros(A, bool)
-        temps = np.zeros(A, np.float32)
-        for j, s in enumerate(admit):
-            c = int(self.slot_cached[s])
-            toks = self.prompt[s][c:]             # suffix only beyond cache
-            prompts[j, P - len(toks):] = toks     # left pad
+    def _step_mixed(self) -> None:
+        """Mixed-phase iteration — the exact policy of the device engine's
+        ``engine_step_mixed`` (admit -> chunk -> decode, with the decode
+        lane set snapshotted at the top of the step): decode never pauses
+        for admission, prefill advances one bounded chunk per step."""
+        self.jitter()                      # host touch 1: scheduler wakeup
+        # decode snapshot FIRST: lanes generating at the top of the step
+        # decode this step no matter what admission/chunking does
+        slots = np.maximum(self.lane_slot, 0)
+        decode_active = (self.lane_slot >= 0) & \
+            (self.slot_state[slots] == rb.DECODE_PROCESSING)
+
+        pending, free_lanes = self._scan_pending()
+        # 1. admit: reserve a lane, wire pages, cursor at the cached prefix
+        for k, s in enumerate(self._admit_scan(pending, free_lanes)):
+            self.slot_state[s] = rb.PREFILLING
+            self.prefill_done[s] = int(self.slot_cached[s])
+            self.lane_slot[int(free_lanes[k])] = s
+        # 2. chunk (freshly admitted slots run their first chunk this step)
+        self._run_chunk()
+        # 3. decode all snapshot lanes
+        self._run_decode(decode_active)
+
+    def _dispatch_prefill(self, slot_list, width: int, bucket: int,
+                          tokens_of, always_cached: bool) -> np.ndarray:
+        """Assemble a left-padded ``[width, bucket]`` prefill batch and
+        dispatch the jitted step — shared by the exclusive prefill (whole
+        suffix per slot) and the mixed chunk step (one chunk per slot).
+        ``tokens_of(slot) -> (tokens, cached_len)`` selects each slot's
+        piece. Returns the sampled tokens on host."""
+        prompts = np.zeros((width, bucket), np.int32)
+        lens = np.zeros(width, np.int32)
+        cached = np.zeros(width, np.int32)
+        slots = np.zeros(width, np.int32)
+        active = np.zeros(width, bool)
+        temps = np.zeros(width, np.float32)
+        for j, s in enumerate(slot_list):
+            toks, c = tokens_of(int(s))
+            prompts[j, bucket - len(toks):] = toks   # left pad
             lens[j] = len(toks)
             cached[j] = c
             slots[j] = s
             active[j] = True
-            temps[j] = self.temperature[s]        # per-request temperature
-            self.slot_state[s] = rb.PREFILL_PROCESSING
+            temps[j] = self.temperature[s]           # per-request temp
         self.jitter()                      # host touch 3: kernel dispatch
 
-        cached_arg = jnp.asarray(cached) if self.prefix is not None else None
+        cached_arg = jnp.asarray(cached) \
+            if always_cached or self.prefix is not None else None
         tok, self.cache = self._prefill_fn(
             self.params, jnp.asarray(prompts), jnp.asarray(lens), cached_arg,
             self.cache, jnp.asarray(slots), jnp.asarray(active),
@@ -255,32 +331,70 @@ class HostEngine:
             jnp.asarray(self.step_count, jnp.int32))
         tok_host = np.asarray(jax.device_get(tok))   # PCIe round-trip
         self.jitter()                      # host touch 4: copy-back handling
+        return tok_host
 
-        if self.prefix is not None:
-            # commit freshly prefilled full pages into the trie (trie ref)
-            for s in admit:
-                n_full = len(self.prompt[s]) // serve.page_size
-                row = self.slot_pages.get(s, [])[:n_full]
-                for p in self.prefix.insert(self.prompt[s], row):
-                    self.refcount[p] += 1
+    def _run_prefill(self, admit: List[int], free_lanes) -> None:
+        serve = self.serve
+        for s in admit:
+            self.slot_state[s] = rb.PREFILL_PROCESSING
+        tok_host = self._dispatch_prefill(
+            admit, serve.admit_per_step, serve.max_prompt_len,
+            # suffix only beyond the cached prefix
+            lambda s: (self.prompt[s][int(self.slot_cached[s]):],
+                       int(self.slot_cached[s])),
+            always_cached=False)
+
+        for s in admit:   # commit freshly prefilled pages (trie ref)
+            self._commit_prompt_to_trie(s)
 
         now = time.perf_counter()
         for j, s in enumerate(admit):
-            t = int(tok_host[j])
-            self.outputs[s].append(t)
-            self.token_times[s].append(now)
-            self.first_token_time[s] = now
-            self.generated[s] = 1
-            self.last_token[s] = t
-            if self.generated[s] >= self.max_new[s]:
-                self._complete(s)
-            else:
+            if not self._emit_first_token(s, int(tok_host[j]), now):
                 self.slot_state[s] = rb.DECODE_PROCESSING
                 self.lane_slot[int(free_lanes[j])] = s
 
-    def _run_decode(self) -> None:
+    def _run_chunk(self) -> None:
+        """Advance up to ``max_prefills_per_step`` PREFILLING slots (FCFS)
+        by one ``prefill_chunk_tokens`` chunk; the final chunk samples the
+        first token and commits the prompt's pages into the prefix trie
+        (chunk-complete, not admission — partial pages must never be
+        indexed)."""
         serve = self.serve
-        active = self.lane_slot >= 0
+        C = serve.prefill_chunk_tokens
+        filling = np.where(self.slot_state == rb.PREFILLING)[0]
+        if len(filling) == 0:
+            return
+        filling = filling[np.argsort(self.arrival[filling], kind="stable")
+                          ][:serve.max_prefills_per_step]
+        tok_host = self._dispatch_prefill(
+            filling, serve.max_prefills_per_step, C,
+            # one chunk, resuming from the cursor
+            lambda s: (self.prompt[s][int(self.prefill_done[s]):
+                                      int(self.prefill_done[s]) + C],
+                       int(self.prefill_done[s])),
+            always_cached=True)
+
+        now = time.perf_counter()
+        for j, s in enumerate(filling):
+            s = int(s)
+            self.prefill_done[s] += min(
+                C, len(self.prompt[s]) - int(self.prefill_done[s]))
+            if self.prefill_done[s] < len(self.prompt[s]):
+                continue                   # partial: no token surfaces
+            self._commit_prompt_to_trie(s)
+            # final chunk: the first token
+            if self._emit_first_token(s, int(tok_host[j]), now):
+                self.lane_slot[self.lane_slot == s] = -1
+            else:
+                self.slot_state[s] = rb.DECODE_PROCESSING
+
+    def _run_decode(self, active: Optional[np.ndarray] = None) -> None:
+        """One decode step. ``active`` (mixed-phase) restricts to the
+        top-of-step snapshot of DECODE_PROCESSING lanes — a slot still
+        PREFILLING holds its reserved lane but must not decode."""
+        serve = self.serve
+        if active is None:
+            active = self.lane_slot >= 0
         if not active.any():
             return
         slots = np.maximum(self.lane_slot, 0)

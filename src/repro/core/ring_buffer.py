@@ -32,6 +32,15 @@ PREFILL_PROCESSING = 2
 DECODE_PROCESSING = 3
 DECODE_PAUSED = 4
 DECODE_COMPLETED = 5
+# Mixed-phase extension (ServeConfig.prefill_chunk_tokens > 0): an admitted
+# slot whose prompt K/V is being built chunk-by-chunk ACROSS steps while
+# decode keeps running. Unlike the transient PREFILL_PROCESSING marker (set
+# and overwritten inside one phase-exclusive step), PREFILLING persists at
+# window boundaries; its progress cursor is ``prefill_done_len``. The slot
+# holds a decode lane (admission reserved it) but emits no tokens until the
+# cursor reaches prompt_len — then the first token is sampled and the slot
+# moves to DECODE_PROCESSING (or DECODE_COMPLETED for max_new == 1).
+PREFILLING = 6
 
 STATE_NAMES = {
     EMPTY: "EMPTY",
@@ -40,6 +49,7 @@ STATE_NAMES = {
     DECODE_PROCESSING: "DECODE_PROCESSING",
     DECODE_PAUSED: "DECODE_PAUSED",
     DECODE_COMPLETED: "DECODE_COMPLETED",
+    PREFILLING: "PREFILLING",
 }
 
 
@@ -61,6 +71,12 @@ class RingState:
     # them (-1 padded). 0 / all -1 = no reuse — the default protocol.
     cached_len: jax.Array     # [S] int32 (page-aligned, < prompt_len)
     shared_pages: jax.Array   # [S, pages_per_req] int32
+    # mixed-phase chunk cursor: prompt tokens whose K/V is resident (cached
+    # prefix + completed chunks). Engine-owned: set to cached_len at
+    # admission, advanced once per chunk, == prompt_len when the slot
+    # leaves PREFILLING. Doubles as the suffix-page high-water mark —
+    # pages beyond ceil(prefill_done_len / page_size) hold no live K/V.
+    prefill_done_len: jax.Array  # [S] int32
     input_arena: jax.Array    # [S, max_prompt] int32
     output_arena: jax.Array   # [S, max_new_tokens] int32
     # telemetry (device step stamps; host converts to wall time)
@@ -86,6 +102,7 @@ def make_ring(serve: ServeConfig) -> RingState:
         temperature=jnp.zeros((S,), jnp.float32),
         cached_len=jnp.zeros((S,), jnp.int32),
         shared_pages=jnp.full((S, serve.pages_per_req), -1, jnp.int32),
+        prefill_done_len=jnp.zeros((S,), jnp.int32),
         input_arena=jnp.zeros((S, serve.max_prompt_len), jnp.int32),
         output_arena=jnp.full((S, serve.max_new_tokens), -1, jnp.int32),
         submit_step=jnp.zeros((S,), jnp.int32),
@@ -125,6 +142,7 @@ def submit_request(ring: RingState, slot: int, *, tokens, request_id: int,
         prompt_len=ring.prompt_len.at[slot].set(n),
         cached_len=ring.cached_len.at[slot].set(int(cached_len)),
         shared_pages=ring.shared_pages.at[slot].set(page_row),
+        prefill_done_len=ring.prefill_done_len.at[slot].set(0),
         max_new=ring.max_new.at[slot].set(max_new),
         arrival=ring.arrival.at[slot].set(arrival),
         request_id=ring.request_id.at[slot].set(request_id),
@@ -147,4 +165,5 @@ def release_slot(ring: RingState, slot: int) -> RingState:
         arrival=ring.arrival.at[slot].set(jnp.iinfo(jnp.int32).max),
         cached_len=ring.cached_len.at[slot].set(0),
         shared_pages=ring.shared_pages.at[slot].set(-1),
+        prefill_done_len=ring.prefill_done_len.at[slot].set(0),
     )

@@ -24,6 +24,13 @@ the trie's reference) and, on drain, releases the slot's references —
 refcounted pages return to the pool only when the last co-owner lets go.
 LRU eviction of zero-ref chains runs under page backpressure, between
 windows, like every other frontend touch.
+
+Mixed-phase scheduling (``ServeConfig.prefill_chunk_tokens > 0``) changes
+nothing structurally on this plane, but two invariants matter: the poll
+path must not surface a request's first token until its chunk cursor
+completes (guaranteed — ``ring.generated`` stays 0 through PREFILLING),
+and the prefix-trie commit happens at chunk-complete, not admission (a
+PREFILLING slot's pages are partially written; see ``poll``).
 """
 from __future__ import annotations
 
@@ -156,7 +163,11 @@ class BlinkFrontend:
             req.output.extend(int(t) for t in toks)
         if self.prefix is not None:
             # commit pass: runs over completing slots too — their pages are
-            # still live (release is deferred to the drain below)
+            # still live (release is deferred to the drain below). A slot
+            # still PREFILLING (mixed-phase chunk cursor mid-prompt) is
+            # deliberately NOT in this set: its pages are partially
+            # written, so the trie commit happens at chunk-complete — the
+            # step its state reaches DECODE_* — never at admission.
             prefilled = (rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
                          rb.DECODE_COMPLETED)
             for slot, req in self.in_flight.items():

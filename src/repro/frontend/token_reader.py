@@ -55,8 +55,13 @@ class TokenReader:
         found = False
         for s in order:
             st = slot_states[s]
+            # PREFILLING (mixed-phase chunked prefill) is scanned like the
+            # decode states, but its generation count stays 0 until the
+            # chunk cursor completes — the first token can never surface
+            # (or be committed downstream) off a partially prefilled slot.
             if st not in (rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
-                          rb.DECODE_COMPLETED, rb.PREFILL_PROCESSING):
+                          rb.DECODE_COMPLETED, rb.PREFILL_PROCESSING,
+                          rb.PREFILLING):
                 continue
             have = int(self.read_counts[s])
             avail = int(generated[s])

@@ -32,6 +32,11 @@ def main():
                     choices=("gather", "pallas"),
                     help="decode attention backend (REPRO_ATTN_BACKEND "
                          "overrides)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="mixed-phase scheduling: advance at most this "
+                         "many prefill tokens per step while decode keeps "
+                         "streaming (0 = phase-exclusive legacy policy; "
+                         "requires a paged-KV decoder-only arch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -39,7 +44,8 @@ def main():
                         max_new_tokens=args.max_new, decode_batch=8,
                         window=args.window, admit_per_step=4, page_size=8,
                         num_pages=160, eos_token=-1,
-                        attn_backend=args.attn_backend)
+                        attn_backend=args.attn_backend,
+                        prefill_chunk_tokens=args.prefill_chunk)
     api = make_model(cfg, attn_backend=serve.attn_backend,
                      attn_pages_per_block=serve.attn_pages_per_block,
                      prefill_block_q=serve.prefill_block_q,

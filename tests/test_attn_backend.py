@@ -21,6 +21,16 @@ from repro.models.api import make_model
 ENGINE_ARCHS = ["qwen2-1.5b", "mixtral-8x7b", "gemma2-9b", "zamba2-2.7b"]
 
 
+@pytest.fixture(autouse=True)
+def _no_ambient_backend(monkeypatch):
+    """Every test here builds EXPLICIT backends (and compares across
+    them); the CI matrix's REPRO_ATTN_BACKEND override — which outranks
+    explicit arguments by design — must not leak in, or gather-vs-pallas
+    equivalence degenerates into a self-comparison and the mismatch test
+    stops mismatching."""
+    monkeypatch.delenv("REPRO_ATTN_BACKEND", raising=False)
+
+
 def _serve(**kw):
     base = dict(num_slots=8, max_prompt_len=16, max_new_tokens=8,
                 decode_batch=4, window=10, admit_per_step=2,

@@ -204,6 +204,80 @@ def test_window_cache_tightest_fit_and_equivalence(tiny_apis, small_serve):
     assert sel[16] > 0           # fallback used for the length-14 prompt
 
 
+def test_engine_only_prefix_cache_fallback_free(tiny_apis, small_serve):
+    """ROADMAP-noted leak: with ``prefix_cache`` on, page release is
+    frontend-owned, so engine-only serving used to strand completed slots'
+    pages forever. ``eng.drain_completed`` is the engine-side fallback:
+    serve to idle WITHOUT a BlinkFrontend, drain, and the PageAllocator
+    must be whole again (and the slots reusable)."""
+    api, params = tiny_apis("qwen2-1.5b")
+    serve = dataclasses.replace(small_serve, prefix_cache=True)
+    state = _submit_all(eng.init_engine_state(api, serve),
+                        _mk_reqs(api.cfg))
+    window_fn = eng.make_serve_window(api, serve)
+    for _ in range(8):
+        state = window_fn(params, state)
+    assert (np.asarray(state.ring.slot_state[:5])
+            == rb.DECODE_COMPLETED).all()
+    # the leak: completed slots still hold their pages (release deferred
+    # to a frontend that does not exist)
+    assert int(state.alloc.top) < serve.num_pages
+    state = eng.drain_completed(state)
+    assert int(state.alloc.top) == serve.num_pages
+    stack = np.asarray(state.alloc.free_stack)
+    assert sorted(stack.tolist()) == list(range(serve.num_pages))
+    assert (np.asarray(state.cache["kv"].block_table) == -1).all()
+    assert (np.asarray(state.ring.slot_state) == rb.EMPTY).all()
+    # drained slots are genuinely reusable: serve a second batch through
+    state = _submit_all(state, _mk_reqs(api.cfg, seed=11))
+    for _ in range(8):
+        state = window_fn(params, state)
+    assert (np.asarray(state.ring.slot_state[:5])
+            == rb.DECODE_COMPLETED).all()
+
+
+def test_mixed_phase_prefilling_visible_and_decode_uninterrupted(
+        tiny_apis, small_serve):
+    """White-box mixed-phase check: with a multi-chunk prompt admitted
+    while lanes decode, the PREFILLING state and its advancing cursor are
+    visible at window boundaries, and the decoding lanes publish a token
+    EVERY step throughout (the no-stall guarantee)."""
+    api, params = tiny_apis("qwen2-1.5b")
+    serve = dataclasses.replace(small_serve, window=1,
+                                prefill_chunk_tokens=4,
+                                max_prefills_per_step=1)
+    state = _submit_all(eng.init_engine_state(api, serve),
+                        _mk_reqs(api.cfg, n=2), max_new=8)
+    fn = eng.make_serve_window(api, serve)
+    for _ in range(8):              # enough chunk steps (Mp=1) for both
+        state = fn(params, state)   # short prompts to reach decode
+    assert (np.asarray(state.ring.slot_state[:2])
+            == rb.DECODE_PROCESSING).all()
+    long_prompt = np.random.default_rng(0).integers(
+        3, api.cfg.vocab_size, 16).tolist()      # 4 chunks of 4
+    ring = rb.submit_request(state.ring, 5, tokens=long_prompt,
+                             request_id=9, max_new=2, arrival=100,
+                             step=int(state.step))
+    state = dataclasses.replace(state, ring=ring)
+    cursors = []
+    for _ in range(6):
+        state = fn(params, state)
+        st = np.asarray(state.ring.slot_state)
+        if st[5] == rb.PREFILLING:
+            cursors.append(int(state.ring.prefill_done_len[5]))
+    # chunk cursor observed mid-flight, strictly advancing by the chunk
+    assert cursors and cursors == sorted(cursors)
+    assert all(c % 4 == 0 for c in cursors)
+    for _ in range(8):
+        state = fn(params, state)
+    assert np.asarray(state.ring.slot_state)[5] == rb.DECODE_COMPLETED
+    # decode lanes never skipped a step while the prefill was in flight
+    ts = np.asarray(state.ring.token_step)
+    for s in range(2):
+        stamps = ts[s][ts[s] >= 0]
+        assert (np.diff(stamps) == 1).all(), stamps
+
+
 @pytest.mark.parametrize("name", ["qwen2-moe-a2.7b", "internvl2-2b",
                                   "seamless-m4t-medium", "gemma2-9b",
                                   "olmo-1b", "qwen1.5-32b"])

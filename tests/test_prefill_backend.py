@@ -25,6 +25,16 @@ PREFILL_ARCHS = ["qwen2-1.5b", "gemma2-9b", "mixtral-8x7b", "zamba2-2.7b",
                  "seamless-m4t-medium"]
 
 
+@pytest.fixture(autouse=True)
+def _no_ambient_backend(monkeypatch):
+    """Every test here builds EXPLICIT backends (and compares across
+    them); the CI matrix's REPRO_ATTN_BACKEND override — which outranks
+    explicit arguments by design — must not leak in, or flash-vs-gather
+    equivalence degenerates into a self-comparison and the per-backend
+    jaxpr assertions test the wrong program."""
+    monkeypatch.delenv("REPRO_ATTN_BACKEND", raising=False)
+
+
 def _serve(**kw):
     base = dict(num_slots=4, max_prompt_len=16, max_new_tokens=8,
                 page_size=4, num_pages=64)

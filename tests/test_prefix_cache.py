@@ -183,9 +183,10 @@ def _wired_cache(api, serve, B):
 
 
 @pytest.mark.parametrize("backend", ["gather", "pallas"])
-def test_suffix_prefill_over_shared_pages_matches_full(backend):
+def test_suffix_prefill_over_shared_pages_matches_full(backend, monkeypatch):
     """Prefill only a suffix against another slot's prefix pages ==
     prefilling the whole prompt, for logits AND subsequent decodes."""
+    monkeypatch.delenv("REPRO_ATTN_BACKEND", raising=False)  # pin `backend`
     cfg = TINY_ARCHS["qwen2-1.5b"].replace(dtype="float32")
     serve = _serve()
     api = make_model(cfg, attn_backend=backend)
@@ -235,10 +236,11 @@ def test_suffix_prefill_over_shared_pages_matches_full(backend):
                                    atol=2e-4)
 
 
-def test_chunked_prefill_matches_single_shot_bitwise_on_gather():
+def test_chunked_prefill_matches_single_shot_bitwise_on_gather(monkeypatch):
     """Acceptance criterion: chunked prefill of a long prompt is BITWISE
     identical to single-shot prefill on the gather reference backend —
     logits and the KV pages it leaves behind."""
+    monkeypatch.delenv("REPRO_ATTN_BACKEND", raising=False)  # gather-only
     cfg = TINY_ARCHS["qwen2-1.5b"].replace(dtype="float32")
     serve = _serve()
     api = make_model(cfg, attn_backend="gather")
@@ -266,7 +268,8 @@ def test_chunked_prefill_matches_single_shot_bitwise_on_gather():
                                   np.asarray(cache_c["kv"].seq_lens))
 
 
-def test_chunked_prefill_close_on_pallas():
+def test_chunked_prefill_close_on_pallas(monkeypatch):
+    monkeypatch.delenv("REPRO_ATTN_BACKEND", raising=False)  # pallas-only
     cfg = TINY_ARCHS["qwen2-1.5b"].replace(dtype="float32")
     serve = _serve()
     api = make_model(cfg, attn_backend="pallas")
@@ -509,7 +512,8 @@ def test_host_prefill_respects_temperature(tiny_apis):
     assert [host0.outputs[i] for i in range(2)] != dev
 
 
-def test_serve_config_prefill_tiles_validated_at_build():
+def test_serve_config_prefill_tiles_validated_at_build(monkeypatch):
+    monkeypatch.delenv("REPRO_ATTN_BACKEND", raising=False)  # default=gather
     cfg = TINY_ARCHS["qwen2-1.5b"]
     api = make_model(cfg, prefill_block_q=64, prefill_block_k=32)
     assert api.attn_backend == "gather"

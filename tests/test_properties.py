@@ -153,13 +153,19 @@ def test_fcfs_engine_equals_kernel(seed, k):
 # window may advance a slot several states at once, so the observable
 # relation is the transitive closure of the per-step machine (plus self
 # loops; EMPTY is only re-entered through the frontend's release).
+# PREFILLING is the mixed-phase chunk-cursor state: entered from
+# PREFILL_PENDING at admission, held across steps while chunks advance,
+# left for DECODE_PROCESSING (or straight to DECODE_COMPLETED on a
+# max_new==1 early finish at the final chunk); it never pauses.
 _LIFECYCLE_CLOSURE = {
     rb.EMPTY: {rb.EMPTY},
     rb.PREFILL_PENDING: {rb.PREFILL_PENDING, rb.PREFILL_PROCESSING,
-                         rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
-                         rb.DECODE_COMPLETED},
+                         rb.PREFILLING, rb.DECODE_PROCESSING,
+                         rb.DECODE_PAUSED, rb.DECODE_COMPLETED},
     rb.PREFILL_PROCESSING: {rb.PREFILL_PROCESSING, rb.DECODE_PROCESSING,
                             rb.DECODE_PAUSED, rb.DECODE_COMPLETED},
+    rb.PREFILLING: {rb.PREFILLING, rb.DECODE_PROCESSING,
+                    rb.DECODE_COMPLETED},
     rb.DECODE_PROCESSING: {rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
                            rb.DECODE_COMPLETED},
     rb.DECODE_PAUSED: {rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
@@ -215,6 +221,85 @@ def test_ring_lifecycle_under_admission_backpressure(seed, tiny_apis):
     assert (prev[:n_req] == rb.DECODE_COMPLETED).all(), \
         "backpressure wedged admission"
     assert int(state.alloc.top) == serve.num_pages
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 2))
+def test_ring_lifecycle_mixed_phase_chunk_cursor(seed, tiny_apis):
+    """Mixed-phase scheduler under page backpressure: every observed slot
+    transition stays inside the extended (PREFILLING) state machine, the
+    chunk cursor ``prefill_done_len`` is monotone non-decreasing and
+    bounded by prompt_len, admission never overshoots lane capacity
+    mid-chunk (PREFILLING + DECODE_PROCESSING slots <= decode_batch), the
+    allocator conserves pages at every window boundary — including
+    max_new==1 requests that finish DURING a partial prefill's final chunk
+    and must free their suffix pages — and everything completes."""
+    from repro.core import engine as eng
+
+    api, params = tiny_apis("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    serve = ServeConfig(num_slots=8, max_prompt_len=16, max_new_tokens=8,
+                        decode_batch=4, window=2, admit_per_step=4,
+                        page_size=4, num_pages=14, eos_token=-1,
+                        prefill_chunk_tokens=4, max_prefills_per_step=2)
+    fn = _mixed_window_fn(tiny_apis, serve)
+    n_req = int(rng.integers(3, 7))
+    state = eng.init_engine_state(api, serve)
+    ring = state.ring
+    for i in range(n_req):
+        toks = rng.integers(3, api.cfg.vocab_size,
+                            int(rng.integers(2, 16))).tolist()
+        # max_new==1 long prompts: early finish at the final chunk
+        ring = rb.submit_request(ring, i, tokens=toks, request_id=i,
+                                 max_new=int(rng.integers(1, 8)), arrival=i,
+                                 step=0)
+    state = dataclasses.replace(state, ring=ring)
+    prev = np.asarray(state.ring.slot_state)
+    prev_done = np.asarray(state.ring.prefill_done_len)
+    for _ in range(80):
+        state = fn(params, state)
+        cur = np.asarray(state.ring.slot_state)
+        cur_done = np.asarray(state.ring.prefill_done_len)
+        plen = np.asarray(state.ring.prompt_len)
+        for s in range(serve.num_slots):
+            assert cur[s] in _LIFECYCLE_CLOSURE[prev[s]], \
+                f"illegal transition {rb.STATE_NAMES[prev[s]]} -> " \
+                f"{rb.STATE_NAMES[cur[s]]} (slot {s})"
+        # chunk cursor: monotone, bounded; == prompt_len once generating
+        assert (cur_done >= prev_done).all()
+        assert (cur_done <= plen).all()
+        gen_states = (cur == rb.DECODE_PROCESSING) | \
+                     (cur == rb.DECODE_COMPLETED)
+        assert (cur_done[gen_states & (plen > 0)]
+                == plen[gen_states & (plen > 0)]).all()
+        # lane capacity is never overshot mid-chunk
+        in_lanes = ((cur == rb.PREFILLING) | (cur == rb.DECODE_PROCESSING))
+        assert int(in_lanes.sum()) <= serve.decode_batch
+        # page conservation at every window boundary
+        rc = np.asarray(state.alloc.refcount)
+        assert int(state.alloc.top) + int((rc > 0).sum()) == serve.num_pages
+        free_now = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
+        assert len(np.unique(free_now)) == len(free_now)
+        prev, prev_done = cur, cur_done
+        if (cur[:n_req] == rb.DECODE_COMPLETED).all():
+            break
+    assert (prev[:n_req] == rb.DECODE_COMPLETED).all(), \
+        "mixed-phase scheduling wedged"
+    # drain (engine-side fallback): the pool must come back whole
+    state = eng.drain_completed(state)
+    assert int(state.alloc.top) == serve.num_pages
+
+
+_MIXED_FN_CACHE = {}
+
+
+def _mixed_window_fn(tiny_apis, serve):
+    """One compiled window per config, shared across hypothesis examples."""
+    if serve not in _MIXED_FN_CACHE:
+        from repro.core import engine as eng
+        api, _ = tiny_apis("qwen2-1.5b")
+        _MIXED_FN_CACHE[serve] = eng.make_serve_window(api, serve)
+    return _MIXED_FN_CACHE[serve]
 
 
 def test_ring_submit_release_protocol():

@@ -1,0 +1,304 @@
+"""Differential scheduler harness for mixed-phase continuous batching.
+
+The mixed-phase step (``ServeConfig.prefill_chunk_tokens > 0``) is the
+riskiest subsystem in the repo: it interleaves bounded prefill chunks with
+decode inside the persistent window, carrying a chunk cursor across steps.
+These tests replay random traffic traces (arrival step, prompt length
+incl. >1-chunk prompts, max_new, temperature, shared prefixes) through
+three implementations that must agree:
+
+  * device mixed-phase engine  vs  ``HostEngine`` mixed-phase mirror:
+    BITWISE-identical token streams, including temperature > 0 (the
+    sampling key folds (slot, step) — any scheduling divergence shows up
+    as a different step stamp and therefore different tokens);
+  * device mixed-phase  vs  device phase-exclusive (greedy): chunked
+    prefill is bitwise-equal to single shot, so any greedy divergence is
+    a scheduler bug, not a numerics one;
+  * page conservation at drain, and the no-stall guarantee: no
+    DECODE_PROCESSING lane ever skips a step while a prefill is in
+    flight (every intra-request inter-token gap is exactly one step).
+
+Traces come from two generators over the same trace space: a seeded
+numpy generator (always runs — the deterministic floor) and a
+hypothesis-driven one (runs where hypothesis is installed, adds
+shrinking and coverage-guided exploration on top).
+"""
+import dataclasses
+import functools
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import TINY_ARCHS
+from repro.core import engine as eng
+from repro.core import ring_buffer as rb
+from repro.core.host_engine import HostEngine
+from repro.frontend.server import BlinkServer
+from repro.models.api import make_model
+
+try:  # optional dev dep (requirements-dev.txt): extends, never gates
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+@pytest.fixture(scope="module", autouse=True)
+def _no_ambient_backend():
+    """Pin this module to the default (gather) backend: the
+    mixed-vs-exclusive equality rests on 'chunked prefill is BITWISE equal
+    to single shot', which holds on the gather reference only (the flash
+    kernel is equal to tolerance — a near-tie in greedy argmax would read
+    as a scheduler bug). The CI matrix's REPRO_ATTN_BACKEND leak must not
+    reach the cached model/window builders below. Module-scoped: hypothesis
+    forbids function-scoped fixtures on @given tests."""
+    prev = os.environ.pop("REPRO_ATTN_BACKEND", None)
+    yield
+    if prev is not None:
+        os.environ["REPRO_ATTN_BACKEND"] = prev
+
+
+# num_pages=28 < 5 requests x up-to-8 pages: traces regularly hit the page
+# backpressure gate, so admission deferral is part of the differential too
+MIXED = ServeConfig(num_slots=8, max_prompt_len=24, max_new_tokens=8,
+                    decode_batch=4, window=1, admit_per_step=2,
+                    page_size=4, num_pages=28, eos_token=-1,
+                    prefill_chunk_tokens=8, max_prefills_per_step=1)
+EXCLUSIVE = dataclasses.replace(MIXED, prefill_chunk_tokens=0)
+
+MAX_STEPS = 250
+
+# a common pool of shared-prefix tokens so traces can contain prompts with
+# identical openings (page-aligned reuse once the prefix plane is on)
+_PREFIX_POOL = np.arange(100, 124).tolist()
+
+
+@functools.lru_cache(maxsize=None)
+def _model():
+    api = make_model(TINY_ARCHS["qwen2-1.5b"])
+    return api, api.init_params(jax.random.PRNGKey(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _window_fn(serve: ServeConfig):
+    """One jitted window program per config, shared across traces (they
+    vary only data, so nothing recompiles)."""
+    api, _ = _model()
+    return eng.make_serve_window(api, serve)
+
+
+def _materialize(trace, seed):
+    """(arrival, plen, max_new, temp, share) -> concrete token prompts."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for arrival, plen, max_new, temp, share in trace:
+        if share:
+            shared = min(plen - 1, 8)
+            toks = _PREFIX_POOL[:shared] + \
+                rng.integers(3, 512, plen - shared).tolist()
+        else:
+            toks = rng.integers(3, 512, plen).tolist()
+        reqs.append((arrival, toks, max_new, temp))
+    return reqs
+
+
+def _random_trace(seed):
+    """Seeded draw from the same trace space as the hypothesis strategy."""
+    rng = np.random.default_rng(seed)
+    trace = [(int(rng.integers(0, 11)),                  # arrival step
+              int(rng.integers(2, 25)),                  # prompt len
+              int(rng.integers(1, 9)),                   # max_new
+              float(rng.choice([0.0, 0.0, 0.8, 1.4])),   # temperature
+              bool(rng.integers(0, 2)))                  # shared prefix
+             for _ in range(int(rng.integers(1, 6)))]
+    return _materialize(trace, seed)
+
+
+def _run_device(serve, reqs, *, check_no_stall=False):
+    """Replay a trace through the persistent-window engine (window=1 so
+    submissions land at exact step boundaries, mirroring the host's
+    per-step control). Returns (outputs by request idx, final state)."""
+    api, params = _model()
+    fn = _window_fn(serve)
+    state = eng.init_engine_state(api, serve, seed=0)
+    slot_of = {}
+    arrival = 0
+    for step in range(MAX_STEPS):
+        ring = state.ring
+        states_np = np.asarray(ring.slot_state)
+        for i, (arr, toks, max_new, temp) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            empties = np.where(states_np == rb.EMPTY)[0]
+            if not len(empties):
+                continue                     # ring full: retry next step
+            slot = int(empties[0])
+            ring = rb.submit_request(ring, slot, tokens=toks, request_id=i,
+                                     max_new=max_new, arrival=arrival,
+                                     temperature=temp, step=step)
+            states_np = np.asarray(ring.slot_state)
+            slot_of[i] = slot
+            arrival += 1
+        state = dataclasses.replace(state, ring=ring)
+        state = fn(params, state)
+        states_np = np.asarray(state.ring.slot_state)
+        if len(slot_of) == len(reqs) and all(
+                states_np[s] == rb.DECODE_COMPLETED for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("trace did not drain")
+    out = np.asarray(state.ring.output_arena)
+    gen = np.asarray(state.ring.generated)
+    outputs = {i: out[s, :gen[s]].tolist() for i, s in slot_of.items()}
+    if check_no_stall:
+        # the mixed-phase guarantee: a generating lane NEVER skips a step,
+        # prefills in flight or not — every consecutive token pair of every
+        # request is published exactly one step apart (eos is disabled)
+        ts = np.asarray(state.ring.token_step)
+        for i, s in slot_of.items():
+            stamps = ts[s][ts[s] >= 0]
+            assert (np.diff(stamps) == 1).all(), \
+                f"request {i} decode stalled: token steps {stamps}"
+    return outputs, state
+
+
+def _run_host(serve, reqs):
+    api, params = _model()
+    host = HostEngine(api, serve, params, seed=0)
+    slot_of = {}
+    arrival = 0
+    for step in range(MAX_STEPS):
+        for i, (arr, toks, max_new, temp) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            s = host.submit(toks, max_new=max_new, temperature=temp,
+                            arrival=arrival)
+            if s < 0:
+                continue                     # ring full: retry next step
+            slot_of[i] = s
+            arrival += 1
+        host.step()
+        if len(slot_of) == len(reqs) and all(
+                host.slot_state[s] == rb.DECODE_COMPLETED
+                for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("trace did not drain")
+    return {i: list(host.outputs[s]) for i, s in slot_of.items()}, \
+        slot_of, host
+
+
+def _assert_device_host_bitwise(reqs):
+    """Device vs host mirror: bitwise streams, no decode stall, page
+    conservation at drain on both planes."""
+    dev, state = _run_device(MIXED, reqs, check_no_stall=True)
+    hst, _, host = _run_host(MIXED, reqs)
+    assert dev == hst
+    # page conservation at drain (engine-side fallback free, no frontend)
+    state = eng.drain_completed(state)
+    assert int(state.alloc.top) == MIXED.num_pages
+    free = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
+    assert sorted(free.tolist()) == list(range(MIXED.num_pages))
+    assert len(host.free_pages) == MIXED.num_pages
+
+
+def _assert_mixed_equals_exclusive(reqs):
+    """Greedy streams token-identical under both scheduling policies."""
+    greedy = [(a, t, m, 0.0) for a, t, m, _temp in reqs]
+    mixed_out, mstate = _run_device(MIXED, greedy, check_no_stall=True)
+    excl_out, estate = _run_device(EXCLUSIVE, greedy)
+    assert mixed_out == excl_out
+    for st_ in (eng.drain_completed(mstate), eng.drain_completed(estate)):
+        assert int(st_.alloc.top) == MIXED.num_pages
+
+
+# --- seeded floor: always runs ---------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(18))
+def test_mixed_device_bitwise_equals_host_seeded(seed):
+    _assert_device_host_bitwise(_random_trace(seed))
+
+
+@pytest.mark.parametrize("seed", range(18, 30))
+def test_mixed_greedy_equals_phase_exclusive_seeded(seed):
+    _assert_mixed_equals_exclusive(_random_trace(seed))
+
+
+# --- hypothesis exploration: runs where hypothesis is installed (CI) --------
+
+if HAVE_HYPOTHESIS:
+    def _traces():
+        req = st.tuples(
+            st.integers(0, 10),                      # arrival step
+            st.integers(2, 24),                      # prompt len
+            st.integers(1, 8),                       # max_new
+            st.sampled_from([0.0, 0.0, 0.8, 1.4]),   # greedy-biased temp
+            st.booleans(),                           # shared prefix
+        )
+        return st.tuples(st.lists(req, min_size=1, max_size=5),
+                         st.integers(0, 2**31 - 2))
+
+    @settings(max_examples=15, deadline=None)
+    @given(_traces())
+    def test_mixed_device_bitwise_equals_host_hyp(trace_seed):
+        trace, seed = trace_seed
+        _assert_device_host_bitwise(_materialize(trace, seed))
+
+    @settings(max_examples=10, deadline=None)
+    @given(_traces())
+    def test_mixed_greedy_equals_phase_exclusive_hyp(trace_seed):
+        trace, seed = trace_seed
+        _assert_mixed_equals_exclusive(_materialize(trace, seed))
+
+
+# --- full-stack prefix-cache differential -----------------------------------
+
+
+def test_mixed_prefix_cache_differential():
+    """Shared-system-prompt burst through the FULL device stack
+    (BlinkFrontend radix trie + mixed-phase engine) vs the HostEngine
+    mirror: greedy streams identical, the burst actually hits the prefix
+    cache (multi-chunk prompts resuming from a nonzero cached_len), and
+    both planes conserve pages at drain (free + trie-referenced pages
+    partition the pool once every slot is released)."""
+    api, params = _model()
+    serve = dataclasses.replace(MIXED, num_pages=64, prefix_cache=True)
+    rng = np.random.default_rng(5)
+    shared = _PREFIX_POOL[:16]                       # 4 full pages
+    reqs = [shared + rng.integers(3, 512, 6).tolist() for _ in range(4)]
+
+    srv = BlinkServer(api, serve, params, seed=0)
+    ids = [srv.submit(reqs[0], max_new=4)]
+    for _ in range(120):                              # warm: commit chain
+        if srv.frontend.idle:
+            break
+        srv.run_window()
+    ids += [srv.submit(r, max_new=4) for r in reqs[1:]]
+    for _ in range(300):
+        if srv.frontend.idle:
+            break
+        srv.run_window()
+    assert srv.frontend.idle, "device stack did not drain"
+    done = srv.frontend.done
+    dev = [done[i].output for i in ids]
+    assert any(done[i].cached_len >= 16 for i in ids[1:]), \
+        "burst never hit the prefix cache"
+
+    host = HostEngine(api, serve, params, seed=0)
+    s0 = host.submit(reqs[0], max_new=4)
+    host.run_until_idle()
+    hst = [host.drain(s0)]
+    hslots = [host.submit(r, max_new=4) for r in reqs[1:]]
+    host.run_until_idle()
+    hst += [host.drain(s) for s in hslots]
+    assert dev == hst
+    # conservation: slots drained on both planes -> only the trie's
+    # committed chains may still hold pages; free + referenced partition
+    for alloc_top, rc in ((int(srv.state.alloc.top),
+                           np.asarray(srv.state.alloc.refcount)),
+                          (len(host.free_pages), host.refcount)):
+        assert alloc_top + int((np.asarray(rc) > 0).sum()) == serve.num_pages
