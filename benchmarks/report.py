@@ -109,11 +109,14 @@ def print_tpot_load(recs):
     """§TPOT under load: mixed-phase vs phase-exclusive scheduling."""
     print("\n## TPOT under admission load "
           "(busy decode lanes + long-prompt stream)\n")
-    print("| policy | chunk | p99 gap ms | max gap ms | p99 gap steps | "
-          "max gap steps | long TTFT steps |")
-    print("|---|---|---|---|---|---|---|")
-    for r in sorted(recs, key=lambda r: r["chunk"]):
+    print("| policy | chunk | chunk max | dispatches/step | p99 gap ms | "
+          "max gap ms | p99 gap steps | max gap steps | long TTFT steps |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["chunk"], r.get("chunk_max", 0))):
+        disp = r.get("prefill_dispatches_per_step")
         print(f"| {r['policy']} | {r['chunk'] or '-'} | "
+              f"{r.get('chunk_max') or '-'} | "
+              f"{'-' if disp is None else disp} | "
               f"{r['p99_gap_ms']:.2f} | {r['max_gap_ms']:.2f} | "
               f"{r['p99_gap_steps']:.0f} | {r['max_gap_steps']} | "
               f"{r['long_ttft_steps_mean']:.1f} |")
@@ -123,7 +126,14 @@ def print_tpot_load(recs):
           "at exactly 1 (decode + chunk) step. Greedy tokens are identical "
           "across all rows — asserted by the benchmark. Smaller chunks "
           "lower per-step cost but raise long-prompt TTFT: the chunk-size "
-          "<-> TTFT tradeoff. Wall clock is interpret-mode.)")
+          "<-> TTFT tradeoff. The adaptive row sizes each step's chunk off "
+          "the decode-occupancy snapshot, landing its TTFT between the "
+          "static floor- and ceiling-chunk rows with the same 1-step gap "
+          "bound. dispatches/step is the jaxpr-counted flash-prefill "
+          "launch count of one mixed iteration, traced per row against "
+          "that row's own config (plus a max_prefills_per_step=4 probe) — "
+          "the batched chunk step keeps it at 1. Wall clock is "
+          "interpret-mode.)")
 
 
 def print_decode_attn(recs):

@@ -14,7 +14,19 @@ every few steps. Policies:
     (unbounded in prompt length: the paper's Table-6 failure mode);
   * mixed (``prefill_chunk_tokens=C``): every step decodes all busy lanes
     AND advances at most one C-token chunk of prefill — the gap is
-    bounded by ~1 (decode + chunk) step regardless of prompt length.
+    bounded by ~1 (decode + chunk) step regardless of prompt length;
+  * adaptive (``prefill_chunk_tokens_max=Cmax``): same mixed step, but the
+    per-iteration chunk budget follows the decode-occupancy snapshot
+    (``engine.adaptive_chunk_budget``): busy batches shrink chunks toward
+    the ``prefill_block_q`` tile floor, idle ones grow them toward Cmax —
+    long-prompt TTFT lands between the small-chunk and large-chunk static
+    points while the gap bound stays exactly 1 step.
+
+The batched chunk step's launch-cost guarantee is asserted structurally:
+walking the traced mixed engine step (``max_prefills_per_step`` > 1,
+pallas backend) must find EXACTLY ONE flash-prefill dispatch per
+iteration — all PREFILLING lanes share it, whatever their cursors
+(``prefill_dispatches_per_step`` in every mixed/adaptive record).
 
 The engine runs window=1 so each scheduler step is one timed dispatch;
 ``ring.token_step`` stamps map tokens to steps, so the benchmark reports
@@ -48,11 +60,14 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
 
 CHUNK_SWEEP = [8, 16, 32]
 SMOKE_SWEEP = [8]
+ADAPTIVE_SWEEP = [(8, 32)]            # (chunk floor C, adaptive ceiling Cmax)
+ADAPTIVE_SMOKE = [(8, 16)]
 N_BUSY = 4                    # lanes decoding throughout
 LONG_EVERY = 4                # steps between long-prompt arrivals
 
 
-def _serve(chunk: int, smoke: bool) -> ServeConfig:
+def _serve(chunk: int, smoke: bool, adaptive: int = 0,
+           max_prefills: int = 1) -> ServeConfig:
     return ServeConfig(
         num_slots=24, max_prompt_len=32 if smoke else 64,
         max_new_tokens=12 if smoke else 32,
@@ -60,7 +75,42 @@ def _serve(chunk: int, smoke: bool) -> ServeConfig:
         window=1,                         # one timed dispatch per step
         admit_per_step=1, page_size=8, num_pages=256, eos_token=-1,
         prefill_chunk_tokens=chunk,
-        max_prefills_per_step=1)
+        prefill_chunk_tokens_max=adaptive,
+        prefill_block_q=8 if adaptive else 128,   # the adaptive tile floor
+        max_prefills_per_step=max_prefills)
+
+
+def _dispatch_count(serve: ServeConfig) -> int:
+    """Jaxpr-walk the traced mixed engine step of THIS serving config
+    (pallas variant — dispatch structure is scheduling-policy-shaped, not
+    backend-shaped, but only the pallas kernel carries a countable name)
+    and count flash-prefill dispatches. The batched chunk step must issue
+    exactly one per iteration, however many lanes it advances. Same style
+    as tests/test_prefill_backend.py's memory-shape assertions (mirrored
+    in tests/test_adaptive_chunk.py)."""
+    import jax
+
+    from repro.configs.registry import TINY_ARCHS
+    from repro.jaxpr_inspect import count_pallas_calls
+    from repro.models.api import make_model
+
+    prev = os.environ.get("REPRO_ATTN_BACKEND")
+    os.environ["REPRO_ATTN_BACKEND"] = "pallas"   # outranks CI matrix env
+    try:
+        serve = dataclasses.replace(serve, attn_backend="pallas")
+        api = make_model(TINY_ARCHS["qwen2-1.5b"], attn_backend="pallas",
+                         prefill_block_q=serve.prefill_block_q,
+                         prefill_block_k=serve.prefill_block_k)
+        params = api.init_params(jax.random.PRNGKey(0))
+        step_fn = eng.make_engine_step(api, serve)
+        state = eng.init_engine_state(api, serve, seed=0)
+        return count_pallas_calls(lambda p, s: step_fn(p, s), params, state,
+                                  name_contains="flash_prefill")
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_ATTN_BACKEND", None)
+        else:
+            os.environ["REPRO_ATTN_BACKEND"] = prev
 
 
 def _run(api, params, serve: ServeConfig, n_steps: int):
@@ -140,30 +190,54 @@ def main() -> None:
     os.makedirs(OUT_DIR, exist_ok=True)
     smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
     sweep = SMOKE_SWEEP if smoke else CHUNK_SWEEP
+    adaptive_sweep = ADAPTIVE_SMOKE if smoke else ADAPTIVE_SWEEP
     api, params = bench_model("qwen2-1.5b")
     n_steps = 24 if smoke else 56
 
+    # structural guarantee first: the batched chunk step is ONE dispatch
+    # per iteration however many lanes it advances (Mp=4 here; each sweep
+    # row below is additionally traced with its OWN config)
+    dispatches = _dispatch_count(_serve(8, True, adaptive=16,
+                                        max_prefills=4))
+    assert dispatches == 1, \
+        f"batched chunk step issued {dispatches} prefill dispatches"
+    emit("tpot_load_dispatches_per_step", dispatches,
+         "max_prefills_per_step=4;flash_prefill_pallas_calls=1")
+
+    # (chunk, adaptive ceiling): 0,0 = phase-exclusive baseline
+    points = [(0, 0)] + [(c, 0) for c in sweep] + list(adaptive_sweep)
     records = []
+    ttfts = {}                              # (policy, chunk, cmax) -> [steps]
     ref_out = None
-    for chunk in [0] + sweep:               # 0 = phase-exclusive baseline
-        serve = _serve(chunk, smoke)
+    for chunk, cmax in points:
+        serve = _serve(chunk, smoke, adaptive=cmax)
         busy_out, busy_stamps, walls, ttft = _run(api, params, serve,
                                                   n_steps)
         if ref_out is None:
             ref_out = busy_out
         else:                               # scheduler invisible in tokens
             assert busy_out == ref_out, \
-                f"chunk={chunk} changed greedy decode output"
+                f"chunk={chunk},cmax={cmax} changed greedy decode output"
         g = _gaps(busy_stamps, walls)
-        policy = "exclusive" if chunk == 0 else "mixed"
+        policy = ("exclusive" if chunk == 0
+                  else "adaptive" if cmax else "mixed")
+        ttfts[(policy, chunk, cmax)] = ttft
+        # per-row measurement against the row's OWN config, not a copy of
+        # the Mp=4 probe above — a future config-dependent dispatch split
+        # would show up in the committed sweep
+        row_disp = None if chunk == 0 else _dispatch_count(serve)
+        assert row_disp in (None, 1), (chunk, cmax, row_disp)
         rec = {"kind": "tpot_under_load", "policy": policy, "chunk": chunk,
+               "chunk_max": cmax,
                "prompt_len": serve.max_prompt_len, "n_steps": n_steps,
                "long_every": LONG_EVERY,
+               "prefill_dispatches_per_step": row_disp,
                "long_ttft_steps_mean": float(np.mean(ttft)) if ttft
                else float("nan"),
                "long_prompts_finished": len(ttft), **g}
         records.append(rec)
-        emit(f"tpot_load_{policy}_C{chunk}", g["p99_gap_ms"] * 1e3,
+        emit(f"tpot_load_{policy}_C{chunk}" + (f"_max{cmax}" if cmax else ""),
+             g["p99_gap_ms"] * 1e3,
              f"max_gap_steps={g['max_gap_steps']};"
              f"p99_gap_steps={g['p99_gap_steps']:.0f};"
              f"max_gap_ms={g['max_gap_ms']:.2f};"
@@ -171,13 +245,38 @@ def main() -> None:
 
     # the claims this benchmark exists to pin down: the mixed scheduler's
     # inter-token gap is exactly one step (bounded by ~1 chunk-step of
-    # wall time); the exclusive scheduler stalls decode behind prefill
+    # wall time) — adaptive budgets included; the exclusive scheduler
+    # stalls decode behind prefill
     for r in records:
-        if r["policy"] == "mixed":
+        if r["policy"] in ("mixed", "adaptive"):
             assert r["max_gap_steps"] == 1, r
     excl = next(r for r in records if r["policy"] == "exclusive")
     assert excl["max_gap_steps"] > 1, \
         "exclusive baseline never stalled — workload too light to measure"
+    # adaptive TTFT brackets between the static points: no worse than
+    # always running the small chunk (idle iterations run bigger ones),
+    # no better than always running the ceiling (busy iterations run
+    # smaller ones) — sanity that the policy actually moves the tradeoff.
+    # Policies finish different NUMBERS of long prompts inside n_steps
+    # (slower prefill leaves late arrivals queued), so compare means over
+    # the COMMON finished prefix: long prompts are submitted in identical
+    # order and scheduled FCFS, so index i is the same request everywhere.
+    def _common_mean(a, b):
+        k = min(len(a), len(b))
+        return (float(np.mean(a[:k])), float(np.mean(b[:k]))) if k \
+            else (0.0, 0.0)
+
+    if not smoke:
+        for chunk, cmax in adaptive_sweep:
+            adapt = ttfts[("adaptive", chunk, cmax)]
+            lo = ttfts.get(("mixed", chunk, 0))
+            hi = ttfts.get(("mixed", cmax, 0))
+            if lo is not None:
+                am, lm = _common_mean(adapt, lo)
+                assert am <= lm, (adapt, lo)
+            if hi is not None:
+                am, hm = _common_mean(adapt, hi)
+                assert am >= hm, (adapt, hi)
 
     if not smoke:
         with open(os.path.join(OUT_DIR, "sweep.json"), "w") as f:

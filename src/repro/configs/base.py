@@ -187,8 +187,24 @@ class ServeConfig:
     # under both policies — chunked prefill is bitwise-equal to single shot.
     prefill_chunk_tokens: int = 0
     # how many PREFILLING slots advance one chunk per step (bounds the
-    # per-step prefill compute riding alongside decode; FCFS beyond it)
+    # per-step prefill compute riding alongside decode; FCFS beyond it).
+    # All of them share ONE prefill dispatch per iteration — the engine's
+    # batched chunk step gathers every selected lane (heterogeneous chunk
+    # cursors, ragged chunk lengths, per-lane cached prefixes) into a
+    # single ``api.prefill_batched`` call.
     max_prefills_per_step: int = 1
+    # adaptive chunk sizing (SLO-aware load shaping): 0 = static chunks of
+    # exactly ``prefill_chunk_tokens``. > 0 = each mixed-step iteration
+    # picks its per-lane chunk budget in
+    # [prefill_block_q, prefill_chunk_tokens_max] from the decode-lane
+    # occupancy snapshot (``engine.adaptive_chunk_budget``): near-full
+    # decode batches shrink chunks toward the kernel tile floor so decode
+    # iterations stay bounded; idle batches grow them toward the ceiling so
+    # long prompts reach their first token sooner. The policy is a pure
+    # integer function of ring state, mirrored bit-for-bit by the host
+    # engine — the differential harness replays it on both planes. The
+    # chunk bucket compiles at this ceiling (``chunk_bucket``).
+    prefill_chunk_tokens_max: int = 0
 
     def __post_init__(self):
         if self.prefill_chunk_tokens < 0:
@@ -214,10 +230,54 @@ class ServeConfig:
                     f"{self.prefill_block_q}: the flash-prefill kernel "
                     f"tiles queries at block_q, so a ragged last tile "
                     f"burns a full tile of compute every chunk")
+        if self.prefill_chunk_tokens_max < 0:
+            raise ValueError(
+                f"prefill_chunk_tokens_max must be >= 0, got "
+                f"{self.prefill_chunk_tokens_max}")
+        if self.prefill_chunk_tokens_max > 0:
+            if self.prefill_chunk_tokens <= 0:
+                raise ValueError(
+                    "prefill_chunk_tokens_max (adaptive chunk sizing) "
+                    "requires the mixed-phase scheduler: set "
+                    "prefill_chunk_tokens > 0")
+            if self.prefill_chunk_tokens_max < self.prefill_chunk_tokens:
+                raise ValueError(
+                    f"prefill_chunk_tokens_max="
+                    f"{self.prefill_chunk_tokens_max} is below "
+                    f"prefill_chunk_tokens={self.prefill_chunk_tokens}; "
+                    f"the adaptive ceiling must cover the static chunk")
+            if self.prefill_chunk_tokens_max < self.prefill_block_q:
+                raise ValueError(
+                    f"prefill_chunk_tokens_max="
+                    f"{self.prefill_chunk_tokens_max} is below the "
+                    f"adaptive floor prefill_block_q="
+                    f"{self.prefill_block_q} (the budget range "
+                    f"[prefill_block_q, prefill_chunk_tokens_max] would "
+                    f"be empty)")
+            if self.prefill_chunk_tokens_max % self.prefill_block_q:
+                raise ValueError(
+                    f"prefill_chunk_tokens_max="
+                    f"{self.prefill_chunk_tokens_max} is not a multiple "
+                    f"of prefill_block_q={self.prefill_block_q}: adaptive "
+                    f"budgets are floor-aligned to whole kernel tiles")
+            if self.prefill_chunk_tokens_max > self.max_prompt_len:
+                raise ValueError(
+                    f"prefill_chunk_tokens_max="
+                    f"{self.prefill_chunk_tokens_max} exceeds "
+                    f"max_prompt_len={self.max_prompt_len}; a ceiling "
+                    f"larger than any prompt only adds compile shapes")
 
     @property
     def max_seq(self) -> int:
         return self.max_prompt_len + self.max_new_tokens
+
+    @property
+    def chunk_bucket(self) -> int:
+        """Compiled token width of the mixed-step chunk dispatch: the
+        adaptive ceiling when adaptive sizing is on, else the static chunk.
+        (The per-iteration budget only clamps how many of these columns are
+        live — the program shape never changes.)"""
+        return self.prefill_chunk_tokens_max or self.prefill_chunk_tokens
 
     @property
     def pages_per_req(self) -> int:

@@ -64,10 +64,13 @@ iteration, all inside the same fused program:
      enter ``PREFILLING`` with chunk cursor ``ring.prefill_done_len`` =
      ``cached_len`` — no model compute yet;
   2. chunk: up to ``max_prefills_per_step`` PREFILLING slots (FCFS)
-     advance one ``prefill_chunk_tokens`` chunk of suffix prefill,
+     advance one chunk of suffix prefill in ONE batched dispatch
+     (``api.prefill_batched`` — heterogeneous chunk cursors, ragged chunk
+     lengths and per-lane cached prefixes ride a single fused call, so
+     per-iteration launch cost does not scale with the lane count),
      resuming from the cursor via the same ``cached_lens`` machinery as
-     radix prefix reuse (``api.prefill_chunked``'s inner step, bitwise-
-     equal to single shot); the final chunk samples the first token;
+     radix prefix reuse (bitwise-equal to single shot); the final chunk
+     samples the first token;
   3. decode: ALL lanes that were DECODE_PROCESSING at the top of the step
      run one decode step — a prefill in flight never pauses them, so the
      per-lane inter-token gap is bounded by one (decode + chunk) step.
@@ -76,7 +79,15 @@ Greedy token streams are identical under both policies (chunking is
 bitwise-equal and each request's KV/positions don't depend on the
 interleave); ``tests/test_scheduler_diff.py`` holds both engines to that.
 The chunk size trades TTFT against TPOT jitter — ``benchmarks/
-tpot_under_load.py`` sweeps it.
+tpot_under_load.py`` sweeps it. ``ServeConfig.prefill_chunk_tokens_max``
+makes that tradeoff load-adaptive: each iteration picks its per-lane
+chunk budget from the top-of-step decode-lane occupancy snapshot
+(``adaptive_chunk_budget`` — a pure integer policy the host engine
+mirrors bit-for-bit), shrinking toward the ``prefill_block_q`` tile floor
+when the decode batch is near-full and growing toward the ceiling when
+lanes sit idle. The compiled chunk shape stays fixed at the ceiling
+(``ServeConfig.chunk_bucket``); the budget only clamps how many columns
+of it are live, so adaptivity costs zero extra executables.
 
 Prefix plane (``ServeConfig.prefix_cache``), mapped onto the paper's
 Fig. 2 DPU/GPU split: the radix prefix index
@@ -173,6 +184,36 @@ def _check_mixed_phase(api: ModelApi, serve: ServeConfig) -> None:
             f"ServeConfig.prefill_chunk_tokens (mixed-phase scheduling) "
             f"requires a paged-KV decoder-only attention arch; "
             f"{cfg.name!r} is {cfg.arch_type!r}")
+    if api.prefill_batched is None:
+        raise ValueError(
+            f"ServeConfig.prefill_chunk_tokens (mixed-phase scheduling) "
+            f"requires ModelApi.prefill_batched — the one-dispatch batched "
+            f"chunk step — but the {cfg.name!r} api does not provide it")
+
+
+def adaptive_chunk_budget(busy_lanes, decode_batch: int, floor: int,
+                          ceiling: int):
+    """Per-lane chunk budget for one mixed-step iteration (pure policy).
+
+    ``busy_lanes`` is the top-of-step count of decode lanes that will run
+    this iteration (the same snapshot the decode sub-phase uses); the
+    budget interpolates linearly on the idle-lane fraction from ``floor``
+    (= ``ServeConfig.prefill_block_q``, one kernel query tile — the
+    smallest chunk that doesn't waste tile compute) at a full decode batch
+    up to ``ceiling`` (= ``ServeConfig.prefill_chunk_tokens_max``) when
+    every lane is idle, then aligns down to whole ``floor`` tiles.
+
+    Properties the adaptive-chunk tests pin: result always lies in
+    [floor, ceiling]; monotone non-decreasing in the idle-lane count;
+    floor-aligned; and — being integer arithmetic over the occupancy
+    snapshot alone — bit-identical between the device engine (jnp int32)
+    and the host mirror (python ints), so the differential harness keeps
+    working in adaptive mode. Requires ``ceiling`` to be a multiple of
+    ``floor`` (validated by ``ServeConfig.__post_init__``).
+    """
+    idle = decode_batch - busy_lanes
+    budget = floor + ((ceiling - floor) * idle) // decode_batch
+    return (budget // floor) * floor
 
 
 def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
@@ -275,7 +316,8 @@ def select_pending_fcfs(ring: rb.RingState, max_admit: int):
 
 def _left_pad_prompts(ring: rb.RingState, slots: jax.Array,
                       bucket: Optional[int] = None,
-                      start: Optional[jax.Array] = None):
+                      start: Optional[jax.Array] = None,
+                      limit: Optional[jax.Array] = None):
     """Gather [A, bucket] prompts, left-padded (right-aligned).
 
     ``bucket`` < max_prompt_len realizes the paper's CUDA-graph-cache shape
@@ -286,12 +328,18 @@ def _left_pad_prompts(ring: rb.RingState, slots: jax.Array,
 
     ``start`` [A]: skip each slot's first ``start`` prompt tokens (the
     cached prefix) — the gathered bucket then holds only the suffix.
+
+    ``limit``: traced scalar clamp on the gathered length (the adaptive
+    chunk budget) — the bucket SHAPE stays static, only fewer of its
+    trailing columns are live. Must clamp before the gather so the live
+    columns hold the FIRST ``limit`` pending tokens, not the last.
     """
     rows = ring.input_arena[slots]                    # [A, P] left-aligned
     A, P = rows.shape
     B = bucket or P
     st = jnp.zeros((A,), jnp.int32) if start is None else start
-    lens = jnp.clip(ring.prompt_len[slots] - st, 0, B)
+    cap = B if limit is None else jnp.minimum(B, limit)
+    lens = jnp.clip(ring.prompt_len[slots] - st, 0, cap)
     col = jnp.arange(B)[None, :]
     src = col - (B - lens)[:, None] + st[:, None]       # [A, B]
     valid = col >= (B - lens)[:, None]
@@ -310,8 +358,11 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
     paged = cfg.uses_paged_kv
     use_prefix = serve.prefix_cache
     C = serve.prefill_chunk_tokens
+    Cmax = serve.prefill_chunk_tokens_max
+    chunk_bucket = serve.chunk_bucket
     Mp = serve.max_prefills_per_step
     mixed = C > 0
+    adaptive = Cmax > 0
 
     def suffix_pages_needed(ring, cand):
         """Pages a candidate still needs: lifetime total minus its cached
@@ -541,21 +592,25 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         return dataclasses.replace(
             state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
 
-    def chunk_branch(params, state: EngineState):
+    def chunk_branch(params, state: EngineState, budget):
         """Advance up to ``max_prefills_per_step`` PREFILLING slots (FCFS)
-        by one ``prefill_chunk_tokens`` chunk, resuming from the cursor via
-        the cached_lens machinery (chunk i's cached prefix = everything
-        already written). The final chunk samples the first token."""
+        by one chunk — all lanes share ONE ``api.prefill_batched``
+        dispatch (heterogeneous cursors, ragged lengths, per-lane cached
+        prefixes), resuming from the cursor via the cached_lens machinery
+        (chunk i's cached prefix = everything already written). ``budget``
+        (adaptive mode) clamps this iteration's per-lane chunk length; the
+        final chunk samples the first token."""
         ring, cache, alloc = state.ring, state.cache, state.alloc
         keyed = jnp.where(ring.slot_state == rb.PREFILLING, ring.arrival,
                           INT_MAX)
         pslots = jnp.argsort(keyed)[:Mp].astype(jnp.int32)
         pvalid = keyed[pslots] != INT_MAX
         cursor = ring.prefill_done_len[pslots]                  # [Mp]
-        prompts, lens = _left_pad_prompts(ring, pslots, C, start=cursor)
+        prompts, lens = _left_pad_prompts(ring, pslots, chunk_bucket,
+                                          start=cursor, limit=budget)
         lens = jnp.where(pvalid, lens, 0)
-        logits, cache = api.prefill(params, prompts, lens, cache, pslots,
-                                    pvalid, cached_lens=cursor)
+        logits, cache = api.prefill_batched(params, prompts, lens, cache,
+                                            pslots, pvalid, cursor)
         tok = sample_tokens(state.key, logits.astype(jnp.float32),
                             ring.temperature[pslots], top_p=serve.top_p,
                             slot_ids=pslots, step=state.step)
@@ -649,10 +704,18 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             state)
 
         # 2. chunk: freshly admitted slots run their first chunk this very
-        # step (TTFT parity with phase-exclusive for single-chunk prompts)
+        # step (TTFT parity with phase-exclusive for single-chunk prompts).
+        # Adaptive mode sizes the per-lane budget off the SAME decode-lane
+        # snapshot the decode sub-phase uses — a pure function of ring
+        # state, so the host mirror lands on the identical budget.
+        budget = None
+        if adaptive:
+            n_busy = jnp.sum(decode_active.astype(jnp.int32))
+            budget = adaptive_chunk_budget(n_busy, Bd,
+                                           serve.prefill_block_q, Cmax)
         state = jax.lax.cond(
             jnp.any(state.ring.slot_state == rb.PREFILLING),
-            lambda s: chunk_branch(params, s),
+            lambda s: chunk_branch(params, s, budget),
             lambda s: s,
             state)
 

@@ -91,6 +91,16 @@ class HostEngine:
                                 top_p=serve.top_p, slot_ids=slots, step=step)
             return tok, cache
 
+        def _chunk(params, prompts, lens, cursors, cache, slots, active,
+                   temps, key, step):
+            # the batched chunk step: ONE dispatch for all PREFILLING lanes
+            # (same ModelApi entry point as the device engine's mixed step)
+            logits, cache = api.prefill_batched(params, prompts, lens, cache,
+                                                slots, active, cursors)
+            tok = sample_tokens(key, logits.astype(jnp.float32), temps,
+                                top_p=serve.top_p, slot_ids=slots, step=step)
+            return tok, cache
+
         def _decode(params, tokens, cache, slots, active, temps, key, step):
             logits, cache = api.decode(params, tokens, cache, slots, active)
             tok = sample_tokens(key, logits.astype(jnp.float32), temps,
@@ -98,6 +108,8 @@ class HostEngine:
             return tok, cache
 
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(4,))
+        self._chunk_fn = jax.jit(_chunk, donate_argnums=(4,)) \
+            if api.prefill_batched is not None else None
         self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
 
     def reset(self, seed: int = 0) -> None:
@@ -294,18 +306,30 @@ class HostEngine:
             self.slot_state[s] = rb.PREFILLING
             self.prefill_done[s] = int(self.slot_cached[s])
             self.lane_slot[int(free_lanes[k])] = s
-        # 2. chunk (freshly admitted slots run their first chunk this step)
-        self._run_chunk()
+        # 2. chunk (freshly admitted slots run their first chunk this step).
+        # Adaptive mode: the per-lane budget is the SAME pure function of
+        # the top-of-step decode snapshot the device engine evaluates —
+        # plain python ints here, jnp int32 there, identical result.
+        serve = self.serve
+        budget = serve.prefill_chunk_tokens
+        if serve.prefill_chunk_tokens_max > 0:
+            from repro.core.engine import adaptive_chunk_budget
+            budget = int(adaptive_chunk_budget(
+                int(decode_active.sum()), serve.decode_batch,
+                serve.prefill_block_q, serve.prefill_chunk_tokens_max))
+        self._run_chunk(budget)
         # 3. decode all snapshot lanes
         self._run_decode(decode_active)
 
     def _dispatch_prefill(self, slot_list, width: int, bucket: int,
-                          tokens_of, always_cached: bool) -> np.ndarray:
+                          tokens_of, chunked: bool) -> np.ndarray:
         """Assemble a left-padded ``[width, bucket]`` prefill batch and
-        dispatch the jitted step — shared by the exclusive prefill (whole
-        suffix per slot) and the mixed chunk step (one chunk per slot).
-        ``tokens_of(slot) -> (tokens, cached_len)`` selects each slot's
-        piece. Returns the sampled tokens on host."""
+        dispatch ONE jitted step — shared by the exclusive prefill (whole
+        suffix per slot, ``api.prefill``) and the mixed batched chunk step
+        (one chunk per slot with heterogeneous cursors,
+        ``api.prefill_batched``). ``tokens_of(slot) -> (tokens,
+        cached_len)`` selects each slot's piece. Returns the sampled
+        tokens on host."""
         prompts = np.zeros((width, bucket), np.int32)
         lens = np.zeros(width, np.int32)
         cached = np.zeros(width, np.int32)
@@ -322,13 +346,20 @@ class HostEngine:
             temps[j] = self.temperature[s]           # per-request temp
         self.jitter()                      # host touch 3: kernel dispatch
 
-        cached_arg = jnp.asarray(cached) \
-            if always_cached or self.prefix is not None else None
-        tok, self.cache = self._prefill_fn(
-            self.params, jnp.asarray(prompts), jnp.asarray(lens), cached_arg,
-            self.cache, jnp.asarray(slots), jnp.asarray(active),
-            jnp.asarray(temps), self.key,
-            jnp.asarray(self.step_count, jnp.int32))
+        if chunked:
+            tok, self.cache = self._chunk_fn(
+                self.params, jnp.asarray(prompts), jnp.asarray(lens),
+                jnp.asarray(cached), self.cache, jnp.asarray(slots),
+                jnp.asarray(active), jnp.asarray(temps), self.key,
+                jnp.asarray(self.step_count, jnp.int32))
+        else:
+            cached_arg = jnp.asarray(cached) \
+                if self.prefix is not None else None
+            tok, self.cache = self._prefill_fn(
+                self.params, jnp.asarray(prompts), jnp.asarray(lens),
+                cached_arg, self.cache, jnp.asarray(slots),
+                jnp.asarray(active), jnp.asarray(temps), self.key,
+                jnp.asarray(self.step_count, jnp.int32))
         tok_host = np.asarray(jax.device_get(tok))   # PCIe round-trip
         self.jitter()                      # host touch 4: copy-back handling
         return tok_host
@@ -342,7 +373,7 @@ class HostEngine:
             # suffix only beyond the cached prefix
             lambda s: (self.prompt[s][int(self.slot_cached[s]):],
                        int(self.slot_cached[s])),
-            always_cached=False)
+            chunked=False)
 
         for s in admit:   # commit freshly prefilled pages (trie ref)
             self._commit_prompt_to_trie(s)
@@ -353,32 +384,34 @@ class HostEngine:
                 self.slot_state[s] = rb.DECODE_PROCESSING
                 self.lane_slot[int(free_lanes[j])] = s
 
-    def _run_chunk(self) -> None:
+    def _run_chunk(self, budget: int) -> None:
         """Advance up to ``max_prefills_per_step`` PREFILLING slots (FCFS)
-        by one ``prefill_chunk_tokens`` chunk; the final chunk samples the
-        first token and commits the prompt's pages into the prefix trie
-        (chunk-complete, not admission — partial pages must never be
-        indexed)."""
+        by one ``budget``-token chunk, all sharing ONE batched dispatch
+        (``api.prefill_batched`` via ``_chunk_fn``; the compiled bucket is
+        ``serve.chunk_bucket`` — the adaptive budget only shortens the
+        live columns). The final chunk samples the first token and commits
+        the prompt's pages into the prefix trie (chunk-complete, not
+        admission — partial pages must never be indexed)."""
         serve = self.serve
-        C = serve.prefill_chunk_tokens
+        bucket = serve.chunk_bucket
         filling = np.where(self.slot_state == rb.PREFILLING)[0]
         if len(filling) == 0:
             return
         filling = filling[np.argsort(self.arrival[filling], kind="stable")
                           ][:serve.max_prefills_per_step]
         tok_host = self._dispatch_prefill(
-            filling, serve.max_prefills_per_step, C,
+            filling, serve.max_prefills_per_step, bucket,
             # one chunk, resuming from the cursor
             lambda s: (self.prompt[s][int(self.prefill_done[s]):
-                                      int(self.prefill_done[s]) + C],
+                                      int(self.prefill_done[s]) + budget],
                        int(self.prefill_done[s])),
-            always_cached=True)
+            chunked=True)
 
         now = time.perf_counter()
         for j, s in enumerate(filling):
             s = int(s)
             self.prefill_done[s] += min(
-                C, len(self.prompt[s]) - int(self.prefill_done[s]))
+                budget, len(self.prompt[s]) - int(self.prefill_done[s]))
             if self.prefill_done[s] < len(self.prompt[s]):
                 continue                   # partial: no token surfaces
             self._commit_prompt_to_trie(s)

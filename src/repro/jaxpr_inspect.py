@@ -41,6 +41,28 @@ def intermediate_shapes(fn, *args) -> set:
     return shapes
 
 
+def count_pallas_calls(fn, *args, name_contains: str) -> int:
+    """Count ``pallas_call`` eqns whose kernel name contains
+    ``name_contains`` anywhere in the traced computation of ``fn``.
+
+    A ``lax.scan`` body is traced once, so a kernel launched per-layer
+    inside the layer scan still counts as ONE dispatch site — exactly the
+    granularity of the engine's one-prefill-dispatch-per-iteration
+    guarantee (each eqn is a separate launch of the whole stack; a
+    per-slot python loop would show up as N eqns)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    n = 0
+    for j in iter_jaxprs(jaxpr.jaxpr):
+        for eqn in j.eqns:
+            if eqn.primitive.name != "pallas_call":
+                continue
+            name = eqn.params.get("name_and_src_info",
+                                  eqn.params.get("name", ""))
+            if name_contains in str(name):
+                n += 1
+    return n
+
+
 def max_intermediate_bytes(fn, *args) -> int:
     """Largest single intermediate (bytes) in the traced computation."""
     jaxpr = jax.make_jaxpr(fn)(*args)

@@ -42,7 +42,14 @@ entirely below the sliding window) are clamped+skipped like dead suffix
 blocks. Optional ``k_scale``/``v_scale`` fuse int8-KV dequantisation of
 the pooled prefix in-VMEM. ``cached_lens = 0`` lanes skip the whole prefix
 phase — one compiled program serves mixed hit/miss batches and every chunk
-of a chunked prefill.
+of a chunked prefill. This is also what makes the engine's BATCHED chunk
+step a single dispatch: up to ``max_prefills_per_step`` PREFILLING lanes
+with heterogeneous chunk cursors (each lane's ``cached_lens`` = its own
+resume point) and ragged chunk lengths ride one kernel launch. Query
+tiles that are entirely left-pad (a lane whose ragged/adaptive-budget
+chunk fills only the bucket's tail) skip all compute via the shared
+``q_live`` guard — the cost of a lane's chunk scales with its live
+tokens, not the bucket ceiling.
 
 Grid: ``(B, KV, Tp/block_q, max_blocks + Tp/block_k)`` with the key
 dimension innermost so the online softmax accumulates prefix pages first,
@@ -132,13 +139,23 @@ def _flash_prefill_kernel(
         q = q_ref[0, :, 0].astype(jnp.float32).reshape(block_q * G, hd)
         return q * scale
 
+    # dead query tile: every column of this q block sits in the left-pad
+    # region (no live queries). Ragged batched chunks make these common —
+    # a lane whose adaptive budget (or short suffix) fills only the tail
+    # of the chunk bucket skips the leading tiles' compute entirely; the
+    # finalize write still runs, emitting the zero rows callers never read.
+    # (HBM side: a dead tile's kv_map range is empty, so its clip collapses
+    # every key step to one repeated block index — the pipeline fetches
+    # O(1) blocks per dead tile, not the live range.)
+    q_live = qs + block_q > off
+
     if num_prefix_blocks:
         cached = cached_ref[b]
         ks_abs = ki * page_size
         # smallest valid query abs position in this q block bounds the
         # sliding-window reach into the prefix
         qa_lo = cached + jnp.maximum(qs, off) - off
-        live_prefix = (ki < num_prefix_blocks) & (ks_abs < cached) \
+        live_prefix = q_live & (ki < num_prefix_blocks) & (ks_abs < cached) \
             & (ks_abs + page_size > qa_lo - eff_w + 1)
 
         @pl.when(live_prefix)
@@ -169,7 +186,7 @@ def _flash_prefill_kernel(
     # by the sliding window. Blocks outside skip compute AND (via the
     # clamped index_map) the HBM fetch.
     lo = jnp.maximum(off, jnp.where(w > 0, qs - w + 1, 0))
-    live = (kis >= 0) & (ks < qs + block_q) & (ks + block_k > lo)
+    live = q_live & (kis >= 0) & (ks < qs + block_q) & (ks + block_k > lo)
 
     @pl.when(live)
     def _process():
@@ -320,6 +337,10 @@ def flash_prefill(
         ),
         out_shape=jax.ShapeDtypeStruct((B, Tp, KV, G, hd), q.dtype),
         interpret=interpret,
+        # stable dispatch identity: the engine's one-prefill-dispatch-per-
+        # iteration guarantee is asserted by counting eqns with this name
+        # in the traced step (jaxpr_inspect.count_pallas_calls)
+        name="flash_prefill",
     )(*scalars, *inputs)
     out = out.reshape(B, Tp, H, hd)
     return out[:, pad:] if pad else out

@@ -37,15 +37,27 @@ def main():
                          "many prefill tokens per step while decode keeps "
                          "streaming (0 = phase-exclusive legacy policy; "
                          "requires a paged-KV decoder-only arch)")
+    ap.add_argument("--prefill-chunk-max", type=int, default=0,
+                    help="adaptive chunk sizing ceiling: each step's chunk "
+                         "budget follows decode-lane occupancy between "
+                         "--prefill-block-q (floor) and this ceiling "
+                         "(0 = static chunks; requires --prefill-chunk)")
+    ap.add_argument("--prefill-block-q", type=int, default=0,
+                    help="flash-prefill query tile / adaptive chunk floor "
+                         "(0 = default 128, or 8 when --prefill-chunk-max "
+                         "is set, so tiny demo prompts stay valid)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
+    block_q = args.prefill_block_q or (8 if args.prefill_chunk_max else 128)
     serve = ServeConfig(num_slots=16, max_prompt_len=32,
                         max_new_tokens=args.max_new, decode_batch=8,
                         window=args.window, admit_per_step=4, page_size=8,
                         num_pages=160, eos_token=-1,
                         attn_backend=args.attn_backend,
-                        prefill_chunk_tokens=args.prefill_chunk)
+                        prefill_chunk_tokens=args.prefill_chunk,
+                        prefill_chunk_tokens_max=args.prefill_chunk_max,
+                        prefill_block_q=block_q)
     api = make_model(cfg, attn_backend=serve.attn_backend,
                      attn_pages_per_block=serve.attn_pages_per_block,
                      prefill_block_q=serve.prefill_block_q,

@@ -32,6 +32,16 @@ class ModelApi(NamedTuple):
     # chunked prefill (bucket > VMEM budget): same contract as ``prefill``
     # plus a ``chunk`` kwarg; None for families without paged prefix support
     prefill_chunked: Optional[Callable[..., Any]] = None
+    # batched chunk step (mixed-phase scheduler hot path): ONE dispatch
+    # advances up to ``ServeConfig.max_prefills_per_step`` PREFILLING lanes
+    # by one chunk each — heterogeneous cursors, ragged chunk lengths,
+    # per-lane cached prefixes. Signature:
+    #   prefill_batched(params, prompts, lens, cache, slot_ids, active,
+    #                   cursors) -> (logits [B, V], cache')
+    # where ``cursors[b]`` counts lane b's already-resident prompt tokens
+    # (cached prefix + completed chunks). None for families that cannot
+    # suspend prefill mid-prompt (SSM/hybrid recurrence, enc-dec cross-KV).
+    prefill_batched: Optional[Callable[..., Any]] = None
 
 
 def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
@@ -55,7 +65,7 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
         attn_backend, pages_per_block=attn_pages_per_block)
     pre_attend = attn_backend_lib.get_prefill_backend(
         attn_backend, block_q=prefill_block_q, block_k=prefill_block_k)
-    chunked = None
+    chunked = batched = None
     if cfg.is_encoder_decoder:
         train = lambda params, batch, **kw: encdec_lib.train_loss(
             params, cfg, batch, **kw)
@@ -68,6 +78,8 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
             params, cfg, *a, prefill_attend=pre_attend, **kw)
         if cfg.arch_type in ("dense", "moe", "vlm"):
             chunked = lambda params, *a, **kw: tf_lib.chunked_prefill(
+                params, cfg, *a, prefill_attend=pre_attend, **kw)
+            batched = lambda params, *a, **kw: tf_lib.prefill_batched(
                 params, cfg, *a, prefill_attend=pre_attend, **kw)
 
     dec = lambda params, *a, **kw: tf_lib.decode(
@@ -90,6 +102,7 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
         make_cache=mk_cache,
         attn_backend=attend.backend_name,
         prefill_chunked=chunked,
+        prefill_batched=batched,
     )
 
 

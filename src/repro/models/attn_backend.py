@@ -47,7 +47,12 @@ may be garbage — callers never read them. ``prefix`` is an optional
 (radix prefix reuse / chunked prefill) that query tiles fold in before the
 in-flight suffix keys — the gather backend gathers the pages densely, the
 pallas backend streams them through the flash kernel's block-table
-prefetch.
+prefetch. ``cached_lens`` is per-lane, which is what lets the engine's
+batched chunk step put lanes with heterogeneous chunk cursors (and ragged
+chunk lengths) into ONE dispatch; the gather reference reduces over a
+position-indexed key buffer precisely so that every chunking of a prompt
+is bitwise-identical — the oracle the differential scheduler harness
+leans on.
 """
 from __future__ import annotations
 

@@ -652,6 +652,37 @@ def chunked_prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
     return logits, cache
 
 
+def prefill_batched(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                    lengths: jax.Array, cache: Dict[str, Any],
+                    slot_ids: jax.Array, active: jax.Array,
+                    cursors: jax.Array,
+                    prefill_attend: Optional[Any] = None):
+    """One fused dispatch advancing a batch of PREFILLING lanes by a chunk.
+
+    The mixed-phase scheduler's hot path (``ModelApi.prefill_batched``):
+    ``tokens`` [B, T] holds up to ``max_prefills_per_step`` lanes' next
+    chunks, left-padded; ``cursors[b]`` counts lane b's already-resident
+    prompt tokens (radix-cached prefix + previously completed chunks), so
+    the batch is heterogeneous by construction — fresh admissions
+    (cursor = cached_len), mid-prompt resumes, and final ragged chunks all
+    share the single dispatch. Each lane's attention folds its resident
+    prefix in from the paged pool (position-indexed on the gather
+    reference, block-table scalar prefetch on the flash kernel), K/V
+    writes land at absolute positions ``cursors[b] + i`` and never touch
+    pages below the cursor, and ``lengths[b] == 0`` lanes are inert.
+
+    Returns (logits [B, V] at each lane's last chunk token — meaningful
+    only for lanes whose cursor completes this chunk — and the updated
+    cache). Requires a paged-KV decoder-only arch, like every consumer of
+    the ``cached_lens`` machinery.
+    """
+    if cursors is None:
+        raise ValueError("prefill_batched requires per-lane cursors; use "
+                         "prefill() for a from-scratch bucket")
+    return prefill(params, cfg, tokens, lengths, cache, slot_ids, active,
+                   prefill_attend=prefill_attend, cached_lens=cursors)
+
+
 def _store_ssm_states(cache, final_states, slot_ids, active):
     """final_states leaves: [L, B, ...] -> scatter into cache['ssm'] [L, S, ...]."""
     def scatter(buf, new):

@@ -1,0 +1,159 @@
+"""Adaptive chunk-sizing policy + batched one-dispatch guarantees.
+
+The adaptive policy (``engine.adaptive_chunk_budget``) is a PURE integer
+function of the decode-occupancy snapshot — that purity is what lets the
+device engine (jnp int32) and the host mirror (python ints) stay
+bit-identical, which the differential scheduler harness depends on. These
+tests pin the policy's contract directly:
+
+  * bounds: the budget always lies in [prefill_block_q,
+    prefill_chunk_tokens_max] and is aligned to whole query tiles;
+  * monotonicity: more idle decode lanes never shrink the budget;
+  * extremes: a full decode batch yields the tile floor, an idle batch
+    the ceiling;
+  * device/host identity on random ring states;
+  * config validation: every illegal knob combination fails at
+    ``ServeConfig`` construction, not inside the first jitted window;
+
+and the batched chunk step's acceptance criterion: with
+``max_prefills_per_step > 1`` the mixed engine step issues EXACTLY ONE
+prefill dispatch per iteration (jaxpr walk over the traced step, counting
+flash-prefill ``pallas_call`` eqns — a per-slot loop would show up as Mp
+of them).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import TINY_ARCHS
+from repro.core import engine as eng
+from repro.core.host_engine import HostEngine
+from repro.jaxpr_inspect import count_pallas_calls
+from repro.models.api import make_model
+
+
+def _cases(n=300, seed=0):
+    """Random (busy, decode_batch, floor, ceiling) policy inputs spanning
+    tiny test configs up to production-ish tile sizes."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        bd = int(rng.integers(1, 33))
+        busy = int(rng.integers(0, bd + 1))
+        floor = int(rng.choice([8, 16, 32, 128]))
+        ceiling = floor * int(rng.integers(1, 9))
+        out.append((busy, bd, floor, ceiling))
+    return out
+
+
+def test_budget_bounded_and_tile_aligned():
+    for busy, bd, floor, ceiling in _cases():
+        b = eng.adaptive_chunk_budget(busy, bd, floor, ceiling)
+        assert floor <= b <= ceiling, (busy, bd, floor, ceiling, b)
+        assert b % floor == 0, (busy, bd, floor, ceiling, b)
+
+
+def test_budget_monotone_in_idle_lanes():
+    for _, bd, floor, ceiling in _cases(60, seed=1):
+        budgets = [eng.adaptive_chunk_budget(busy, bd, floor, ceiling)
+                   for busy in range(bd + 1)]           # busy up => idle down
+        assert budgets == sorted(budgets, reverse=True), \
+            (bd, floor, ceiling, budgets)
+
+
+def test_budget_extremes():
+    # full decode batch -> the tile floor (prefill must not crowd decode);
+    # idle batch -> the ceiling (nothing to protect, minimise TTFT)
+    for _, bd, floor, ceiling in _cases(60, seed=2):
+        assert eng.adaptive_chunk_budget(bd, bd, floor, ceiling) == floor
+        assert eng.adaptive_chunk_budget(0, bd, floor, ceiling) == ceiling
+
+
+def test_budget_device_host_identical():
+    """jnp int32 evaluation (device engine) == python int evaluation (host
+    mirror) on random ring states — the bit-for-bit mirroring contract."""
+    for busy, bd, floor, ceiling in _cases(120, seed=3):
+        host = eng.adaptive_chunk_budget(busy, bd, floor, ceiling)
+        dev = eng.adaptive_chunk_budget(jnp.asarray(busy, jnp.int32), bd,
+                                        floor, ceiling)
+        assert isinstance(host, int)
+        assert int(dev) == host, (busy, bd, floor, ceiling)
+
+
+def _serve(**kw):
+    base = dict(num_slots=8, max_prompt_len=24, max_new_tokens=8,
+                decode_batch=4, window=1, admit_per_step=2, page_size=4,
+                num_pages=64, eos_token=-1, prefill_chunk_tokens=8,
+                prefill_block_q=8, prefill_block_k=8)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def test_adaptive_config_validation():
+    ok = _serve(prefill_chunk_tokens_max=16)
+    assert ok.chunk_bucket == 16                  # bucket compiles at ceiling
+    assert _serve().chunk_bucket == 8             # static mode: the chunk
+    with pytest.raises(ValueError, match="mixed-phase"):
+        _serve(prefill_chunk_tokens=0, prefill_chunk_tokens_max=16)
+    with pytest.raises(ValueError, match="below\\s+prefill_chunk_tokens"):
+        _serve(prefill_chunk_tokens=16, prefill_chunk_tokens_max=8)
+    with pytest.raises(ValueError, match="floor"):
+        _serve(prefill_block_q=16, prefill_chunk_tokens_max=8)
+    with pytest.raises(ValueError, match="multiple"):
+        _serve(prefill_chunk_tokens_max=20)
+    with pytest.raises(ValueError, match="max_prompt_len"):
+        _serve(prefill_chunk_tokens_max=32)       # > max_prompt_len=24
+    with pytest.raises(ValueError, match=">= 0"):
+        _serve(prefill_chunk_tokens_max=-1)
+
+
+def test_mixed_phase_requires_prefill_batched():
+    """The mixed scheduler's chunk step is the batched one-dispatch entry
+    point — an api without it must be refused at init."""
+    api = make_model(TINY_ARCHS["qwen2-1.5b"])
+    serve = _serve(prefill_chunk_tokens_max=16)
+    eng._check_mixed_phase(api, serve)            # fine with the entry point
+    with pytest.raises(ValueError, match="prefill_batched"):
+        eng._check_mixed_phase(api._replace(prefill_batched=None), serve)
+
+
+def test_host_adaptive_budget_follows_occupancy():
+    """Wiring check on the host mirror: with the decode batch idle the
+    first chunk advances a full ceiling budget (not the static chunk)."""
+    api = make_model(TINY_ARCHS["qwen2-1.5b"])
+    serve = _serve(prefill_chunk_tokens_max=16)
+    params = api.init_params(jax.random.PRNGKey(0))
+    host = HostEngine(api, serve, params, seed=0)
+    rng = np.random.default_rng(0)
+    s = host.submit(rng.integers(3, 512, 24).tolist(), max_new=2)
+    host.step()                                   # admit + first chunk
+    assert int(host.prefill_done[s]) == 16        # ceiling, idle batch
+    host.step()                                   # final ragged chunk (8)
+    assert int(host.prefill_done[s]) == 24
+
+
+def test_single_prefill_dispatch_with_mp_gt1(monkeypatch):
+    """Acceptance criterion: one mixed-step iteration with
+    max_prefills_per_step > 1 contains EXACTLY ONE flash-prefill dispatch
+    (the batched chunk step), not one per lane — asserted by walking the
+    traced engine step's jaxpr. The decode kernel must still be present
+    (sanity that the walk sees pallas_calls at all)."""
+    monkeypatch.setenv("REPRO_ATTN_BACKEND", "pallas")
+    api = make_model(TINY_ARCHS["qwen2-1.5b"], attn_backend="pallas",
+                     prefill_block_q=8, prefill_block_k=8)
+    serve = _serve(prefill_chunk_tokens_max=16, max_prefills_per_step=3,
+                   attn_backend="pallas")
+    params = api.init_params(jax.random.PRNGKey(0))
+    step_fn = eng.make_engine_step(api, serve)
+    state = eng.init_engine_state(api, serve, seed=0)
+    n = count_pallas_calls(lambda p, s: step_fn(p, s), params, state,
+                           name_contains="flash_prefill")
+    assert n == 1, f"expected 1 batched prefill dispatch per step, got {n}"
+    total = count_pallas_calls(lambda p, s: step_fn(p, s), params, state,
+                               name_contains="")
+    assert total > 1, "jaxpr walk saw no other kernels — detector broken?"

@@ -1,0 +1,37 @@
+"""Docs can't rot: run the same lint CI runs (tools/docs_lint.py).
+
+Checks that README.md / docs/*.md exist, their backticked repo paths
+resolve, code fences balance, and docs/CONFIG.md covers every
+``ServeConfig`` field — so a new serving knob or a moved file fails
+tier-1 locally, not just the docs-lint CI job.
+"""
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _load_lint():
+    spec = importlib.util.spec_from_file_location(
+        "docs_lint", ROOT / "tools" / "docs_lint.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_lint_clean(capsys):
+    lint = _load_lint()
+    rc = lint.main()
+    out = capsys.readouterr().out
+    assert rc == 0, f"docs lint found problems:\n{out}"
+
+
+def test_config_doc_lists_all_serve_knobs():
+    """The lint's field source must itself be sane: the ast walk finds
+    the knobs this PR series added (a rename would silently empty it)."""
+    fields = _load_lint().serve_config_fields()
+    for knob in ("attn_backend", "kv_cache_dtype", "prefill_block_q",
+                 "prefill_block_k", "prefill_chunk_tokens",
+                 "prefill_chunk_tokens_max", "max_prefills_per_step",
+                 "prefix_cache"):
+        assert knob in fields, knob

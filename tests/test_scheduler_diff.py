@@ -22,6 +22,12 @@ Traces come from two generators over the same trace space: a seeded
 numpy generator (always runs — the deterministic floor) and a
 hypothesis-driven one (runs where hypothesis is installed, adds
 shrinking and coverage-guided exploration on top).
+
+The ``BATCHED_CONFIGS`` sweep replays the same differentials under the
+batched chunk step (``max_prefills_per_step > 1`` — several PREFILLING
+lanes with heterogeneous cursors sharing ONE prefill dispatch) and under
+adaptive chunk sizing (``prefill_chunk_tokens_max > 0`` — the per-
+iteration budget follows the decode-occupancy snapshot on both planes).
 """
 import dataclasses
 import functools
@@ -68,6 +74,19 @@ MIXED = ServeConfig(num_slots=8, max_prompt_len=24, max_new_tokens=8,
                     page_size=4, num_pages=28, eos_token=-1,
                     prefill_chunk_tokens=8, max_prefills_per_step=1)
 EXCLUSIVE = dataclasses.replace(MIXED, prefill_chunk_tokens=0)
+# batched chunk step: several PREFILLING lanes share ONE prefill dispatch
+# per iteration (heterogeneous cursors / ragged final chunks in one batch)
+MIXED_MP = dataclasses.replace(MIXED, max_prefills_per_step=2,
+                               admit_per_step=3)
+# adaptive chunk sizing: the per-iteration budget follows the decode-lane
+# occupancy snapshot (floor prefill_block_q=8, ceiling 16; bucket compiles
+# at the ceiling) — the same pure policy on both planes
+ADAPTIVE = dataclasses.replace(MIXED, prefill_block_q=8,
+                               prefill_chunk_tokens_max=16)
+ADAPTIVE_MP = dataclasses.replace(ADAPTIVE, max_prefills_per_step=3,
+                                  admit_per_step=3)
+BATCHED_CONFIGS = {"mp2": MIXED_MP, "adaptive": ADAPTIVE,
+                   "adaptive_mp3": ADAPTIVE_MP}
 
 MAX_STEPS = 250
 
@@ -191,28 +210,30 @@ def _run_host(serve, reqs):
         slot_of, host
 
 
-def _assert_device_host_bitwise(reqs):
+def _assert_device_host_bitwise(reqs, serve=MIXED):
     """Device vs host mirror: bitwise streams, no decode stall, page
     conservation at drain on both planes."""
-    dev, state = _run_device(MIXED, reqs, check_no_stall=True)
-    hst, _, host = _run_host(MIXED, reqs)
+    dev, state = _run_device(serve, reqs, check_no_stall=True)
+    hst, _, host = _run_host(serve, reqs)
     assert dev == hst
     # page conservation at drain (engine-side fallback free, no frontend)
     state = eng.drain_completed(state)
-    assert int(state.alloc.top) == MIXED.num_pages
+    assert int(state.alloc.top) == serve.num_pages
     free = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
-    assert sorted(free.tolist()) == list(range(MIXED.num_pages))
-    assert len(host.free_pages) == MIXED.num_pages
+    assert sorted(free.tolist()) == list(range(serve.num_pages))
+    assert len(host.free_pages) == serve.num_pages
 
 
-def _assert_mixed_equals_exclusive(reqs):
-    """Greedy streams token-identical under both scheduling policies."""
+def _assert_mixed_equals_exclusive(reqs, serve=MIXED):
+    """Greedy streams token-identical under both scheduling policies (the
+    EXCLUSIVE baseline is shared — every mixed variant, batched or
+    adaptive, must produce the same greedy tokens)."""
     greedy = [(a, t, m, 0.0) for a, t, m, _temp in reqs]
-    mixed_out, mstate = _run_device(MIXED, greedy, check_no_stall=True)
+    mixed_out, mstate = _run_device(serve, greedy, check_no_stall=True)
     excl_out, estate = _run_device(EXCLUSIVE, greedy)
     assert mixed_out == excl_out
     for st_ in (eng.drain_completed(mstate), eng.drain_completed(estate)):
-        assert int(st_.alloc.top) == MIXED.num_pages
+        assert int(st_.alloc.top) == serve.num_pages
 
 
 # --- seeded floor: always runs ---------------------------------------------
@@ -226,6 +247,31 @@ def test_mixed_device_bitwise_equals_host_seeded(seed):
 @pytest.mark.parametrize("seed", range(18, 30))
 def test_mixed_greedy_equals_phase_exclusive_seeded(seed):
     _assert_mixed_equals_exclusive(_random_trace(seed))
+
+
+# --- batched chunk step (Mp > 1) + adaptive chunk sizing ---------------------
+
+
+@pytest.mark.parametrize("cfg_name", sorted(BATCHED_CONFIGS))
+@pytest.mark.parametrize("seed", range(30, 36))
+def test_batched_adaptive_device_bitwise_equals_host(cfg_name, seed):
+    """Same differential, under the batched one-dispatch chunk step
+    (max_prefills_per_step > 1) and/or adaptive chunk budgets: device and
+    host must still agree bitwise (incl. temperature > 0), never stall a
+    decode lane, and conserve pages at drain."""
+    _assert_device_host_bitwise(_random_trace(seed),
+                                serve=BATCHED_CONFIGS[cfg_name])
+
+
+@pytest.mark.parametrize("cfg_name", sorted(BATCHED_CONFIGS))
+@pytest.mark.parametrize("seed", range(36, 40))
+def test_batched_adaptive_greedy_equals_phase_exclusive(cfg_name, seed):
+    """Batching lanes into one dispatch and varying the chunk budget per
+    iteration must both be invisible in greedy tokens — chunked prefill is
+    bitwise chunking-invariant on the gather reference, whatever the
+    chunk boundaries the adaptive policy picks."""
+    _assert_mixed_equals_exclusive(_random_trace(seed),
+                                   serve=BATCHED_CONFIGS[cfg_name])
 
 
 # --- hypothesis exploration: runs where hypothesis is installed (CI) --------

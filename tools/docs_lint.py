@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Docs lint: keep README.md / docs/*.md from silently rotting.
+
+Three checks, all dependency-free (stdlib only, so CI can run this
+before installing anything):
+
+  1. every repo-path-looking token in backticks actually exists;
+  2. code fences are balanced in every checked file;
+  3. docs/CONFIG.md documents every ``ServeConfig`` field (parsed from
+     src/repro/configs/base.py with ``ast`` — no jax import needed), so
+     adding a serving knob without documenting it fails CI.
+
+Exit code 0 = clean; 1 = findings (printed one per line).
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+# backticked tokens that look like repo paths: end in a known extension or
+# a trailing '/'. The character class admits no ':', '*' or '{', so URLs,
+# globs and placeholder braces never match in the first place.
+PATH_RE = re.compile(r"`([A-Za-z0-9_.\-/]+(?:\.(?:py|md|json|yml|yaml|txt)|/))`")
+
+
+def check_paths(text: str, rel: str) -> list:
+    errs = []
+    for tok in PATH_RE.findall(text):
+        if not (ROOT / tok).exists():
+            errs.append(f"{rel}: referenced path does not exist: {tok}")
+    return errs
+
+
+def check_fences(text: str, rel: str) -> list:
+    n = sum(1 for line in text.splitlines() if line.strip().startswith("```"))
+    return [] if n % 2 == 0 else [f"{rel}: unbalanced code fences ({n})"]
+
+
+def serve_config_fields() -> list:
+    src = (ROOT / "src/repro/configs/base.py").read_text()
+    for node in ast.walk(ast.parse(src)):
+        if isinstance(node, ast.ClassDef) and node.name == "ServeConfig":
+            return [s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)]
+    raise SystemExit("ServeConfig not found in src/repro/configs/base.py")
+
+
+def main() -> int:
+    errs = []
+    for f in DOC_FILES:
+        if not f.exists():
+            errs.append(f"missing doc file: {f.relative_to(ROOT)}")
+            continue
+        rel, text = str(f.relative_to(ROOT)), f.read_text()
+        errs += check_paths(text, rel) + check_fences(text, rel)
+    cfg_doc = ROOT / "docs/CONFIG.md"
+    if cfg_doc.exists():
+        text = cfg_doc.read_text()
+        for field in serve_config_fields():
+            if f"`{field}`" not in text:
+                errs.append(f"docs/CONFIG.md: ServeConfig.{field} is "
+                            f"undocumented")
+    for e in errs:
+        print(f"docs-lint: {e}")
+    if not errs:
+        print(f"docs-lint: OK ({len(DOC_FILES)} files, "
+              f"{len(serve_config_fields())} ServeConfig knobs covered)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
