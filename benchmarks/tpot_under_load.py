@@ -53,6 +53,7 @@ import numpy as np
 from benchmarks.common import bench_model, emit
 from repro.configs.base import ServeConfig
 from repro.core import engine as eng
+from repro.core import offload as offload_lib
 from repro.core import ring_buffer as rb
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -64,6 +65,7 @@ ADAPTIVE_SWEEP = [(8, 32)]            # (chunk floor C, adaptive ceiling Cmax)
 ADAPTIVE_SMOKE = [(8, 16)]
 N_BUSY = 4                    # lanes decoding throughout
 LONG_EVERY = 4                # steps between long-prompt arrivals
+INTER_EVERY = 3               # steps between interactive arrivals (overload)
 
 
 def _serve(chunk: int, smoke: bool, adaptive: int = 0,
@@ -165,6 +167,64 @@ def _run(api, params, serve: ServeConfig, n_steps: int):
     return busy_out, busy_stamps, np.asarray(walls), ttft_steps
 
 
+def _run_overload(api, params, serve: ServeConfig, n_steps: int):
+    """Table-7-shaped overload point: offered load is 2x the decode lanes.
+    A batch-class (SLO class 1) wave takes every lane for the whole run;
+    an interactive (class 0) wave then arrives on top — under
+    ``slo_preempt`` each interactive arrival evicts the worst-slack batch
+    victim (KV spilled to the host buffer between steps, restored when a
+    lane frees). Returns per-class token stamps, dispatch walls, and the
+    offload buffer counters. ``service_overload`` runs between timed
+    dispatches — it is DPU-plane work and must not count against TPOT."""
+    rng = np.random.default_rng(1)
+    fn = eng.make_serve_window(api, serve)
+    state = eng.init_engine_state(api, serve, seed=0)
+    fn(params, eng.init_engine_state(api, serve, seed=0))      # warm
+    buf = offload_lib.KVOffloadBuffer()
+    B = serve.decode_batch
+
+    ring = state.ring
+    arrival = 0
+    for i in range(B):                     # batch wave: one per lane
+        ring = rb.submit_request(
+            ring, i, tokens=rng.integers(3, api.cfg.vocab_size, 4).tolist(),
+            request_id=i, max_new=serve.max_new_tokens, arrival=arrival,
+            step=0, slo_class=1)
+        arrival += 1
+    state = dataclasses.replace(state, ring=ring)
+
+    walls = []
+    inter_slots = []
+    next_slot = B
+    for step in range(n_steps):
+        # second wave: interactive arrivals once the batch wave owns the
+        # lanes (admit_per_step=1 -> B lanes running by ~step B+1)
+        if step >= B + 2 and (step - B - 2) % INTER_EVERY == 0 \
+                and next_slot < serve.num_slots:
+            ring = rb.submit_request(
+                state.ring, next_slot,
+                tokens=rng.integers(3, api.cfg.vocab_size, 4).tolist(),
+                request_id=100 + next_slot, max_new=6, arrival=arrival,
+                step=step, slo_class=0)
+            state = dataclasses.replace(state, ring=ring)
+            inter_slots.append(next_slot)
+            next_slot += 1
+            arrival += 1
+        t0 = time.perf_counter()
+        state = fn(params, state)
+        state.step.block_until_ready()
+        walls.append(time.perf_counter() - t0)
+        state, _events = offload_lib.service_overload(state, buf, serve)
+
+    stamps = np.asarray(state.ring.token_step)
+    inter_stamps = [stamps[s][stamps[s] >= 0] for s in inter_slots]
+    batch_stamps = [stamps[s][stamps[s] >= 0] for s in range(B)]
+    submit = np.asarray(state.ring.submit_step)
+    inter_ttft = [int(stamps[s, 0] - submit[s]) + 1
+                  for s in inter_slots if stamps[s, 0] >= 0]
+    return inter_stamps, batch_stamps, np.asarray(walls), inter_ttft, buf
+
+
 def _gaps(busy_stamps, walls):
     """Inter-token gaps on the busy lanes, in steps and wall seconds."""
     cum = np.concatenate([[0.0], np.cumsum(walls)])
@@ -242,6 +302,39 @@ def main() -> None:
              f"p99_gap_steps={g['p99_gap_steps']:.0f};"
              f"max_gap_ms={g['max_gap_ms']:.2f};"
              f"ttft_steps={rec['long_ttft_steps_mean']:.1f}")
+
+    # -- SLO overload row: 2x offered load, two classes, preemption --------
+    # (paper Table 7's graceful-degradation shape: interactive latency is
+    # flat under overload because the batch class absorbs the damage)
+    chunk = sweep[0]
+    ov_serve = dataclasses.replace(_serve(chunk, smoke), slo_classes=2,
+                                   slo_preempt=True)
+    inter_stamps, batch_stamps, walls, inter_ttft, buf = _run_overload(
+        api, params, ov_serve, n_steps)
+    ig = _gaps(inter_stamps, walls)
+    bg = _gaps(batch_stamps, walls)
+    # interactive P99/max inter-token gap stays EXACTLY one step while
+    # demand is 2x the lanes; the policy must actually have fired; and the
+    # batch class is where the degradation went
+    assert ig["max_gap_steps"] == 1, ig
+    assert buf.offloads > 0, "overload row never preempted"
+    assert bg["max_gap_steps"] > 1, \
+        "batch class shows no preemption stall — overload too light"
+    ov_rec = {"kind": "tpot_under_load", "policy": "overload_slo",
+              "chunk": chunk, "chunk_max": 0,
+              "offered_load_x": 2.0, "slo_classes": 2,
+              "n_steps": n_steps, "inter_every": INTER_EVERY,
+              "preemptions": buf.offloads, "restores": buf.restores,
+              "interactive_ttft_steps_mean": float(np.mean(inter_ttft)),
+              "interactive_finished": len(inter_ttft),
+              "batch_max_gap_steps": bg["max_gap_steps"],
+              "batch_p99_gap_steps": bg["p99_gap_steps"], **ig}
+    records.append(ov_rec)
+    emit(f"tpot_load_overload_slo_C{chunk}", ig["p99_gap_ms"] * 1e3,
+         f"max_gap_steps={ig['max_gap_steps']};"
+         f"preemptions={buf.offloads};restores={buf.restores};"
+         f"batch_max_gap_steps={bg['max_gap_steps']};"
+         f"inter_ttft_steps={ov_rec['interactive_ttft_steps_mean']:.1f}")
 
     # the claims this benchmark exists to pin down: the mixed scheduler's
     # inter-token gap is exactly one step (bounded by ~1 chunk-step of

@@ -205,6 +205,46 @@ class ServeConfig:
     # engine — the differential harness replays it on both planes. The
     # chunk bucket compiles at this ceiling (``chunk_bucket``).
     prefill_chunk_tokens_max: int = 0
+    # --- SLO-aware overload control (paper Table 6/7 robustness story) ----
+    # Number of SLO classes. Class 0 is the highest-priority (interactive)
+    # class; higher indices are progressively more best-effort (batch).
+    # With slo_classes == 1 every request is the same class and the
+    # overload machinery degrades to plain FCFS.
+    slo_classes: int = 1
+    # Per-class TTFT target in ENGINE STEPS (len == slo_classes, required
+    # when deadline_policy != "none"). Entry i is the budget, from
+    # submission, for class i to emit its first token.
+    slo_ttft_steps: Tuple[int, ...] = ()
+    # Per-class steps-per-output-token budget (len == slo_classes, required
+    # when deadline_policy == "e2e"). A request's end-to-end deadline is
+    # ttft + tpot * max_new steps after submission.
+    slo_tpot_steps: Tuple[int, ...] = ()
+    # Deadline policy: "none" (no deadlines — requests never time out),
+    # "ttft" (a request still waiting for its first token past its TTFT
+    # deadline is CANCELLED; once streaming it is immune), or "e2e"
+    # (requests are cancelled whenever the e2e deadline passes, including
+    # mid-decode and while offloaded). Requires the mixed-phase scheduler:
+    # the phase-exclusive engine has no per-step policy point.
+    deadline_policy: str = "none"
+    # Decode-lane preemption: when the earliest-deadline pending request
+    # cannot admit for lack of pages or lanes, evict the worst-slack
+    # strictly-lower-class DECODE_PROCESSING victim — its lane frees
+    # immediately and its live KV spills to a host-side buffer at the next
+    # window boundary (core.offload), to be restored byte-exact when
+    # capacity allows. Requires mixed-phase and slo_classes >= 2 (there
+    # must exist a class to sacrifice). Valid without deadlines: classes
+    # alone drive victim choice.
+    slo_preempt: bool = False
+    # Bound on the DPU intake queue: enqueue beyond this many waiting
+    # requests is REJECTED at submission (status "rejected", no tokens).
+    # 0 = unbounded.
+    intake_queue_limit: int = 0
+    # Byte cap on the radix prefix trie's retained KV pages (prefix_cache
+    # only). When the trie's pages exceed this many bytes of K/V pool
+    # memory, zero-external-ref LRU chains are evicted PROACTIVELY at
+    # every commit — not only under admission backpressure. 0 = unbounded
+    # (watermark/starvation eviction still applies).
+    prefix_trie_max_bytes: int = 0
 
     def __post_init__(self):
         if self.prefill_chunk_tokens < 0:
@@ -266,6 +306,75 @@ class ServeConfig:
                     f"{self.prefill_chunk_tokens_max} exceeds "
                     f"max_prompt_len={self.max_prompt_len}; a ceiling "
                     f"larger than any prompt only adds compile shapes")
+        if self.slo_classes < 1:
+            raise ValueError(
+                f"slo_classes must be >= 1, got {self.slo_classes}")
+        if self.deadline_policy not in ("none", "ttft", "e2e"):
+            raise ValueError(
+                f"deadline_policy must be one of 'none'/'ttft'/'e2e', got "
+                f"{self.deadline_policy!r}")
+        if self.deadline_policy != "none":
+            if self.prefill_chunk_tokens <= 0:
+                raise ValueError(
+                    "deadline_policy requires the mixed-phase scheduler "
+                    "(prefill_chunk_tokens > 0): deadline cancellation is "
+                    "a per-step policy decision and the phase-exclusive "
+                    "engine has no per-step policy point")
+            if len(self.slo_ttft_steps) != self.slo_classes:
+                raise ValueError(
+                    f"deadline_policy={self.deadline_policy!r} needs one "
+                    f"slo_ttft_steps entry per class: got "
+                    f"{len(self.slo_ttft_steps)} for slo_classes="
+                    f"{self.slo_classes}")
+            if any(t <= 0 for t in self.slo_ttft_steps):
+                raise ValueError(
+                    f"slo_ttft_steps entries must be positive, got "
+                    f"{self.slo_ttft_steps}")
+        if self.deadline_policy == "e2e":
+            if len(self.slo_tpot_steps) != self.slo_classes:
+                raise ValueError(
+                    f"deadline_policy='e2e' needs one slo_tpot_steps entry "
+                    f"per class: got {len(self.slo_tpot_steps)} for "
+                    f"slo_classes={self.slo_classes}")
+            if any(t <= 0 for t in self.slo_tpot_steps):
+                raise ValueError(
+                    f"slo_tpot_steps entries must be positive, got "
+                    f"{self.slo_tpot_steps}")
+        if self.slo_preempt:
+            if self.prefill_chunk_tokens <= 0:
+                raise ValueError(
+                    "slo_preempt requires the mixed-phase scheduler "
+                    "(prefill_chunk_tokens > 0): the preemption decision "
+                    "runs at the top of every mixed step")
+            if self.slo_classes < 2:
+                raise ValueError(
+                    "slo_preempt requires slo_classes >= 2: preemption "
+                    "only ever evicts a STRICTLY lower class, so with one "
+                    "class there is never an eligible victim")
+        if self.intake_queue_limit < 0:
+            raise ValueError(
+                f"intake_queue_limit must be >= 0, got "
+                f"{self.intake_queue_limit}")
+        if self.prefix_trie_max_bytes < 0:
+            raise ValueError(
+                f"prefix_trie_max_bytes must be >= 0, got "
+                f"{self.prefix_trie_max_bytes}")
+        if self.prefix_trie_max_bytes > 0 and not self.prefix_cache:
+            raise ValueError(
+                "prefix_trie_max_bytes bounds the radix prefix trie; it "
+                "requires prefix_cache=True")
+
+    def deadline_steps(self, slo_class: int, max_new: int):
+        """Relative deadline (engine steps from submission) for a request
+        of class ``slo_class`` generating ``max_new`` tokens, or None when
+        the deadline policy is off. Submitters add the current step to get
+        the absolute ``RingState.deadline_step``."""
+        if self.deadline_policy == "none":
+            return None
+        ttft = self.slo_ttft_steps[slo_class]
+        if self.deadline_policy == "ttft":
+            return int(ttft)
+        return int(ttft + self.slo_tpot_steps[slo_class] * max_new)
 
     @property
     def max_seq(self) -> int:

@@ -272,7 +272,8 @@ def drain_completed(state: EngineState) -> EngineState:
     commit and evict reusable prefixes."""
     ring = state.ring
     S = ring.num_slots
-    done = ring.slot_state == rb.DECODE_COMPLETED
+    done = (ring.slot_state == rb.DECODE_COMPLETED) | \
+        (ring.slot_state == rb.CANCELLED)
     alloc, cache = state.alloc, state.cache
     kvc = cache.get("kv")
     if kvc is not None:
@@ -307,6 +308,23 @@ def select_pending_fcfs(ring: rb.RingState, max_admit: int):
     cand = order[:max_admit].astype(jnp.int32)
     valid = keyed[cand] != INT_MAX
     return cand, valid
+
+
+def select_pending_edf(ring: rb.RingState, max_admit: int):
+    """Slack-aware admission selection: up to ``max_admit`` PREFILL_PENDING
+    slots ordered earliest-deadline-first, arrival ticket as the tiebreak
+    (``lexsort``'s LAST key is primary). Requests with no deadline carry
+    INT_MAX and sort behind every deadlined one — so with no deadlines
+    stamped at all this degrades to exactly the FCFS order of
+    ``select_pending_fcfs``. Used by the mixed-phase scheduler whenever the
+    SLO machinery is on; the host mirror runs the same two-key sort with
+    ``np.lexsort`` (identical semantics, asserted by the differential
+    harness)."""
+    pend = ring.slot_state == rb.PREFILL_PENDING
+    dl = jnp.where(pend, ring.deadline_step, INT_MAX)
+    ar = jnp.where(pend, ring.arrival, INT_MAX)
+    cand = jnp.lexsort((ar, dl))[:max_admit].astype(jnp.int32)
+    return cand, pend[cand]
 
 
 # ---------------------------------------------------------------------------
@@ -363,6 +381,16 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
     Mp = serve.max_prefills_per_step
     mixed = C > 0
     adaptive = Cmax > 0
+    # SLO-aware overload control (mixed-phase only; validated in
+    # ServeConfig.__post_init__). All three sub-policies are pure
+    # functions over the top-of-step snapshot, mirrored bit-for-bit by
+    # HostEngine — when both flags are off they compile to nothing and
+    # the step is the exact pre-SLO program.
+    policy = serve.deadline_policy
+    slo_on = policy != "none"
+    preempt_on = serve.slo_preempt
+    select_pending = (select_pending_edf if (slo_on or preempt_on)
+                      else select_pending_fcfs)
 
     def suffix_pages_needed(ring, cand):
         """Pages a candidate still needs: lifetime total minus its cached
@@ -654,6 +682,110 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         return dataclasses.replace(
             state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
 
+    # -- SLO overload-control sub-branches (mixed-phase only) ---------------
+
+    def expired_mask(state):
+        """Slots whose deadline has passed, restricted to the states the
+        policy may cancel. "ttft": only slots still waiting for their
+        first token (queued or mid-PREFILLING) — once streaming, immune.
+        "e2e": additionally mid-decode, restored-awaiting-lane, and
+        preempted-awaiting-offload slots (OFFLOADED slots hold no device
+        pages; the DPU-plane offload manager cancels those)."""
+        ring = state.ring
+        st = ring.slot_state
+        scope = (st == rb.PREFILL_PENDING) | (st == rb.PREFILLING)
+        if policy == "e2e":
+            scope = scope | (st == rb.DECODE_PROCESSING) | \
+                (st == rb.DECODE_PAUSED) | (st == rb.PREEMPTED)
+        return scope & (ring.deadline_step <= state.step)
+
+    def cancel_branch(state: EngineState, expired) -> EngineState:
+        """Move expired slots to the CANCELLED terminal state: free their
+        decode lanes and (non-prefix configs) their block-table rows
+        through the same refcounted release as completion. Queued slots
+        have empty rows, so the row free is a no-op for them; under
+        prefix_cache release stays frontend-owned (the drain path
+        disambiguates shared-prefix refs). Partial output stays readable
+        in the arena until the frontend drains the slot."""
+        ring = state.ring
+        safe = jnp.maximum(state.lane_slot, 0)
+        lane_dead = (state.lane_slot >= 0) & expired[safe]
+        lane_slot = jnp.where(lane_dead, -1, state.lane_slot)
+        alloc, cache = state.alloc, state.cache
+        if paged and not use_prefix:
+            alloc, bt = free_done_rows(
+                alloc, cache["kv"].block_table,
+                jnp.arange(ring.num_slots, dtype=jnp.int32), expired)
+            cache = dict(cache, kv=dataclasses.replace(
+                cache["kv"], block_table=bt))
+        ring = dataclasses.replace(
+            ring,
+            slot_state=jnp.where(expired, rb.CANCELLED, ring.slot_state))
+        return dataclasses.replace(state, ring=ring, alloc=alloc,
+                                   cache=cache, lane_slot=lane_slot)
+
+    def preempt_branch(state: EngineState, cand, cand_valid) -> EngineState:
+        """Decode-lane preemption decision (pure, at most one victim per
+        step): if the EDF-head pending candidate cannot admit for lack of
+        pages or lanes, mark the worst-slack strictly-lower-class
+        DECODE_PROCESSING victim PREEMPTED and free its lane immediately.
+        Its KV stays resident until the DPU plane spills it at the next
+        window boundary (``core.offload.service_overload``) — so a
+        page-blocked candidate admits only after the spill, while a
+        lane-blocked one admits this very step. A new victim is never
+        chosen while one still awaits offload (no preemption cascade)."""
+        ring = state.ring
+        have = jnp.any(cand_valid)
+        top = cand[jnp.argmax(cand_valid)]       # EDF head (first valid)
+        blocked = jnp.sum(state.lane_slot < 0) == 0
+        if paged:
+            blocked = blocked | \
+                (suffix_pages_needed(ring, top) > state.alloc.top)
+        elig = (ring.slot_state == rb.DECODE_PROCESSING) & \
+            (ring.slo_class > ring.slo_class[top])
+        # worst slack, staged lexicographic max: lowest class first, then
+        # latest deadline (INT_MAX = infinite slack, preferred victim),
+        # then latest arrival (unique ticket -> deterministic)
+        e2 = elig & (ring.slo_class == jnp.max(
+            jnp.where(elig, ring.slo_class, -1)))
+        e3 = e2 & (ring.deadline_step == jnp.max(
+            jnp.where(e2, ring.deadline_step, -1)))
+        victim = jnp.argmax(jnp.where(e3, ring.arrival, -1)).astype(jnp.int32)
+        clear = ~jnp.any(ring.slot_state == rb.PREEMPTED)
+        do = have & blocked & jnp.any(elig) & clear
+        slot_state = ring.slot_state.at[
+            jnp.where(do, victim, ring.num_slots)
+        ].set(rb.PREEMPTED, mode="drop")
+        lane_slot = jnp.where(do & (state.lane_slot == victim), -1,
+                              state.lane_slot)
+        return dataclasses.replace(
+            state, ring=dataclasses.replace(ring, slot_state=slot_state),
+            lane_slot=lane_slot)
+
+    def resume_branch(state: EngineState) -> EngineState:
+        """Grant lanes back to restored victims: the offload manager parks
+        a restored slot in DECODE_PAUSED (its KV is resident again, its
+        cursor says fully prefilled); here up to ``admit_per_step`` of
+        them re-enter DECODE_PROCESSING in EDF order, AHEAD of fresh
+        admission — a restored victim already paid its prefill, so a lane
+        spent on it emits a token next step. Granted slots join the decode
+        snapshot from the NEXT step, exactly like a freshly admitted slot
+        finishing its last chunk."""
+        ring = state.ring
+        paused = ring.slot_state == rb.DECODE_PAUSED
+        dl = jnp.where(paused, ring.deadline_step, INT_MAX)
+        ar = jnp.where(paused, ring.arrival, INT_MAX)
+        rcand = jnp.lexsort((ar, dl))[:A].astype(jnp.int32)
+        lanes, grant = assign_lanes(state, rcand, paused[rcand])
+        slot_state = ring.slot_state.at[
+            jnp.where(grant, rcand, ring.num_slots)
+        ].set(rb.DECODE_PROCESSING, mode="drop")
+        lane_slot = state.lane_slot.at[jnp.where(grant, lanes, Bd)
+                                       ].set(rcand, mode="drop")
+        return dataclasses.replace(
+            state, ring=dataclasses.replace(ring, slot_state=slot_state),
+            lane_slot=lane_slot)
+
     # -- the per-iteration scheduler functions ------------------------------
 
     def engine_step_exclusive(params, state: EngineState) -> EngineState:
@@ -685,8 +817,30 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         )
 
     def engine_step_mixed(params, state: EngineState) -> EngineState:
-        # decode-lane snapshot FIRST: lanes generating at the top of the
-        # step decode this step no matter what admission/chunking does —
+        # 0a. deadline cancellation: expired slots leave the scheduler
+        # before anything else looks at them (they neither decode nor
+        # chunk this step). Compiled out entirely when the policy is off.
+        if slo_on:
+            expired = expired_mask(state)
+            state = jax.lax.cond(
+                jnp.any(expired),
+                lambda s: cancel_branch(s, expired),
+                lambda s: s,
+                state)
+
+        # candidate selection — EDF when the SLO machinery is on (pending
+        # set is untouched by preemption/resume, so one selection serves
+        # the preemption decision AND admission)
+        cand, cand_valid = select_pending(state.ring, A)
+
+        # 0b. preemption decision over the same snapshot (frees the
+        # victim's lane before it is snapshotted below)
+        if preempt_on:
+            state = preempt_branch(state, cand, cand_valid)
+
+        # decode-lane snapshot: lanes generating at the top of the step
+        # (post cancel/preempt — a cancelled or preempted slot must not
+        # emit) decode this step no matter what admission/chunking does —
         # the no-lane-ever-skips-a-step guarantee the differential harness
         # asserts (a slot completing its prefill this step starts decoding
         # next step, exactly like the phase-exclusive policy).
@@ -694,8 +848,15 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         decode_active = (state.lane_slot >= 0) & \
             (state.ring.slot_state[slots0] == rb.DECODE_PROCESSING)
 
+        # 0c. restored victims re-acquire lanes ahead of fresh admission
+        if preempt_on:
+            state = jax.lax.cond(
+                jnp.any(state.ring.slot_state == rb.DECODE_PAUSED),
+                resume_branch,
+                lambda s: s,
+                state)
+
         # 1. admit (no model compute — PREFILLING + cursor at cached_len)
-        cand, cand_valid = select_pending_fcfs(state.ring, A)
         cand_valid = gate_candidates(state, cand, cand_valid)
         state = jax.lax.cond(
             jnp.any(cand_valid),

@@ -65,6 +65,15 @@ class HostEngine:
         self.free_pages = list(range(serve.num_pages - 1, -1, -1))
         self.refcount = np.zeros(serve.num_pages, np.int32)
         self.slot_pages: Dict[int, List[int]] = {}
+        # SLO overload-control mirror (engine.py policy, numpy arithmetic):
+        # per-slot class/deadline, the host-side KV offload staging dict
+        # (slot -> spilled bytes) and the ordered decision log the
+        # differential harness compares event-for-event with the device.
+        self.request_id = np.full(S, -1, np.int64)
+        self.slo_class = np.zeros(S, np.int32)
+        self.deadline = np.full(S, np.iinfo(np.int32).max, np.int64)
+        self.offload: Dict[int, dict] = {}
+        self.events: List[tuple] = []
         # prefix plane (identical policy to the device engine's frontend)
         self.prefix = PrefixIndex(serve.page_size) if serve.prefix_cache \
             else None
@@ -129,6 +138,11 @@ class HostEngine:
         self.free_pages = list(range(serve.num_pages - 1, -1, -1))
         self.refcount = np.zeros(serve.num_pages, np.int32)
         self.slot_pages = {}
+        self.request_id = np.full(S, -1, np.int64)
+        self.slo_class = np.zeros(S, np.int32)
+        self.deadline = np.full(S, np.iinfo(np.int32).max, np.int64)
+        self.offload = {}
+        self.events = []
         self.prefix = PrefixIndex(serve.page_size) if serve.prefix_cache \
             else None
         self.slot_cached = np.zeros(S, np.int32)
@@ -142,12 +156,18 @@ class HostEngine:
 
     # -- frontend ----------------------------------------------------------
     def submit(self, tokens, max_new: int, temperature: float = 0.0,
-               arrival: Optional[int] = None) -> int:
+               arrival: Optional[int] = None, slo_class: int = 0,
+               deadline: Optional[int] = None,
+               request_id: Optional[int] = None) -> int:
         free = np.where(self.slot_state == rb.EMPTY)[0]
         if len(free) == 0:
             return -1
         s = int(free[0])
         self.prompt[s] = list(tokens)
+        self.request_id[s] = s if request_id is None else int(request_id)
+        self.slo_class[s] = int(slo_class)
+        self.deadline[s] = np.iinfo(np.int32).max if deadline is None \
+            else int(deadline)
         self.max_new[s] = max_new
         self.generated[s] = 0
         self.temperature[s] = temperature
@@ -174,6 +194,8 @@ class HostEngine:
         toks = self.outputs[slot]
         self.slot_state[slot] = rb.EMPTY
         self.arrival[slot] = np.iinfo(np.int32).max
+        self.slo_class[slot] = 0
+        self.deadline[slot] = np.iinfo(np.int32).max
         return toks
 
     def _commit_prompt_to_trie(self, slot: int) -> None:
@@ -225,13 +247,25 @@ class HostEngine:
         else:
             self._step_exclusive()
         self.step_count += 1
+        # DPU-plane overload service AFTER the step counter advances —
+        # the device analogue (core.offload.service_overload) runs between
+        # windows, i.e. with the post-window step value at window=1
+        if self.serve.slo_preempt:
+            self._service_overload()
 
     def _scan_pending(self):
-        """Host-side ring scan (FCFS) + the prefix-eviction starvation
-        valve. Returns (pending slots by arrival, free lanes)."""
+        """Host-side ring scan (FCFS, or EDF when the SLO machinery is on —
+        mirror of ``engine.select_pending_edf``'s two-key lexsort) + the
+        prefix-eviction starvation valve. Returns (pending slots in
+        admission order, free lanes)."""
         serve = self.serve
         pending = np.where(self.slot_state == rb.PREFILL_PENDING)[0]
-        pending = pending[np.argsort(self.arrival[pending], kind="stable")]
+        if serve.deadline_policy != "none" or serve.slo_preempt:
+            pending = pending[np.lexsort((self.arrival[pending],
+                                          self.deadline[pending]))]
+        else:
+            pending = pending[np.argsort(self.arrival[pending],
+                                         kind="stable")]
         free_lanes = np.where(self.lane_slot < 0)[0]
         self.jitter()                      # host touch 2: batch assembly
         # starvation fallback (identical policy to the device frontend):
@@ -290,17 +324,32 @@ class HostEngine:
 
     def _step_mixed(self) -> None:
         """Mixed-phase iteration — the exact policy of the device engine's
-        ``engine_step_mixed`` (admit -> chunk -> decode, with the decode
-        lane set snapshotted at the top of the step): decode never pauses
-        for admission, prefill advances one bounded chunk per step."""
+        ``engine_step_mixed`` (cancel -> preempt -> snapshot -> resume ->
+        admit -> chunk -> decode, with the decode lane set snapshotted
+        post-cancel/preempt): decode never pauses for admission, prefill
+        advances one bounded chunk per step, and the SLO sub-policies run
+        only when their ServeConfig flags are on (identical step to the
+        pre-SLO engine otherwise)."""
+        serve = self.serve
         self.jitter()                      # host touch 1: scheduler wakeup
-        # decode snapshot FIRST: lanes generating at the top of the step
+        # 0a. deadline cancellation over the top-of-step snapshot
+        if serve.deadline_policy != "none":
+            self._cancel_expired()
+        pending, free_lanes = self._scan_pending()
+        # 0b. preemption decision (frees the victim's lane pre-snapshot)
+        if serve.slo_preempt:
+            self._preempt_decide(pending)
+        # decode snapshot (post cancel/preempt — a cancelled or preempted
+        # slot must not emit): lanes generating at the top of the step
         # decode this step no matter what admission/chunking does
         slots = np.maximum(self.lane_slot, 0)
         decode_active = (self.lane_slot >= 0) & \
             (self.slot_state[slots] == rb.DECODE_PROCESSING)
+        # 0c. restored victims re-acquire lanes ahead of fresh admission
+        if serve.slo_preempt:
+            self._resume_grant()
+            free_lanes = np.where(self.lane_slot < 0)[0]
 
-        pending, free_lanes = self._scan_pending()
         # 1. admit: reserve a lane, wire pages, cursor at the cached prefix
         for k, s in enumerate(self._admit_scan(pending, free_lanes)):
             self.slot_state[s] = rb.PREFILLING
@@ -310,7 +359,6 @@ class HostEngine:
         # Adaptive mode: the per-lane budget is the SAME pure function of
         # the top-of-step decode snapshot the device engine evaluates —
         # plain python ints here, jnp int32 there, identical result.
-        serve = self.serve
         budget = serve.prefill_chunk_tokens
         if serve.prefill_chunk_tokens_max > 0:
             from repro.core.engine import adaptive_chunk_budget
@@ -460,6 +508,11 @@ class HostEngine:
 
     def _complete(self, slot: int) -> None:
         self.slot_state[slot] = rb.DECODE_COMPLETED
+        self._release_slot_pages(slot)
+
+    def _release_slot_pages(self, slot: int) -> None:
+        """Drop the slot's page references and clear its block-table row —
+        shared by completion and cancellation (the refcounted drain)."""
         if self.paged and self.slot_pages.get(slot):
             pages = self.slot_pages.pop(slot)
             if self.prefix is not None:
@@ -473,11 +526,180 @@ class HostEngine:
                 self.cache["kv"],
                 block_table=bt.at[slot].set(-1))
 
+    # -- SLO overload-control mirror (engine.py policy, numpy arithmetic) ---
+    def _rid(self, slot: int) -> int:
+        return int(self.request_id[slot])
+
+    def _cancel(self, slot: int) -> None:
+        """Mirror of the device cancel branch for one slot: free its lane,
+        release its pages through the refcounted drain (a queued slot owns
+        no row — nothing to free; a mid-PREFILLING or mid-decode slot's
+        full row comes back), mark CANCELLED. Partial output stays in
+        ``outputs`` until drained."""
+        self.lane_slot[self.lane_slot == slot] = -1
+        self.slot_state[slot] = rb.CANCELLED
+        self._release_slot_pages(slot)
+        self.events.append(("cancel", self._rid(slot), slot))
+
+    def _cancel_expired(self) -> None:
+        """Deadline cancellation over the top-of-step snapshot (mirror of
+        ``engine.expired_mask``): "ttft" cancels only slots still waiting
+        for their first token; "e2e" additionally cancels mid-decode,
+        restored-awaiting-lane and preempted-awaiting-offload slots
+        (OFFLOADED expiry is the offload manager's, step-count parity with
+        the device's between-window service point)."""
+        st = self.slot_state
+        scope = (st == rb.PREFILL_PENDING) | (st == rb.PREFILLING)
+        if self.serve.deadline_policy == "e2e":
+            scope = scope | (st == rb.DECODE_PROCESSING) | \
+                (st == rb.DECODE_PAUSED) | (st == rb.PREEMPTED)
+        for s in np.flatnonzero(scope & (self.deadline <= self.step_count)):
+            self._cancel(int(s))
+
+    def _preempt_decide(self, pending) -> None:
+        """Mirror of ``engine.preempt_branch``: at most one victim per
+        step, chosen only when the EDF-head pending candidate is page- or
+        lane-blocked, no earlier victim still awaits offload, and a
+        strictly-lower-class DECODE_PROCESSING slot exists. Victim = worst
+        slack (staged lexicographic max: class, deadline, arrival)."""
+        serve = self.serve
+        if len(pending) == 0 or (self.slot_state == rb.PREEMPTED).any():
+            return
+        top = int(pending[0])
+        blocked = not (self.lane_slot < 0).any()
+        if self.paged and not blocked:
+            need = -(-(len(self.prompt[top]) + int(self.max_new[top]))
+                     // serve.page_size)
+            need = max(need - int(self.slot_cached[top]) // serve.page_size,
+                       0)
+            blocked = need > len(self.free_pages)
+        if not blocked:
+            return
+        elig = (self.slot_state == rb.DECODE_PROCESSING) & \
+            (self.slo_class > int(self.slo_class[top]))
+        if not elig.any():
+            return
+        e2 = elig & (self.slo_class == np.where(elig, self.slo_class,
+                                                -1).max())
+        e3 = e2 & (self.deadline == np.where(e2, self.deadline, -1).max())
+        victim = int(np.argmax(np.where(e3, self.arrival, -1)))
+        self.slot_state[victim] = rb.PREEMPTED
+        self.lane_slot[self.lane_slot == victim] = -1
+        self.events.append(("preempt", self._rid(victim), victim))
+
+    def _resume_grant(self) -> None:
+        """Mirror of ``engine.resume_branch``: up to ``admit_per_step``
+        restored (DECODE_PAUSED) slots re-enter DECODE_PROCESSING in EDF
+        order, taking free lanes ascending — ahead of fresh admission."""
+        paused = np.flatnonzero(self.slot_state == rb.DECODE_PAUSED)
+        if paused.size == 0:
+            return
+        order = paused[np.lexsort((self.arrival[paused],
+                                   self.deadline[paused]))]
+        free = np.where(self.lane_slot < 0)[0]
+        for k, s in enumerate(order[:self.serve.admit_per_step]):
+            if k >= len(free):
+                break
+            self.lane_slot[int(free[k])] = int(s)
+            self.slot_state[int(s)] = rb.DECODE_PROCESSING
+
+    def _service_overload(self) -> None:
+        """Mirror of ``core.offload.service_overload`` against the host
+        cache: spill PREEMPTED rows to ``self.offload`` (byte-exact numpy
+        copies) and release their pages, drop e2e-expired spilled slots,
+        then restore earliest-deadline-first from surplus (never below the
+        EDF-head pending admission's page need, never more restores than
+        free lanes minus already-waiting restored slots)."""
+        serve = self.serve
+        kvc = self.cache["kv"]
+        # 1. spill every PREEMPTED slot (ascending slot order)
+        for s in np.flatnonzero(self.slot_state == rb.PREEMPTED):
+            s = int(s)
+            pages = list(self.slot_pages.get(s, []))
+            idx = jnp.asarray(np.asarray(pages, np.int32))
+            self.offload[s] = {
+                "seq_len": int(kvc.seq_lens[s]), "n_pages": len(pages),
+                "k": np.asarray(kvc.k_pages[:, idx]),
+                "v": np.asarray(kvc.v_pages[:, idx]),
+                "k_scale": (np.asarray(kvc.k_scale[:, idx])
+                            if kvc.quantized else None),
+                "v_scale": (np.asarray(kvc.v_scale[:, idx])
+                            if kvc.quantized else None),
+            }
+            self._release_slot_pages(s)
+            kvc = self.cache["kv"]
+            self.slot_state[s] = rb.OFFLOADED
+            self.events.append(("offload", self._rid(s), s))
+        # 2. drop spilled slots whose e2e deadline passed
+        if serve.deadline_policy == "e2e":
+            for s in sorted(self.offload):
+                if int(self.deadline[s]) <= self.step_count:
+                    del self.offload[s]
+                    self.slot_state[s] = rb.CANCELLED
+                    self.events.append(("drop", self._rid(s), s))
+        # 3. restore earliest-deadline-first, from surplus only
+        lanes_free = int((self.lane_slot < 0).sum()) \
+            - int((self.slot_state == rb.DECODE_PAUSED).sum())
+        reserve = 0
+        pend = np.flatnonzero(self.slot_state == rb.PREFILL_PENDING)
+        if pend.size:
+            head = int(pend[np.lexsort((self.arrival[pend],
+                                        self.deadline[pend]))][0])
+            reserve = -(-(len(self.prompt[head]) + int(self.max_new[head]))
+                        // serve.page_size)
+            if serve.prefix_cache:
+                reserve = max(
+                    reserve - int(self.slot_cached[head]) // serve.page_size,
+                    0)
+        order = sorted(self.offload,
+                       key=lambda s: (int(self.deadline[s]),
+                                      int(self.arrival[s])))
+        for s in order:
+            entry = self.offload[s]
+            if lanes_free <= 0:
+                break
+            if len(self.free_pages) - entry["n_pages"] < reserve:
+                continue       # smaller spill later in EDF order may fit
+            pages = [self.free_pages.pop()
+                     for _ in range(entry["n_pages"])]
+            for p in pages:
+                self.refcount[p] = 1
+            self.slot_pages[s] = pages
+            idx = jnp.asarray(np.asarray(pages, np.int32))
+            row = np.full(kvc.block_table.shape[1], -1, np.int32)
+            row[:len(pages)] = pages
+            kvc = dc.replace(
+                kvc,
+                k_pages=kvc.k_pages.at[:, idx].set(
+                    jnp.asarray(entry["k"], kvc.k_pages.dtype)),
+                v_pages=kvc.v_pages.at[:, idx].set(
+                    jnp.asarray(entry["v"], kvc.v_pages.dtype)),
+                block_table=kvc.block_table.at[s].set(jnp.asarray(row)),
+                seq_lens=kvc.seq_lens.at[s].set(entry["seq_len"]))
+            if kvc.quantized:
+                kvc = dc.replace(
+                    kvc,
+                    k_scale=kvc.k_scale.at[:, idx].set(
+                        jnp.asarray(entry["k_scale"], kvc.k_scale.dtype)),
+                    v_scale=kvc.v_scale.at[:, idx].set(
+                        jnp.asarray(entry["v_scale"], kvc.v_scale.dtype)))
+            self.cache["kv"] = kvc
+            # restored slot owns its whole row afresh (no shared prefix)
+            self.slot_cached[s] = 0
+            self.prefill_done[s] = len(self.prompt[s])
+            self.slot_state[s] = rb.DECODE_PAUSED
+            del self.offload[s]
+            lanes_free -= 1
+            self.events.append(("restore", self._rid(s), s))
+        self.cache["kv"] = kvc
+
     # -- convenience ---------------------------------------------------------
     def run_until_idle(self, max_steps: int = 10_000) -> int:
         steps = 0
+        inflight = (rb.PREFILL_PENDING, rb.DECODE_PAUSED, rb.PREEMPTED,
+                    rb.OFFLOADED)
         while steps < max_steps:
-            busy = (self.slot_state == rb.PREFILL_PENDING).any() or \
+            busy = np.isin(self.slot_state, inflight).any() or \
                    (self.lane_slot >= 0).any()
             if not busy:
                 break

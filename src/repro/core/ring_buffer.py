@@ -41,6 +41,22 @@ DECODE_COMPLETED = 5
 # cursor reaches prompt_len — then the first token is sampled and the slot
 # moves to DECODE_PROCESSING (or DECODE_COMPLETED for max_new == 1).
 PREFILLING = 6
+# SLO-aware overload control (ROADMAP: graceful degradation, paper Table
+# 6/7): terminal + transit states for deadline cancellation and
+# decode-lane preemption. CANCELLED is terminal like DECODE_COMPLETED —
+# the slot's deadline expired (queued, mid-PREFILLING, or mid-decode);
+# whatever partial output exists stays readable in the arena and the
+# frontend drains the slot through the same refcounted release path.
+CANCELLED = 7
+# A victim chosen by the in-window preemption policy: its decode lane is
+# already freed but its KV pages are still resident — the DPU plane spills
+# them to the host offload buffer at the next window boundary
+# (core.offload.service_overload) and moves the slot to OFFLOADED.
+PREEMPTED = 8
+# KV spilled to the host buffer; the slot holds no pages and no lane. The
+# DPU plane restores it (pages re-allocated, bytes copied back, slot ->
+# DECODE_PAUSED awaiting a lane) when capacity allows.
+OFFLOADED = 9
 
 STATE_NAMES = {
     EMPTY: "EMPTY",
@@ -50,6 +66,9 @@ STATE_NAMES = {
     DECODE_PAUSED: "DECODE_PAUSED",
     DECODE_COMPLETED: "DECODE_COMPLETED",
     PREFILLING: "PREFILLING",
+    CANCELLED: "CANCELLED",
+    PREEMPTED: "PREEMPTED",
+    OFFLOADED: "OFFLOADED",
 }
 
 
@@ -77,6 +96,12 @@ class RingState:
     # leaves PREFILLING. Doubles as the suffix-page high-water mark —
     # pages beyond ceil(prefill_done_len / page_size) hold no live K/V.
     prefill_done_len: jax.Array  # [S] int32
+    # SLO metadata (written by the frontend at submit, read by every pure
+    # policy decision in the engine): slo_class 0 is the highest-priority
+    # (interactive) class; deadline_step is the absolute engine step by
+    # which the request must meet its target (INT32_MAX = no deadline).
+    slo_class: jax.Array      # [S] int32 (0 = interactive, higher = batch)
+    deadline_step: jax.Array  # [S] int32 absolute deadline (INT_MAX = none)
     input_arena: jax.Array    # [S, max_prompt] int32
     output_arena: jax.Array   # [S, max_new_tokens] int32
     # telemetry (device step stamps; host converts to wall time)
@@ -103,6 +128,8 @@ def make_ring(serve: ServeConfig) -> RingState:
         cached_len=jnp.zeros((S,), jnp.int32),
         shared_pages=jnp.full((S, serve.pages_per_req), -1, jnp.int32),
         prefill_done_len=jnp.zeros((S,), jnp.int32),
+        slo_class=jnp.zeros((S,), jnp.int32),
+        deadline_step=jnp.full((S,), jnp.iinfo(jnp.int32).max, jnp.int32),
         input_arena=jnp.zeros((S, serve.max_prompt_len), jnp.int32),
         output_arena=jnp.full((S, serve.max_new_tokens), -1, jnp.int32),
         submit_step=jnp.zeros((S,), jnp.int32),
@@ -122,13 +149,18 @@ def make_ring(serve: ServeConfig) -> RingState:
 def submit_request(ring: RingState, slot: int, *, tokens, request_id: int,
                    max_new: int, arrival: int, temperature: float = 0.0,
                    step: int = 0, cached_len: int = 0,
-                   shared_pages=None) -> RingState:
+                   shared_pages=None, slo_class: int = 0,
+                   deadline=None) -> RingState:
     """Write a tokenized prompt into an EMPTY slot -> PREFILL_PENDING.
 
     ``cached_len``/``shared_pages``: prefix-reuse metadata from the DPU
     prefix index — the first ``cached_len`` tokens' K/V already live in
     ``shared_pages`` (the frontend takes the allocator reference; the
-    engine only wires them into the block table at admission)."""
+    engine only wires them into the block table at admission).
+
+    ``slo_class``/``deadline``: overload-control metadata. ``deadline`` is
+    the ABSOLUTE step number (submitter computes it from
+    ``ServeConfig.deadline_steps``); None means no deadline."""
     n = len(tokens)
     arena_row = jnp.zeros((ring.input_arena.shape[1],), jnp.int32)
     arena_row = arena_row.at[:n].set(jnp.asarray(tokens, jnp.int32))
@@ -152,6 +184,9 @@ def submit_request(ring: RingState, slot: int, *, tokens, request_id: int,
         token_step=ring.token_step.at[slot].set(-1),
         submit_step=ring.submit_step.at[slot].set(step),
         prefill_step=ring.prefill_step.at[slot].set(-1),
+        slo_class=ring.slo_class.at[slot].set(int(slo_class)),
+        deadline_step=ring.deadline_step.at[slot].set(
+            jnp.iinfo(jnp.int32).max if deadline is None else int(deadline)),
         # state transition LAST (the RDMA-visibility fence of §4.2)
         slot_state=ring.slot_state.at[slot].set(PREFILL_PENDING),
     )
@@ -166,4 +201,7 @@ def release_slot(ring: RingState, slot: int) -> RingState:
         cached_len=ring.cached_len.at[slot].set(0),
         shared_pages=ring.shared_pages.at[slot].set(-1),
         prefill_done_len=ring.prefill_done_len.at[slot].set(0),
+        slo_class=ring.slo_class.at[slot].set(0),
+        deadline_step=ring.deadline_step.at[slot].set(
+            jnp.iinfo(jnp.int32).max),
     )

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.core import engine as eng
+from repro.core import offload as offload_lib
 from repro.core import ring_buffer as rb
 from repro.frontend.prefix_index import PrefixIndex
 from repro.frontend.slot_tracker import SlotTracker
@@ -68,6 +69,14 @@ class Request:
     text: Optional[str] = None
     cached_len: int = 0          # prefix tokens served from the radix trie
     committed: bool = False      # prompt pages indexed into the trie
+    # SLO metadata + terminal status. status is "pending" until the
+    # request reaches one of: "completed" (full stream), "timed_out"
+    # (deadline expired — partial output in ``output``), "preempted"
+    # (evicted to the offload buffer, then expired before restore),
+    # "rejected" (bounced at intake by ``intake_queue_limit``).
+    slo_class: int = 0
+    status: str = "pending"
+    shared_pages: List[int] = field(default_factory=list)
 
 
 class BlinkFrontend:
@@ -89,7 +98,8 @@ class BlinkFrontend:
         self._next_id = 0
 
     # -- intake (HTTP/SSE layer stand-in) ------------------------------------
-    def enqueue(self, prompt, max_new: int, temperature: float = 0.0) -> int:
+    def enqueue(self, prompt, max_new: int, temperature: float = 0.0,
+                slo_class: int = 0) -> int:
         self.jitter()                              # request parse/validate
         if isinstance(prompt, str):
             assert self.tokenizer is not None, "text prompt needs a tokenizer"
@@ -98,8 +108,16 @@ class BlinkFrontend:
             tokens = list(prompt)
         tokens = tokens[: self.serve.max_prompt_len]
         req = Request(self._next_id, tokens, max_new, temperature,
-                      submit_wall=time.perf_counter())
+                      submit_wall=time.perf_counter(), slo_class=slo_class)
         self._next_id += 1
+        limit = self.serve.intake_queue_limit
+        if limit and len(self.queue) >= limit:
+            # overload rejection at the DPU edge: the request never touches
+            # the ring — terminal immediately, no tokens
+            req.status = "rejected"
+            req.finish_wall = req.submit_wall
+            self.done[req.request_id] = req
+            return req.request_id
         self.queue.append(req)
         return req.request_id
 
@@ -127,12 +145,16 @@ class BlinkFrontend:
                     alloc = cache_lib.share_pages(
                         alloc, jnp.asarray(shared, jnp.int32))
             req.cached_len = cached_len
+            req.shared_pages = list(shared or [])
+            rel = self.serve.deadline_steps(req.slo_class, req.max_new)
             self.jitter()                          # staging + RDMA write
             ring = rb.submit_request(
                 ring, slot, tokens=req.tokens, request_id=req.request_id,
                 max_new=req.max_new, arrival=self._arrival,
                 temperature=req.temperature, step=step,
-                cached_len=cached_len, shared_pages=shared)
+                cached_len=cached_len, shared_pages=shared,
+                slo_class=req.slo_class,
+                deadline=None if rel is None else step + rel)
             self._arrival += 1
             req.slot = slot
             self.in_flight[slot] = req
@@ -173,21 +195,41 @@ class BlinkFrontend:
             for slot, req in self.in_flight.items():
                 if not req.committed and slot_states[slot] in prefilled:
                     alloc = self._commit_prefix(slot, req, alloc, kvc)
+            alloc = self._cap_trie_bytes(alloc, kvc)
         for slot in completed:
             req = self.in_flight.pop(slot, None)
             if req is None:
                 continue
             req.finish_wall = now
+            if slot_states[slot] == rb.CANCELLED:
+                if req.status != "preempted":      # offload drop wins
+                    req.status = "timed_out"
+            else:
+                req.status = "completed"
             if self.tokenizer is not None:
                 req.text = self.tokenizer.decode(req.output)  # detokenize
             self.done[req.request_id] = req
             if self.prefix is not None:
                 # release the slot's page references (shared prefix pages
-                # survive via the trie's / other slots' refs)
-                row = kvc.block_table[slot]
-                alloc = cache_lib.free_pages(alloc, row)
-                kvc = dataclasses.replace(
-                    kvc, block_table=kvc.block_table.at[slot].set(-1))
+                # survive via the trie's / other slots' refs). Three drain
+                # shapes, disambiguated by what the slot still owns:
+                #   - a wired row (admitted; completion or mid-PREFILLING/
+                #     mid-decode cancel): free the row — it already carries
+                #     the shared prefix chain plus the suffix pages;
+                #   - no row, never produced a token (cancelled while
+                #     queued): the only refs held are the matched prefix
+                #     chain taken at submit — free exactly those;
+                #   - no row, tokens produced (cancelled while spilled):
+                #     every ref was already released at offload — nothing.
+                row = np.asarray(kvc.block_table[slot])
+                if (row >= 0).any():
+                    alloc = cache_lib.free_pages(
+                        alloc, kvc.block_table[slot])
+                    kvc = dataclasses.replace(
+                        kvc, block_table=kvc.block_table.at[slot].set(-1))
+                elif not len(req.output) and req.shared_pages:
+                    alloc = cache_lib.free_pages(
+                        alloc, jnp.asarray(req.shared_pages, jnp.int32))
             ring = rb.release_slot(ring, slot)     # slot -> EMPTY
             self.tracker.mark_free(slot)
         return ring, alloc, kvc
@@ -207,6 +249,25 @@ class BlinkFrontend:
                     alloc = cache_lib.share_pages(
                         alloc, jnp.asarray(new, jnp.int32))
         req.committed = True
+        return alloc
+
+    def _cap_trie_bytes(self, alloc, kvc):
+        """PROACTIVE trie bound (``ServeConfig.prefix_trie_max_bytes``):
+        whenever the trie's retained pages exceed the byte budget, evict
+        LRU zero-external-ref chains down to it — on every poll, not only
+        under admission backpressure, so an overloaded frontend's memory
+        stays bounded even while admission is starved of candidates."""
+        cap = self.serve.prefix_trie_max_bytes
+        if not cap or self.prefix is None or kvc is None:
+            return alloc
+        max_pages = cap // cache_lib.page_nbytes(kvc)
+        excess = self.prefix.num_pages - max_pages
+        if excess > 0:
+            pages = self.prefix.evict(excess,
+                                      refcount=np.asarray(alloc.refcount))
+            if pages:
+                alloc = cache_lib.free_pages(
+                    alloc, jnp.asarray(pages, jnp.int32))
         return alloc
 
     def starved_pages_needed(self, ring: rb.RingState) -> int:
@@ -270,9 +331,13 @@ class BlinkServer:
         # (tightest fit selected per window; max shape is the fallback)
         self.windows = eng.WindowCache(api, serve, prompt_buckets)
         self.window_wall: List[float] = []
+        # host-DRAM staging for preempted requests' spilled KV (DPU plane)
+        self.offload_buf = offload_lib.KVOffloadBuffer()
 
-    def submit(self, prompt, max_new: int, temperature: float = 0.0) -> int:
-        return self.frontend.enqueue(prompt, max_new, temperature)
+    def submit(self, prompt, max_new: int, temperature: float = 0.0,
+               slo_class: int = 0) -> int:
+        return self.frontend.enqueue(prompt, max_new, temperature,
+                                     slo_class=slo_class)
 
     def reset(self, seed: int = 0) -> None:
         """Fresh engine + frontend state, KEEPING the compiled window."""
@@ -283,6 +348,7 @@ class BlinkServer:
         self.state = eng.init_engine_state(self.api, self.serve, seed=seed,
                                            enc_len=self._enc_len)
         self.window_wall = []
+        self.offload_buf = offload_lib.KVOffloadBuffer()
 
     def run_window(self) -> None:
         fe = self.frontend
@@ -312,6 +378,17 @@ class BlinkServer:
                 else dict(st.cache, kv=kvc)
             self.state = dataclasses.replace(st, ring=ring, alloc=alloc,
                                              cache=cache)
+        if self.serve.slo_preempt:
+            # DPU-plane overload service: spill freshly preempted slots'
+            # KV to the host buffer, cancel spilled slots past their e2e
+            # deadline, restore earliest-deadline-first from surplus. A
+            # dropped request surfaces as "preempted" when the NEXT poll
+            # drains its CANCELLED slot.
+            self.state, events = offload_lib.service_overload(
+                self.state, self.offload_buf, self.serve)
+            for kind, _rid, slot in events:
+                if kind == "drop" and slot in fe.in_flight:
+                    fe.in_flight[slot].status = "preempted"
 
     def run_until_idle(self, max_windows: int = 1000) -> int:
         n = 0
@@ -335,5 +412,6 @@ class BlinkServer:
                         "tpot": tpot, "tokens": ntok,
                         "latency": req.finish_wall - req.submit_wall,
                         "cached_len": req.cached_len,
-                        "prompt_len": len(req.tokens)})
+                        "prompt_len": len(req.tokens),
+                        "slo_class": req.slo_class, "status": req.status})
         return out

@@ -59,9 +59,14 @@ class TokenReader:
             # decode states, but its generation count stays 0 until the
             # chunk cursor completes — the first token can never surface
             # (or be committed downstream) off a partially prefilled slot.
+            # CANCELLED joins the scan set so a timed-out request's partial
+            # output still streams; PREEMPTED/OFFLOADED are read like the
+            # decode states (their tokens-so-far must not strand while the
+            # slot waits for offload/restore).
             if st not in (rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
                           rb.DECODE_COMPLETED, rb.PREFILL_PROCESSING,
-                          rb.PREFILLING):
+                          rb.PREFILLING, rb.CANCELLED, rb.PREEMPTED,
+                          rb.OFFLOADED):
                 continue
             have = int(self.read_counts[s])
             avail = int(generated[s])
@@ -74,7 +79,10 @@ class TokenReader:
                 self.read_counts[s] = avail
                 self.tokens_read += avail - have
                 found = True
-            if st == rb.DECODE_COMPLETED and avail <= self.read_counts[s]:
+            # both terminal states complete once their output is drained —
+            # the frontend maps CANCELLED to timed_out/preempted status
+            if st in (rb.DECODE_COMPLETED, rb.CANCELLED) \
+                    and avail <= self.read_counts[s]:
                 completed.append(s)
                 if s in self.urgent:
                     self.urgent.remove(s)

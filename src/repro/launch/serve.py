@@ -46,10 +46,41 @@ def main():
                     help="flash-prefill query tile / adaptive chunk floor "
                          "(0 = default 128, or 8 when --prefill-chunk-max "
                          "is set, so tiny demo prompts stay valid)")
+    ap.add_argument("--slo-classes", type=int, default=1,
+                    help="number of SLO classes (class 0 = interactive, "
+                         "higher = batch); requests are submitted round-"
+                         "robin across classes when > 1")
+    ap.add_argument("--slo-preempt", action="store_true",
+                    help="decode-lane preemption under overload: a blocked "
+                         "interactive arrival evicts the worst-slack batch "
+                         "victim, whose KV is spilled to a host buffer and "
+                         "restored when capacity frees (needs "
+                         "--prefill-chunk and --slo-classes >= 2)")
+    ap.add_argument("--deadline-policy", default="none",
+                    choices=("none", "ttft", "e2e"),
+                    help="deadline enforcement: cancel requests past their "
+                         "per-class budget (ttft = first token only, e2e = "
+                         "whole stream; needs --prefill-chunk)")
+    ap.add_argument("--slo-ttft", default="",
+                    help="comma list, per-class TTFT budget in steps "
+                         "(len == --slo-classes; required when "
+                         "--deadline-policy != none)")
+    ap.add_argument("--slo-tpot", default="",
+                    help="comma list, per-class per-token budget in steps "
+                         "(required when --deadline-policy e2e)")
+    ap.add_argument("--intake-limit", type=int, default=0,
+                    help="reject new submissions once this many requests "
+                         "queue at the frontend (0 = unbounded)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
     block_q = args.prefill_block_q or (8 if args.prefill_chunk_max else 128)
+    slo_ttft = tuple(int(x) for x in args.slo_ttft.split(",") if x)
+    slo_tpot = tuple(int(x) for x in args.slo_tpot.split(",") if x)
+    if (args.slo_preempt or args.deadline_policy != "none") \
+            and not args.prefill_chunk:
+        ap.error("SLO overload control runs in the mixed-phase scheduler: "
+                 "pass --prefill-chunk as well")
     serve = ServeConfig(num_slots=16, max_prompt_len=32,
                         max_new_tokens=args.max_new, decode_batch=8,
                         window=args.window, admit_per_step=4, page_size=8,
@@ -57,7 +88,12 @@ def main():
                         attn_backend=args.attn_backend,
                         prefill_chunk_tokens=args.prefill_chunk,
                         prefill_chunk_tokens_max=args.prefill_chunk_max,
-                        prefill_block_q=block_q)
+                        prefill_block_q=block_q,
+                        slo_classes=args.slo_classes,
+                        slo_preempt=args.slo_preempt,
+                        deadline_policy=args.deadline_policy,
+                        slo_ttft_steps=slo_ttft, slo_tpot_steps=slo_tpot,
+                        intake_queue_limit=args.intake_limit)
     api = make_model(cfg, attn_backend=serve.attn_backend,
                      attn_pages_per_block=serve.attn_pages_per_block,
                      prefill_block_q=serve.prefill_block_q,
@@ -72,10 +108,11 @@ def main():
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    for _ in range(args.requests):
+    for i in range(args.requests):
         srv.submit(rng.integers(3, cfg.vocab_size,
                                 int(rng.integers(4, 24))).tolist(),
-                   max_new=args.max_new)
+                   max_new=args.max_new,
+                   slo_class=i % max(args.slo_classes, 1))
     windows = srv.run_until_idle(max_windows=500)
     wall = time.perf_counter() - t0
     mets = srv.request_metrics()
@@ -84,8 +121,9 @@ def main():
           f"{windows} windows ({windows} host touches), {wall:.2f}s"
           f" -> {toks/wall:.1f} tok/s (includes first-window compile)")
     for m in sorted(mets, key=lambda m: m["request_id"]):
-        print(f"  req {m['request_id']}: {m['tokens']} tokens, "
-              f"ttft {m['ttft']*1e3:.0f}ms")
+        tag = "" if m["status"] == "completed" else f" [{m['status']}]"
+        print(f"  req {m['request_id']} (class {m['slo_class']}): "
+              f"{m['tokens']} tokens, ttft {m['ttft']*1e3:.0f}ms{tag}")
 
 
 if __name__ == "__main__":

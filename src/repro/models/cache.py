@@ -80,6 +80,18 @@ def make_paged_kv_cache(
     )
 
 
+def page_nbytes(cache: PagedKVCache) -> int:
+    """Device bytes one pool page occupies across all layers: K + V values
+    plus dequant scales when the pool is quantised. Byte-denominated
+    policies (the radix-trie byte cap, offload-buffer accounting) divide
+    their budget by this to get a page budget."""
+    L, _, ps, KV, hd = cache.k_pages.shape
+    n = 2 * L * ps * KV * hd * cache.k_pages.dtype.itemsize
+    if cache.quantized:
+        n += 2 * L * ps * KV * cache.k_scale.dtype.itemsize
+    return n
+
+
 def pages_needed(prompt_len, max_new, page_size: int):
     """KV pages a request occupies for its whole lifetime (prompt + all
     generated tokens). The engine's admission gate and the prefill-branch

@@ -534,3 +534,34 @@ def test_engine_rejects_prefix_cache_for_unsupported_archs(tiny_apis):
             eng.init_engine_state(api, serve,
                                   enc_len=8 if api.cfg.is_encoder_decoder
                                   else 0)
+
+
+def test_prefix_trie_byte_cap(tiny_apis):
+    """``prefix_trie_max_bytes`` proactively bounds trie-retained KV:
+    after bursts with DISTINCT shared prefixes (each committing fresh
+    chains), the trie holds at most cap // page_nbytes pages — eviction
+    runs on every poll, not only under admission backpressure — and the
+    pool still partitions into free + referenced pages."""
+    api, params = tiny_apis("qwen2-1.5b")
+    base = _serve(max_prompt_len=24, max_new_tokens=4, window=1,
+                  prefill_chunk_tokens=8, prefix_cache=True)
+    probe = BlinkServer(api, base, params)
+    pnb = cache_lib.page_nbytes(probe.state.cache["kv"])
+    cap_pages = 4
+    serve = dataclasses.replace(base, prefix_trie_max_bytes=cap_pages * pnb)
+    srv = BlinkServer(api, serve, params)
+    rng = np.random.default_rng(0)
+    for _burst in range(4):     # 4 bursts x 3 committed pages > cap
+        prefix = rng.integers(3, 500, 8).tolist()
+        for _ in range(2):
+            srv.submit(prefix + rng.integers(3, 500, 4).tolist(), max_new=2)
+        for _ in range(200):
+            if srv.frontend.idle:
+                break
+            srv.run_window()
+        assert srv.frontend.idle, "burst did not drain"
+        assert srv.frontend.prefix.num_pages <= cap_pages
+    rc = np.asarray(srv.state.alloc.refcount)
+    assert int(srv.state.alloc.top) + int((rc > 0).sum()) == serve.num_pages
+    # with every slot drained, only the trie still holds references
+    assert srv.frontend.prefix.num_pages == int((rc > 0).sum())

@@ -302,6 +302,131 @@ def _mixed_window_fn(tiny_apis, serve):
     return _MIXED_FN_CACHE[serve]
 
 
+# extended machine under SLO overload control, as observed at (window +
+# overload-service) boundaries: CANCELLED is reachable from every
+# non-terminal admission/decode state (deadline expiry — including
+# mid-chunk PREFILLING), DECODE_PROCESSING can be preempted (and spilled
+# to OFFLOADED within the same boundary), OFFLOADED either restores to
+# DECODE_PAUSED or is dropped to CANCELLED. PREEMPTED is transient: the
+# overload service spills it at the very next boundary.
+_SLO_CLOSURE = {
+    **_LIFECYCLE_CLOSURE,
+    rb.PREFILL_PENDING:
+        _LIFECYCLE_CLOSURE[rb.PREFILL_PENDING] | {rb.CANCELLED},
+    rb.PREFILLING: _LIFECYCLE_CLOSURE[rb.PREFILLING] | {rb.CANCELLED},
+    rb.DECODE_PROCESSING: _LIFECYCLE_CLOSURE[rb.DECODE_PROCESSING]
+        | {rb.CANCELLED, rb.PREEMPTED, rb.OFFLOADED},
+    rb.DECODE_PAUSED: _LIFECYCLE_CLOSURE[rb.DECODE_PAUSED] | {rb.CANCELLED},
+    rb.PREEMPTED: {rb.PREEMPTED, rb.OFFLOADED, rb.CANCELLED},
+    rb.OFFLOADED: {rb.OFFLOADED, rb.DECODE_PAUSED, rb.CANCELLED},
+    rb.CANCELLED: {rb.CANCELLED},
+}
+
+# states a deadline fault may legally be injected into (anything the
+# cancellation machinery is supposed to reach)
+_INJECTABLE = (rb.PREFILL_PENDING, rb.PREFILLING, rb.DECODE_PROCESSING,
+               rb.DECODE_PAUSED, rb.OFFLOADED)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 2))
+def test_fault_injection_slo_overload(seed, tiny_apis):
+    """Random preempt/cancel/timeout scripts against the SLO-enabled
+    mixed-phase engine + between-window overload service: random SLO
+    traces run under scarce lanes/pages, and on top of the organic policy
+    traffic the script INJECTS deadline faults (stamping ``deadline_step``
+    to 'now') into arbitrary live slots — including mid-chunk PREFILLING
+    and already-spilled OFFLOADED ones. At every boundary: (i) every slot
+    transition stays inside the extended lifecycle machine, (ii) pages are
+    conserved with the offload buffer in play (free + refcounted partition
+    the pool; spilled pages were RELEASED, the buffer holds byte copies),
+    (iii) buffer entries are in bijection with OFFLOADED slots, (iv) lanes
+    never leak: they only point at live PREFILLING/DECODE_PROCESSING
+    slots, no slot holds two lanes, occupancy never exceeds decode_batch.
+    Everything must still drain — faults never wedge the scheduler."""
+    from repro.core import engine as eng
+    from repro.core import offload as offload_lib
+
+    api, params = tiny_apis("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    serve = ServeConfig(num_slots=8, max_prompt_len=16, max_new_tokens=8,
+                        decode_batch=2, window=1, admit_per_step=2,
+                        page_size=4, num_pages=14, eos_token=-1,
+                        prefill_chunk_tokens=4, slo_classes=2,
+                        slo_preempt=True, deadline_policy="e2e",
+                        slo_ttft_steps=(8, 40), slo_tpot_steps=(3, 10))
+    fn = _mixed_window_fn(tiny_apis, serve)
+    buf = offload_lib.KVOffloadBuffer()
+    state = eng.init_engine_state(api, serve)
+    n_req = int(rng.integers(4, 8))
+    reqs = [(int(rng.integers(0, 11)),                 # arrival step
+             rng.integers(3, api.cfg.vocab_size,
+                          int(rng.integers(2, 16))).tolist(),
+             int(rng.integers(1, 8)),                  # max_new
+             int(rng.integers(0, 2)))                  # slo class
+            for _ in range(n_req)]
+    submitted = set()
+    prev = np.asarray(state.ring.slot_state)
+    for it in range(150):
+        step = int(state.step)
+        ring = state.ring
+        states_np = np.asarray(ring.slot_state)
+        for i, (arr, toks, max_new, slo) in enumerate(reqs):
+            if arr > step or i in submitted:
+                continue
+            empties = np.where(states_np == rb.EMPTY)[0]
+            if not len(empties):
+                continue
+            rel = serve.deadline_steps(slo, max_new)
+            ring = rb.submit_request(ring, int(empties[0]), tokens=toks,
+                                     request_id=i, max_new=max_new,
+                                     arrival=i, step=step, slo_class=slo,
+                                     deadline=step + rel)
+            states_np = np.asarray(ring.slot_state)
+            submitted.add(i)
+        # fault injection: expire a random live slot RIGHT NOW
+        if rng.random() < 0.3:
+            live = np.where(np.isin(states_np, _INJECTABLE))[0]
+            if len(live):
+                victim = int(rng.choice(live))
+                ring = dataclasses.replace(
+                    ring,
+                    deadline_step=ring.deadline_step.at[victim].set(step))
+        prev = np.asarray(ring.slot_state)
+        state = dataclasses.replace(state, ring=ring)
+        state = fn(params, state)
+        state, _events = offload_lib.service_overload(state, buf, serve)
+        cur = np.asarray(state.ring.slot_state)
+        for s in range(serve.num_slots):
+            assert cur[s] in _SLO_CLOSURE[prev[s]], \
+                f"illegal transition {rb.STATE_NAMES[prev[s]]} -> " \
+                f"{rb.STATE_NAMES[cur[s]]} (slot {s})"
+        # page conservation with the offload buffer in play
+        rc = np.asarray(state.alloc.refcount)
+        assert int(state.alloc.top) + int((rc > 0).sum()) == serve.num_pages
+        free_now = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
+        assert len(np.unique(free_now)) == len(free_now)
+        # buffer <-> OFFLOADED bijection
+        assert set(buf.entries) == set(
+            np.flatnonzero(cur == rb.OFFLOADED).tolist())
+        # lane hygiene
+        lanes = np.asarray(state.lane_slot)
+        held = lanes[lanes >= 0]
+        assert len(held) <= serve.decode_batch
+        assert len(np.unique(held)) == len(held), "slot holds two lanes"
+        assert all(cur[s] in (rb.PREFILLING, rb.DECODE_PROCESSING)
+                   for s in held), "lane points at a non-running slot"
+        nonterminal = _INJECTABLE + (rb.PREEMPTED, rb.PREFILL_PROCESSING)
+        if len(submitted) == n_req and not buf.entries \
+                and not np.isin(cur, nonterminal).any():
+            break
+    else:
+        raise AssertionError("fault script wedged the scheduler")
+    state = eng.drain_completed(state)
+    assert int(state.alloc.top) == serve.num_pages
+    assert not buf.entries and buf.restores + buf.drops == buf.offloads
+
+
 def test_ring_submit_release_protocol():
     serve = ServeConfig(num_slots=4, max_prompt_len=8, max_new_tokens=4)
     ring = rb.make_ring(serve)

@@ -41,6 +41,7 @@ import jax
 from repro.configs.base import ServeConfig
 from repro.configs.registry import TINY_ARCHS
 from repro.core import engine as eng
+from repro.core import offload as offload_lib
 from repro.core import ring_buffer as rb
 from repro.core.host_engine import HostEngine
 from repro.frontend.server import BlinkServer
@@ -348,3 +349,244 @@ def test_mixed_prefix_cache_differential():
                            np.asarray(srv.state.alloc.refcount)),
                           (len(host.free_pages), host.refcount)):
         assert alloc_top + int((np.asarray(rc) > 0).sum()) == serve.num_pages
+
+
+# --- SLO overload control: deadlines, cancellation, preemption ---------------
+#
+# The same differential contract, under overload: every policy decision
+# (EDF admission order, deadline cancellation, victim selection, offload /
+# drop / restore) is a pure function of the top-of-step snapshot, so the
+# device engine + ``service_overload`` and the HostEngine mirror must agree
+# not just on token bits but on the full ordered EVENT stream.
+
+# lanes and pages both scarce: 2 decode lanes for up-to-6 requests, and a
+# page pool small enough that suffix-page backpressure triggers preemption
+OVERLOAD = dataclasses.replace(
+    MIXED, decode_batch=2, num_pages=24, slo_classes=2, slo_preempt=True,
+    deadline_policy="e2e", slo_ttft_steps=(5, 60), slo_tpot_steps=(2, 12))
+# preemption without deadlines: nothing ever times out, so every preempted
+# request MUST be restored and complete — the token-identity scenario
+PREEMPT_ONLY = dataclasses.replace(
+    MIXED, decode_batch=2, num_pages=40, slo_classes=2, slo_preempt=True)
+# deadlines without preemption: pure cancel path (ttft policy only scopes
+# requests that never produced a token)
+TTFT_ONLY = dataclasses.replace(
+    MIXED, slo_classes=2, deadline_policy="ttft", slo_ttft_steps=(4, 40))
+OVERLOAD_CONFIGS = {"overload_e2e": OVERLOAD, "preempt_only": PREEMPT_ONLY,
+                    "ttft_only": TTFT_ONLY}
+
+_TERMINAL = (rb.DECODE_COMPLETED, rb.CANCELLED)
+
+
+def _random_overload_trace(seed):
+    """Overload trace space: same shape as ``_random_trace`` plus an SLO
+    class per request (biased toward batch class so interactive arrivals
+    find the lanes occupied)."""
+    rng = np.random.default_rng(seed)
+    trace = [(int(rng.integers(0, 14)),                  # arrival step
+              int(rng.integers(2, 25)),                  # prompt len
+              int(rng.integers(1, 9)),                   # max_new
+              float(rng.choice([0.0, 0.0, 0.8, 1.4])),   # temperature
+              bool(rng.integers(0, 2)))                  # shared prefix
+             for _ in range(int(rng.integers(2, 7)))]
+    reqs = _materialize(trace, seed)
+    slo = rng.integers(0, 2, len(reqs))
+    slo[int(rng.integers(0, len(reqs)))] = 1             # >=1 batch-class
+    return [(a, t, m, temp, int(s))
+            for (a, t, m, temp), s in zip(reqs, slo)]
+
+
+def _run_device_overload(serve, reqs):
+    """Replay an SLO trace through the persistent-window engine at
+    window=1 with ``service_overload`` at every window boundary — the
+    full device plane. Returns (outputs, drained state, ordered events,
+    offload buffer, slot_of).
+
+    In-window decisions (cancel, preempt) are recovered from slot-state
+    diffs across the fused step — the ring is the only rendezvous, so the
+    DPU side can always reconstruct them; offload/drop/restore come from
+    ``service_overload``'s return."""
+    api, params = _model()
+    fn = _window_fn(serve)
+    state = eng.init_engine_state(api, serve, seed=0)
+    buf = offload_lib.KVOffloadBuffer()
+    events = []
+    slot_of = {}
+    arrival = 0
+    for step in range(MAX_STEPS):
+        ring = state.ring
+        states_np = np.asarray(ring.slot_state)
+        for i, (arr, toks, max_new, temp, slo) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            empties = np.where(states_np == rb.EMPTY)[0]
+            if not len(empties):
+                continue                     # ring full: retry next step
+            slot = int(empties[0])
+            rel = serve.deadline_steps(slo, max_new)
+            ring = rb.submit_request(
+                ring, slot, tokens=toks, request_id=i, max_new=max_new,
+                arrival=arrival, temperature=temp, step=step, slo_class=slo,
+                deadline=None if rel is None else step + rel)
+            states_np = np.asarray(ring.slot_state)
+            slot_of[i] = slot
+            arrival += 1
+        pre = np.asarray(ring.slot_state).copy()
+        state = dataclasses.replace(state, ring=ring)
+        state = fn(params, state)
+        post = np.asarray(state.ring.slot_state)
+        rid = np.asarray(state.ring.request_id)
+        # in-window decisions, recovered from the ring (cancel sub-phase
+        # precedes preempt inside the step, ascending slot within each)
+        for s in np.flatnonzero((post == rb.CANCELLED)
+                                & (pre != rb.CANCELLED)):
+            events.append(("cancel", int(rid[s]), int(s)))
+        for s in np.flatnonzero((post == rb.PREEMPTED)
+                                & (pre != rb.PREEMPTED)):
+            events.append(("preempt", int(rid[s]), int(s)))
+        if serve.slo_preempt:
+            state, ev = offload_lib.service_overload(state, buf, serve)
+            events.extend(ev)
+        states_np = np.asarray(state.ring.slot_state)
+        if len(slot_of) == len(reqs) and not buf.entries and all(
+                states_np[s] in _TERMINAL for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("overload trace did not drain")
+    out = np.asarray(state.ring.output_arena)
+    gen = np.asarray(state.ring.generated)
+    outputs = {i: out[s, :gen[s]].tolist() for i, s in slot_of.items()}
+    return outputs, state, events, buf, slot_of
+
+
+def _run_host_overload(serve, reqs):
+    api, params = _model()
+    host = HostEngine(api, serve, params, seed=0)
+    slot_of = {}
+    arrival = 0
+    for step in range(MAX_STEPS):
+        for i, (arr, toks, max_new, temp, slo) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            rel = serve.deadline_steps(slo, max_new)
+            s = host.submit(toks, max_new=max_new, temperature=temp,
+                            arrival=arrival, slo_class=slo,
+                            deadline=None if rel is None else step + rel,
+                            request_id=i)
+            if s < 0:
+                continue                     # ring full: retry next step
+            slot_of[i] = s
+            arrival += 1
+        host.step()
+        if len(slot_of) == len(reqs) and not host.offload and all(
+                host.slot_state[s] in _TERMINAL for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("overload trace did not drain (host)")
+    return {i: list(host.outputs[s]) for i, s in slot_of.items()}, \
+        slot_of, host
+
+
+def _assert_overload_device_host(reqs, serve):
+    """Bitwise token streams AND identical ordered decision-event streams
+    across planes, plus conservation with the offload buffer in play."""
+    dev, state, dev_events, buf, slot_of = _run_device_overload(serve, reqs)
+    hst, _, host = _run_host_overload(serve, reqs)
+    assert dev == hst
+    assert dev_events == host.events
+    # conservation at drain: the buffer is empty (drain condition), every
+    # page is either free or trie-referenced on both planes
+    assert not buf.entries and not host.offload
+    state = eng.drain_completed(state)
+    assert int(state.alloc.top) == serve.num_pages
+    free = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
+    assert sorted(free.tolist()) == list(range(serve.num_pages))
+    assert len(host.free_pages) == serve.num_pages
+    # no-stall still holds for requests the policy never touched
+    touched = {r for _k, r, _s in dev_events}
+    ts = np.asarray(state.ring.token_step)
+    for i, s in slot_of.items():
+        if i in touched:
+            continue
+        stamps = ts[s][ts[s] >= 0]
+        assert (np.diff(stamps) == 1).all(), \
+            f"untouched request {i} decode stalled: token steps {stamps}"
+    return dev_events
+
+
+@pytest.mark.parametrize("cfg_name", sorted(OVERLOAD_CONFIGS))
+@pytest.mark.parametrize("seed", range(40, 46))
+def test_overload_device_bitwise_equals_host(cfg_name, seed):
+    _assert_overload_device_host(_random_overload_trace(seed),
+                                 OVERLOAD_CONFIGS[cfg_name])
+
+
+def test_overload_traces_exercise_every_event_kind():
+    """The seeded overload sweep is only a differential if the policy
+    actually fires. These (config, seed) pairs are known to produce each
+    in-window/boundary decision kind (they're deterministic — same trace
+    space the parametrized sweep replays); together with the engineered
+    drop scenario below, every event kind is covered."""
+    kinds = set()
+    for serve, seed in ((OVERLOAD, 41), (OVERLOAD, 44),
+                        (TTFT_ONLY, 41), (TTFT_ONLY, 45)):
+        kinds |= {k for k, _r, _s in _assert_overload_device_host(
+            _random_overload_trace(seed), serve)}
+    assert {"cancel", "preempt", "offload", "restore"} <= kinds, kinds
+
+
+def test_offloaded_deadline_drop():
+    """A spilled request whose e2e deadline passes while it sits in the
+    host buffer is dropped AT THE WINDOW BOUNDARY (never restored), its
+    buffered bytes discarded with nothing device-side to release — and the
+    host mirror emits the identical event stream. Scenario: two tight-
+    deadline batch requests get preempted by two long interactive
+    arrivals; no lane frees before the batch deadlines, so both spilled
+    images expire in the buffer."""
+    serve = dataclasses.replace(
+        MIXED, decode_batch=2, num_pages=40, max_new_tokens=20,
+        slo_classes=2, slo_preempt=True, deadline_policy="e2e",
+        slo_ttft_steps=(60, 5), slo_tpot_steps=(6, 1))
+    rng = np.random.default_rng(7)
+    reqs = [
+        (0, rng.integers(3, 512, 12).tolist(), 20, 0.0, 1),  # batch
+        (0, rng.integers(3, 512, 12).tolist(), 20, 0.0, 1),  # batch
+        (6, rng.integers(3, 512, 10).tolist(), 20, 0.0, 0),  # interactive
+        (7, rng.integers(3, 512, 10).tolist(), 20, 0.0, 0),  # interactive
+    ]
+    events = _assert_overload_device_host(reqs, serve)
+    kinds = [k for k, _r, _s in events]
+    assert kinds.count("preempt") == 2 and kinds.count("offload") == 2
+    assert kinds.count("drop") == 2 and "restore" not in kinds
+    # the interactive pair is never touched by the policy
+    touched = {r for _k, r, _s in events}
+    assert touched == {0, 1}
+
+
+def test_preempt_restore_token_identity():
+    """A preempted-then-restored request's greedy stream is bit-identical
+    to the same trace served without preemption: the spill/restore is a
+    byte-exact memcpy and greedy argmax is step-independent, so only a KV
+    corruption could diverge the tokens. The trace is engineered so the
+    interactive arrival finds both decode lanes held by batch-class
+    requests -> one MUST be preempted and later restored."""
+    rng = np.random.default_rng(99)
+    reqs = [
+        (0, rng.integers(3, 512, 12).tolist(), 8, 0.0, 1),   # batch, lane 0
+        (0, rng.integers(3, 512, 12).tolist(), 8, 0.0, 1),   # batch, lane 1
+        (8, rng.integers(3, 512, 10).tolist(), 4, 0.0, 0),   # interactive
+    ]
+    out_p, _state, events, buf, _ = _run_device_overload(PREEMPT_ONLY, reqs)
+    kinds = [k for k, _r, _s in events]
+    assert "preempt" in kinds and "offload" in kinds and "restore" in kinds
+    assert buf.offloads >= 1 and buf.restores == buf.offloads
+    assert buf.drops == 0 and not buf.entries
+    # same trace, no preemption: the interactive request just waits
+    baseline = dataclasses.replace(PREEMPT_ONLY, slo_preempt=False,
+                                   slo_classes=1)
+    out_b, _ = _run_device(baseline,
+                           [(a, t, m, temp) for a, t, m, temp, _ in reqs])
+    assert out_p == out_b
+    # and the host mirror preempts/restores identically
+    out_h, _, host = _run_host_overload(PREEMPT_ONLY, reqs)
+    assert out_p == out_h and events == host.events
