@@ -245,6 +245,33 @@ class ServeConfig:
     # every commit — not only under admission backpressure. 0 = unbounded
     # (watermark/starvation eviction still applies).
     prefix_trie_max_bytes: int = 0
+    # --- fault plane (ring integrity, watchdog, crash recovery) -----------
+    # Verify the per-entry payload checksum during the intake validation
+    # sub-phase (ring_buffer.validate_intake): an entry whose stored
+    # checksum does not match the recomputed one (a torn or bit-flipped
+    # RDMA write) is quarantined in the terminal FAULTED state instead of
+    # being admitted. Sequence/commit-flag/payload-range validation always
+    # runs; this knob only disables the checksum compare (for rings whose
+    # transport already provides end-to-end integrity).
+    ring_checksum: bool = True
+    # Fault any slot that makes no observable progress (chunk cursor,
+    # token emission, or lifecycle transition) for this many consecutive
+    # engine steps — a wedged PREFILLING lane, a decode lane streaming
+    # nothing, or a torn PREFILL_PENDING entry whose commit flag never
+    # arrives. 0 = watchdog off. States that legitimately wait (validated
+    # PREFILL_PENDING under admission backpressure, DECODE_PAUSED,
+    # PREEMPTED, OFFLOADED) are exempt. Requires the mixed-phase
+    # scheduler; set it comfortably above the worst-case chunk-starvation
+    # span (num_slots / max_prefills_per_step steps).
+    watchdog_steps: int = 0
+    # Snapshot the full engine state (ring, allocator, KV pages, RNG fold
+    # state — core.recovery.snapshot_engine) every this many engine steps,
+    # taken at window boundaries by the DPU plane. Restoring the snapshot
+    # after a mid-stream window kill resumes greedy token streams
+    # bit-for-bit (every policy is a pure function of engine state).
+    # 0 = no snapshots. Must be a multiple of ``window`` (snapshots only
+    # exist at window boundaries).
+    snapshot_every_steps: int = 0
 
     def __post_init__(self):
         if self.prefill_chunk_tokens < 0:
@@ -363,6 +390,26 @@ class ServeConfig:
             raise ValueError(
                 "prefix_trie_max_bytes bounds the radix prefix trie; it "
                 "requires prefix_cache=True")
+        if self.watchdog_steps < 0:
+            raise ValueError(
+                f"watchdog_steps must be >= 0 (0 = watchdog off), got "
+                f"{self.watchdog_steps}")
+        if self.watchdog_steps > 0 and self.prefill_chunk_tokens <= 0:
+            raise ValueError(
+                "watchdog_steps requires the mixed-phase scheduler "
+                "(prefill_chunk_tokens > 0): the watchdog is a per-step "
+                "policy decision and the phase-exclusive engine has no "
+                "per-step policy point")
+        if self.snapshot_every_steps < 0:
+            raise ValueError(
+                f"snapshot_every_steps must be >= 0 (0 = no snapshots), "
+                f"got {self.snapshot_every_steps}")
+        if self.snapshot_every_steps > 0 and (
+                self.snapshot_every_steps % self.window):
+            raise ValueError(
+                f"snapshot_every_steps={self.snapshot_every_steps} is not "
+                f"a multiple of window={self.window}: snapshots are taken "
+                f"by the DPU plane and only window boundaries exist there")
 
     def deadline_steps(self, slo_class: int, max_new: int):
         """Relative deadline (engine steps from submission) for a request

@@ -273,7 +273,8 @@ def drain_completed(state: EngineState) -> EngineState:
     ring = state.ring
     S = ring.num_slots
     done = (ring.slot_state == rb.DECODE_COMPLETED) | \
-        (ring.slot_state == rb.CANCELLED)
+        (ring.slot_state == rb.CANCELLED) | \
+        (ring.slot_state == rb.FAULTED)
     alloc, cache = state.alloc, state.cache
     kvc = cache.get("kv")
     if kvc is not None:
@@ -287,6 +288,11 @@ def drain_completed(state: EngineState) -> EngineState:
         cached_len=jnp.where(done, 0, ring.cached_len),
         prefill_done_len=jnp.where(done, 0, ring.prefill_done_len),
         shared_pages=jnp.where(done[:, None], -1, ring.shared_pages),
+        seq=jnp.where(done, -1, ring.seq),
+        checksum=jnp.where(done, 0, ring.checksum),
+        committed=jnp.where(done, 0, ring.committed),
+        validated=jnp.where(done, 0, ring.validated),
+        stall_steps=jnp.where(done, 0, ring.stall_steps),
     )
     return dataclasses.replace(state, ring=ring, alloc=alloc, cache=cache)
 
@@ -296,14 +302,23 @@ def drain_completed(state: EngineState) -> EngineState:
 # ---------------------------------------------------------------------------
 
 
+def admissible_pending(ring: rb.RingState) -> jax.Array:
+    """[S] bool — PREFILL_PENDING entries admission may look at: validated
+    by the intake sub-phase (``ring_buffer.validate_intake``). Uncommitted
+    (torn) and not-yet-validated entries are invisible; validation runs at
+    the top of every step, so a clean submission is admissible the same
+    step it is first seen — zero added latency on the healthy path."""
+    return (ring.slot_state == rb.PREFILL_PENDING) & (ring.validated > 0)
+
+
 def select_pending_fcfs(ring: rb.RingState, max_admit: int):
-    """Pick up to ``max_admit`` PREFILL_PENDING slots, earliest-arrival first.
+    """Pick up to ``max_admit`` admissible PREFILL_PENDING slots,
+    earliest-arrival first.
 
     jnp formulation — semantically identical to
-    ``repro.kernels.ring_scan.ring_select_topk`` (the Pallas TPU hot path);
-    tests assert equivalence."""
-    keyed = jnp.where(ring.slot_state == rb.PREFILL_PENDING, ring.arrival,
-                      INT_MAX)
+    ``repro.kernels.ring_scan.ring_select_topk`` (the Pallas TPU hot path)
+    over the validated pending set; tests assert equivalence."""
+    keyed = jnp.where(admissible_pending(ring), ring.arrival, INT_MAX)
     order = jnp.argsort(keyed)
     cand = order[:max_admit].astype(jnp.int32)
     valid = keyed[cand] != INT_MAX
@@ -320,7 +335,7 @@ def select_pending_edf(ring: rb.RingState, max_admit: int):
     SLO machinery is on; the host mirror runs the same two-key sort with
     ``np.lexsort`` (identical semantics, asserted by the differential
     harness)."""
-    pend = ring.slot_state == rb.PREFILL_PENDING
+    pend = admissible_pending(ring)
     dl = jnp.where(pend, ring.deadline_step, INT_MAX)
     ar = jnp.where(pend, ring.arrival, INT_MAX)
     cand = jnp.lexsort((ar, dl))[:max_admit].astype(jnp.int32)
@@ -560,12 +575,19 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         tokens = ring.last_token[slots]
 
         logits, cache = api.decode(params, tokens, cache, slots, active)
+        # poison guard: a lane whose logits are non-finite (bit-rotted KV
+        # page, numerically wedged model) must not stream garbage — it is
+        # quarantined in FAULTED instead of emitting. Healthy logits leave
+        # this a no-op, so bitwise parity with the host mirror holds.
+        row_ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+        poisoned = active & ~row_ok
+        emit = active & row_ok
         tok = sample_tokens(state.key, logits.astype(jnp.float32),
                             ring.temperature[slots], top_p=serve.top_p,
                             slot_ids=slots, step=state.step)
 
         out_idx = ring.generated[slots]                       # [Bd]
-        mark = jnp.where(active, slots, ring.num_slots)
+        mark = jnp.where(emit, slots, ring.num_slots)
         out_arena = ring.output_arena.at[
             mark, jnp.clip(out_idx, 0, serve.max_new_tokens - 1)
         ].set(tok, mode="drop")
@@ -576,23 +598,27 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         generated = ring.generated.at[mark].set(new_gen, mode="drop")
         last_token = ring.last_token.at[mark].set(tok, mode="drop")
 
-        done = active & ((tok == serve.eos_token)
-                         | (new_gen >= ring.max_new[slots]))
+        done = emit & ((tok == serve.eos_token)
+                       | (new_gen >= ring.max_new[slots]))
         ring_states = ring.slot_state.at[jnp.where(done, slots, ring.num_slots)
                                          ].set(rb.DECODE_COMPLETED,
                                                mode="drop")
+        ring_states = ring_states.at[
+            jnp.where(poisoned, slots, ring.num_slots)
+        ].set(rb.FAULTED, mode="drop")
 
         # free KV pages of finished requests (device-side page management).
         # Under prefix_cache release is DEFERRED to the frontend's slot
         # drain: the trie must index freshly prefilled prefix pages (taking
         # its reference) before the slot's references are dropped.
+        # Poison-faulted lanes release through the same path — zero leaks.
         if paged and not use_prefix:
             alloc, block_table = free_done_rows(
-                alloc, cache["kv"].block_table, slots, done)
+                alloc, cache["kv"].block_table, slots, done | poisoned)
             cache = dict(cache, kv=dataclasses.replace(
                 cache["kv"], block_table=block_table))
 
-        lane_slot = jnp.where(done, -1, state.lane_slot)
+        lane_slot = jnp.where(done | poisoned, -1, state.lane_slot)
         ring = dataclasses.replace(
             ring, slot_state=ring_states, output_arena=out_arena,
             token_step=tok_step, generated=generated, last_token=last_token)
@@ -645,6 +671,12 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
 
         new_done = cursor + lens
         completing = pvalid & (new_done >= ring.prompt_len[pslots])
+        # poison guard (same quarantine as the decode sub-phase): a
+        # completing lane whose first-token logits are non-finite faults
+        # instead of publishing its first token.
+        row_ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+        poisoned = completing & ~row_ok
+        completing = completing & row_ok
         adv = jnp.where(pvalid, pslots, ring.num_slots)
         done_len = ring.prefill_done_len.at[adv].set(new_done, mode="drop")
 
@@ -663,16 +695,20 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
                                    rb.DECODE_PROCESSING)
         ring_states = ring.slot_state.at[mark].set(new_state_code,
                                                    mode="drop")
+        ring_states = ring_states.at[
+            jnp.where(poisoned, pslots, ring.num_slots)
+        ].set(rb.FAULTED, mode="drop")
         if paged and not use_prefix:
             alloc, block_table = free_done_rows(
-                alloc, cache["kv"].block_table, pslots, done)
+                alloc, cache["kv"].block_table, pslots, done | poisoned)
             cache = dict(cache, kv=dataclasses.replace(
                 cache["kv"], block_table=block_table))
 
-        # release the reserved lane of max_new==1 completions
+        # release the reserved lane of max_new==1 completions and of
+        # poison-faulted lanes
         lane_done = jnp.any(
-            (state.lane_slot[:, None] == pslots[None, :]) & done[None, :],
-            axis=1)
+            (state.lane_slot[:, None] == pslots[None, :])
+            & (done | poisoned)[None, :], axis=1)
         lane_slot = jnp.where(lane_done, -1, state.lane_slot)
 
         ring = dataclasses.replace(
@@ -786,9 +822,61 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             state, ring=dataclasses.replace(ring, slot_state=slot_state),
             lane_slot=lane_slot)
 
+    # -- fault plane (watchdog + intake validation) -------------------------
+
+    def watchdog_eligible(ring):
+        """States that OWE progress every step: an uncommitted
+        PREFILL_PENDING entry (a torn write whose commit flag should land)
+        and a DECODE_PROCESSING lane (it decodes every step by
+        construction). Everything that can legitimately wait is exempt:
+        validated-pending (admission backpressure), PREFILLING (the
+        ``max_prefills_per_step`` rotation starves later lanes for
+        arbitrarily many steps), DECODE_PAUSED, PREEMPTED, OFFLOADED."""
+        st = ring.slot_state
+        return ((st == rb.PREFILL_PENDING) & (ring.validated == 0)) \
+            | (st == rb.DECODE_PROCESSING)
+
+    def watchdog_branch(state: EngineState) -> EngineState:
+        """Quarantine slots whose stall counter (accumulated at the end of
+        every step against the top-of-step snapshot) reached
+        ``watchdog_steps``: FAULTED, lane freed, block-table row released
+        through the same refcounted path as completion (frontend-owned
+        under prefix_cache). A pure function of the snapshot counters."""
+        ring = state.ring
+        wd = watchdog_eligible(ring) & \
+            (ring.stall_steps >= serve.watchdog_steps)
+        safe = jnp.maximum(state.lane_slot, 0)
+        lane_dead = (state.lane_slot >= 0) & wd[safe]
+        lane_slot = jnp.where(lane_dead, -1, state.lane_slot)
+        alloc, cache = state.alloc, state.cache
+        if paged and not use_prefix:
+            alloc, bt = free_done_rows(
+                alloc, cache["kv"].block_table,
+                jnp.arange(ring.num_slots, dtype=jnp.int32), wd)
+            cache = dict(cache, kv=dataclasses.replace(
+                cache["kv"], block_table=bt))
+        ring = dataclasses.replace(
+            ring,
+            slot_state=jnp.where(wd, rb.FAULTED, ring.slot_state),
+            stall_steps=jnp.where(wd, 0, ring.stall_steps))
+        return dataclasses.replace(state, ring=ring, alloc=alloc,
+                                   cache=cache, lane_slot=lane_slot)
+
+    def intake_branch(state: EngineState) -> EngineState:
+        """Ring intake validation (``ring_buffer.validate_intake``) — the
+        device side of the integrity protocol, run before any policy looks
+        at the pending set."""
+        return dataclasses.replace(
+            state, ring=rb.validate_intake(
+                state.ring, vocab=cfg.vocab_size,
+                check_checksum=serve.ring_checksum))
+
     # -- the per-iteration scheduler functions ------------------------------
 
     def engine_step_exclusive(params, state: EngineState) -> EngineState:
+        # intake validation first: admission below only ever sees entries
+        # the integrity protocol accepted
+        state = intake_branch(state)
         # overlapped ring scan (paper: scan happens while decode executes;
         # here: same fused program, no host involvement either way)
         cand, cand_valid = select_pending_fcfs(state.ring, A)
@@ -817,6 +905,23 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         )
 
     def engine_step_mixed(params, state: EngineState) -> EngineState:
+        # top-of-step snapshot for the watchdog's progress accounting
+        ring_top = state.ring
+
+        # 0w. watchdog: slots whose stall counter reached the threshold
+        # leave the scheduler before anything else looks at them.
+        # Compiled out entirely when the watchdog is off.
+        if serve.watchdog_steps > 0:
+            wd_any = jnp.any(
+                watchdog_eligible(state.ring)
+                & (state.ring.stall_steps >= serve.watchdog_steps))
+            state = jax.lax.cond(wd_any, watchdog_branch,
+                                 lambda s: s, state)
+
+        # 0v. intake validation: admission below only ever sees entries
+        # the integrity protocol accepted
+        state = intake_branch(state)
+
         # 0a. deadline cancellation: expired slots leave the scheduler
         # before anything else looks at them (they neither decode nor
         # chunk this step). Compiled out entirely when the policy is off.
@@ -886,6 +991,22 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             lambda s: decode_branch(params, s, decode_active),
             lambda s: s,
             state)
+
+        # 4. watchdog progress accounting against the top-of-step
+        # snapshot: a lifecycle transition, chunk-cursor advance, token
+        # emission or validation verdict all count as progress; eligible
+        # slots that showed none age their stall counter by one.
+        if serve.watchdog_steps > 0:
+            r1 = state.ring
+            moved = (r1.slot_state != ring_top.slot_state) \
+                | (r1.prefill_done_len != ring_top.prefill_done_len) \
+                | (r1.generated != ring_top.generated) \
+                | (r1.validated != ring_top.validated)
+            stall = jnp.where(watchdog_eligible(r1) & ~moved,
+                              ring_top.stall_steps + 1, 0)
+            state = dataclasses.replace(
+                state, ring=dataclasses.replace(
+                    r1, stall_steps=stall.astype(jnp.int32)))
         return dataclasses.replace(
             state,
             step=state.step + 1,

@@ -81,6 +81,16 @@ class HostEngine:
         # mixed-phase chunk cursor (mirror of ring.prefill_done_len)
         self.prefill_done = np.zeros(S, np.int32)
         self.lane_slot = np.full(serve.decode_batch, -1, np.int32)
+        # ring integrity mirror (seq / checksum / commit flag / validation
+        # verdict / watchdog stall counter — same semantics as the
+        # RingState fields, numpy arithmetic)
+        self.seq = np.full(S, -1, np.int64)
+        self.checksum = np.zeros(S, np.int64)
+        self.committed = np.zeros(S, np.int32)
+        self.validated = np.zeros(S, np.int32)
+        self.stall = np.zeros(S, np.int32)
+        self.seq_seen = -1
+        self._step_faults: List[int] = []
         self.key = jax.random.PRNGKey(seed)
         self.step_count = 0
         # telemetry
@@ -103,18 +113,22 @@ class HostEngine:
         def _chunk(params, prompts, lens, cursors, cache, slots, active,
                    temps, key, step):
             # the batched chunk step: ONE dispatch for all PREFILLING lanes
-            # (same ModelApi entry point as the device engine's mixed step)
+            # (same ModelApi entry point as the device engine's mixed step).
+            # ``ok`` is the poison-guard verdict (finite logits per lane) —
+            # the mirror of the device engine's quarantine predicate.
             logits, cache = api.prefill_batched(params, prompts, lens, cache,
                                                 slots, active, cursors)
+            ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
             tok = sample_tokens(key, logits.astype(jnp.float32), temps,
                                 top_p=serve.top_p, slot_ids=slots, step=step)
-            return tok, cache
+            return tok, ok, cache
 
         def _decode(params, tokens, cache, slots, active, temps, key, step):
             logits, cache = api.decode(params, tokens, cache, slots, active)
+            ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
             tok = sample_tokens(key, logits.astype(jnp.float32), temps,
                                 top_p=serve.top_p, slot_ids=slots, step=step)
-            return tok, cache
+            return tok, ok, cache
 
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(4,))
         self._chunk_fn = jax.jit(_chunk, donate_argnums=(4,)) \
@@ -148,6 +162,13 @@ class HostEngine:
         self.slot_cached = np.zeros(S, np.int32)
         self.prefill_done = np.zeros(S, np.int32)
         self.lane_slot = np.full(serve.decode_batch, -1, np.int32)
+        self.seq = np.full(S, -1, np.int64)
+        self.checksum = np.zeros(S, np.int64)
+        self.committed = np.zeros(S, np.int32)
+        self.validated = np.zeros(S, np.int32)
+        self.stall = np.zeros(S, np.int32)
+        self.seq_seen = -1
+        self._step_faults = []
         self.key = jax.random.PRNGKey(seed)
         self.step_count = 0
         self.submit_time = np.zeros(S, np.float64)
@@ -158,7 +179,13 @@ class HostEngine:
     def submit(self, tokens, max_new: int, temperature: float = 0.0,
                arrival: Optional[int] = None, slo_class: int = 0,
                deadline: Optional[int] = None,
-               request_id: Optional[int] = None) -> int:
+               request_id: Optional[int] = None, seq: Optional[int] = None,
+               checksum: Optional[int] = None,
+               committed: bool = True) -> int:
+        """``seq``/``checksum``/``committed`` mirror
+        ``ring_buffer.submit_request``'s integrity-protocol overrides: by
+        default a well-formed entry (next monotone seq, correct digest,
+        commit flag set); fault injection passes them explicitly."""
         free = np.where(self.slot_state == rb.EMPTY)[0]
         if len(free) == 0:
             return -1
@@ -185,6 +212,25 @@ class HostEngine:
             for p in shared:
                 self.refcount[p] += 1
         self.arrival[s] = arrival if arrival is not None else self.step_count
+        # integrity protocol (mirror of rb.submit_request): monotone seq,
+        # payload checksum over the post-prefix-match metadata, commit
+        # flag conceptually written last
+        if seq is None:
+            seq = max(int(self.seq_seen), int(self.seq.max())) + 1
+        if checksum is None:
+            checksum = rb.entry_checksum(
+                seq=int(seq), prompt_len=len(self.prompt[s]),
+                max_new=int(max_new), arrival=int(self.arrival[s]),
+                cached_len=int(self.slot_cached[s]),
+                slo_class=int(slo_class),
+                deadline_step=int(self.deadline[s]),
+                temperature=float(temperature), tokens=self.prompt[s],
+                shared_pages=self.slot_pages.get(s, []))
+        self.seq[s] = int(seq)
+        self.checksum[s] = int(checksum)
+        self.validated[s] = 0
+        self.stall[s] = 0
+        self.committed[s] = 1 if committed else 0
         self.slot_state[s] = rb.PREFILL_PENDING
         self.submit_time[s] = time.perf_counter()
         self.first_token_time[s] = -1.0
@@ -196,6 +242,12 @@ class HostEngine:
         self.arrival[slot] = np.iinfo(np.int32).max
         self.slo_class[slot] = 0
         self.deadline[slot] = np.iinfo(np.int32).max
+        # integrity-protocol resets (mirror of rb.release_slot)
+        self.seq[slot] = -1
+        self.checksum[slot] = 0
+        self.committed[slot] = 0
+        self.validated[slot] = 0
+        self.stall[slot] = 0
         return toks
 
     def _commit_prompt_to_trie(self, slot: int) -> None:
@@ -240,12 +292,91 @@ class HostEngine:
             self._release_row(self.prefix.evict(deficit,
                                                 refcount=self.refcount))
 
+    # -- fault plane (mirror of the device engine's quarantine paths) -------
+    def _fault(self, slot: int) -> None:
+        """Quarantine one slot: free its lane, release its pages through
+        the refcounted drain, park it FAULTED (terminal). Mirrors the
+        device's watchdog / intake / poison fault paths — partial output
+        stays in ``outputs`` until drained."""
+        self.lane_slot[self.lane_slot == slot] = -1
+        self.slot_state[slot] = rb.FAULTED
+        self.stall[slot] = 0
+        self._release_slot_pages(slot)
+        self._step_faults.append(slot)
+
+    def _validate_intake(self) -> None:
+        """Python mirror of ``ring_buffer.validate_intake``: every
+        committed, not-yet-validated PREFILL_PENDING entry is checked
+        exactly once against the top-of-step snapshot — duplicate/stale
+        seq, checksum mismatch, payload out of range -> FAULTED; otherwise
+        ``validated`` = 1. Verdicts are computed from the snapshot FIRST,
+        then applied (the device computes them vectorised)."""
+        serve = self.serve
+        vocab = self.api.cfg.vocab_size
+        W = serve.max_prompt_len
+        st = self.slot_state
+        cand = (st == rb.PREFILL_PENDING) & (self.committed > 0) \
+            & (self.validated == 0)
+        live = st != rb.EMPTY
+        claimant = live & ((self.validated > 0) | cand)
+        val0 = self.validated.copy()
+        verdicts = []
+        for s in np.flatnonzero(cand):
+            s = int(s)
+            dup = any(claimant[j] and self.seq[j] == self.seq[s]
+                      and (val0[j] > 0 or j < s)
+                      for j in range(len(st)) if j != s)
+            bad = dup or int(self.seq[s]) <= int(self.seq_seen)
+            if serve.ring_checksum and not bad:
+                want = rb.entry_checksum(
+                    seq=int(self.seq[s]), prompt_len=len(self.prompt[s]),
+                    max_new=int(self.max_new[s]),
+                    arrival=int(self.arrival[s]),
+                    cached_len=int(self.slot_cached[s]),
+                    slo_class=int(self.slo_class[s]),
+                    deadline_step=int(self.deadline[s]),
+                    temperature=float(self.temperature[s]),
+                    tokens=self.prompt[s],
+                    shared_pages=self.slot_pages.get(s, []))
+                bad = want != int(self.checksum[s])
+            if not bad:
+                p = self.prompt[s]
+                bad = (not 0 < len(p) <= W) \
+                    or any(t < 0 or t >= vocab for t in p) \
+                    or not 0 < int(self.max_new[s]) <= serve.max_new_tokens \
+                    or not np.isfinite(self.temperature[s]) \
+                    or self.temperature[s] < 0 \
+                    or not 0 <= int(self.slot_cached[s]) < len(p)
+            verdicts.append((s, bad))
+        if verdicts:
+            self.seq_seen = max(self.seq_seen,
+                                max(int(self.seq[s]) for s, _ in verdicts))
+        for s, bad in verdicts:
+            if bad:
+                self._fault(s)
+            else:
+                self.validated[s] = 1
+
+    def _watchdog_eligible(self) -> np.ndarray:
+        # mirror of engine.watchdog_eligible: only uncommitted pending
+        # entries (torn writes) and decoding lanes owe progress every
+        # step; PREFILLING is exempt (the max_prefills_per_step rotation
+        # legitimately starves later lanes)
+        st = self.slot_state
+        return ((st == rb.PREFILL_PENDING) & (self.validated == 0)) \
+            | (st == rb.DECODE_PROCESSING)
+
     # -- one host-driven scheduler iteration --------------------------------
     def step(self) -> None:
         if self.serve.prefill_chunk_tokens > 0:
             self._step_mixed()
         else:
             self._step_exclusive()
+        # flush this step's quarantines as ordered events (ascending slot —
+        # the order the differential harness reconstructs device faults in)
+        for s in sorted(self._step_faults):
+            self.events.append(("fault", self._rid(s), s))
+        self._step_faults = []
         self.step_count += 1
         # DPU-plane overload service AFTER the step counter advances —
         # the device analogue (core.offload.service_overload) runs between
@@ -259,7 +390,9 @@ class HostEngine:
         prefix-eviction starvation valve. Returns (pending slots in
         admission order, free lanes)."""
         serve = self.serve
-        pending = np.where(self.slot_state == rb.PREFILL_PENDING)[0]
+        # admission only ever sees entries the integrity protocol accepted
+        pending = np.where((self.slot_state == rb.PREFILL_PENDING)
+                           & (self.validated > 0))[0]
         if serve.deadline_policy != "none" or serve.slo_preempt:
             pending = pending[np.lexsort((self.arrival[pending],
                                           self.deadline[pending]))]
@@ -315,6 +448,7 @@ class HostEngine:
         """Legacy phase-exclusive iteration: a step runs prefill for the
         admitted batch OR one decode step, never both (vLLM-class)."""
         self.jitter()                      # host touch 1: scheduler wakeup
+        self._validate_intake()
         pending, free_lanes = self._scan_pending()
         admit = self._admit_scan(pending, free_lanes)
         if admit:
@@ -332,6 +466,21 @@ class HostEngine:
         pre-SLO engine otherwise)."""
         serve = self.serve
         self.jitter()                      # host touch 1: scheduler wakeup
+        # top-of-step snapshot for the watchdog's progress accounting
+        st0 = self.slot_state.copy()
+        pd0 = self.prefill_done.copy()
+        gen0 = self.generated.copy()
+        val0 = self.validated.copy()
+        stall0 = self.stall.copy()
+        # 0w. watchdog: slots whose stall counter reached the threshold
+        # leave the scheduler before anything else looks at them
+        if serve.watchdog_steps > 0:
+            wd = self._watchdog_eligible() & (self.stall
+                                              >= serve.watchdog_steps)
+            for s in np.flatnonzero(wd):
+                self._fault(int(s))
+        # 0v. intake validation (the integrity protocol's device side)
+        self._validate_intake()
         # 0a. deadline cancellation over the top-of-step snapshot
         if serve.deadline_policy != "none":
             self._cancel_expired()
@@ -368,6 +517,12 @@ class HostEngine:
         self._run_chunk(budget)
         # 3. decode all snapshot lanes
         self._run_decode(decode_active)
+        # 4. watchdog progress accounting against the top-of-step snapshot
+        if serve.watchdog_steps > 0:
+            moved = (self.slot_state != st0) | (self.prefill_done != pd0) \
+                | (self.generated != gen0) | (self.validated != val0)
+            self.stall = np.where(self._watchdog_eligible() & ~moved,
+                                  stall0 + 1, 0).astype(np.int32)
 
     def _dispatch_prefill(self, slot_list, width: int, bucket: int,
                           tokens_of, chunked: bool) -> np.ndarray:
@@ -395,11 +550,12 @@ class HostEngine:
         self.jitter()                      # host touch 3: kernel dispatch
 
         if chunked:
-            tok, self.cache = self._chunk_fn(
+            tok, ok, self.cache = self._chunk_fn(
                 self.params, jnp.asarray(prompts), jnp.asarray(lens),
                 jnp.asarray(cached), self.cache, jnp.asarray(slots),
                 jnp.asarray(active), jnp.asarray(temps), self.key,
                 jnp.asarray(self.step_count, jnp.int32))
+            ok_host = np.asarray(jax.device_get(ok))
         else:
             cached_arg = jnp.asarray(cached) \
                 if self.prefix is not None else None
@@ -408,15 +564,16 @@ class HostEngine:
                 cached_arg, self.cache, jnp.asarray(slots),
                 jnp.asarray(active), jnp.asarray(temps), self.key,
                 jnp.asarray(self.step_count, jnp.int32))
+            ok_host = np.ones(width, bool)
         tok_host = np.asarray(jax.device_get(tok))   # PCIe round-trip
         self.jitter()                      # host touch 4: copy-back handling
-        return tok_host
+        return tok_host, ok_host
 
     def _run_prefill(self, admit: List[int], free_lanes) -> None:
         serve = self.serve
         for s in admit:
             self.slot_state[s] = rb.PREFILL_PROCESSING
-        tok_host = self._dispatch_prefill(
+        tok_host, _ = self._dispatch_prefill(
             admit, serve.admit_per_step, serve.max_prompt_len,
             # suffix only beyond the cached prefix
             lambda s: (self.prompt[s][int(self.slot_cached[s]):],
@@ -447,7 +604,7 @@ class HostEngine:
             return
         filling = filling[np.argsort(self.arrival[filling], kind="stable")
                           ][:serve.max_prefills_per_step]
-        tok_host = self._dispatch_prefill(
+        tok_host, ok_host = self._dispatch_prefill(
             filling, serve.max_prefills_per_step, bucket,
             # one chunk, resuming from the cursor
             lambda s: (self.prompt[s][int(self.prefill_done[s]):
@@ -462,6 +619,12 @@ class HostEngine:
                 budget, len(self.prompt[s]) - int(self.prefill_done[s]))
             if self.prefill_done[s] < len(self.prompt[s]):
                 continue                   # partial: no token surfaces
+            if not ok_host[j]:
+                # poison guard (device chunk_branch mirror): a completing
+                # lane with non-finite first-token logits faults instead
+                # of publishing its first token or indexing the trie
+                self._fault(s)
+                continue
             self._commit_prompt_to_trie(s)
             # final chunk: the first token
             if self._emit_first_token(s, int(tok_host[j]), now):
@@ -483,11 +646,12 @@ class HostEngine:
         temps = self.temperature[slots]
         self.jitter()                      # host touch 3: kernel dispatch
 
-        tok, self.cache = self._decode_fn(
+        tok, ok, self.cache = self._decode_fn(
             self.params, jnp.asarray(tokens), self.cache, jnp.asarray(slots),
             jnp.asarray(active), jnp.asarray(temps), self.key,
             jnp.asarray(self.step_count, jnp.int32))
         tok_host = np.asarray(jax.device_get(tok))   # PCIe round-trip
+        ok_host = np.asarray(jax.device_get(ok))
         self.jitter()                      # host touch 4: batch reassembly
 
         now = time.perf_counter()
@@ -495,6 +659,11 @@ class HostEngine:
             if not active[lane]:
                 continue
             s = int(self.lane_slot[lane])
+            if not ok_host[lane]:
+                # poison guard (device decode_branch mirror): quarantine
+                # instead of streaming garbage
+                self._fault(s)
+                continue
             t = int(tok_host[lane])
             self.outputs[s].append(t)
             self.token_times[s].append(now)
@@ -625,6 +794,7 @@ class HostEngine:
                             if kvc.quantized else None),
                 "v_scale": (np.asarray(kvc.v_scale[:, idx])
                             if kvc.quantized else None),
+                "restore_pages": None, "restored": 0,
             }
             self._release_slot_pages(s)
             kvc = self.cache["kv"]
@@ -634,12 +804,25 @@ class HostEngine:
         if serve.deadline_policy == "e2e":
             for s in sorted(self.offload):
                 if int(self.deadline[s]) <= self.step_count:
-                    del self.offload[s]
+                    entry = self.offload.pop(s)
+                    if entry["restore_pages"] is not None:
+                        # mid-restore drop: return the pre-allocated pages
+                        self.free_pages.extend(
+                            reversed(entry["restore_pages"]))
+                        for p in entry["restore_pages"]:
+                            self.refcount[p] = 0
                     self.slot_state[s] = rb.CANCELLED
                     self.events.append(("drop", self._rid(s), s))
-        # 3. restore earliest-deadline-first, from surplus only
+        # 3. restore earliest-deadline-first, from surplus only (chunked:
+        # pages taken all-or-nothing at start, bytes copied back at most
+        # one chunk's worth of pages per pass — mirror of the device's
+        # ``_restore_page_budget`` bound)
+        from repro.core.offload import _restore_page_budget
+        budget = _restore_page_budget(serve)
+        in_progress = sum(1 for e in self.offload.values()
+                          if e["restore_pages"] is not None)
         lanes_free = int((self.lane_slot < 0).sum()) \
-            - int((self.slot_state == rb.DECODE_PAUSED).sum())
+            - int((self.slot_state == rb.DECODE_PAUSED).sum()) - in_progress
         reserve = 0
         pend = np.flatnonzero(self.slot_state == rb.PREFILL_PENDING)
         if pend.size:
@@ -656,40 +839,62 @@ class HostEngine:
                                       int(self.arrival[s])))
         for s in order:
             entry = self.offload[s]
-            if lanes_free <= 0:
-                break
-            if len(self.free_pages) - entry["n_pages"] < reserve:
-                continue       # smaller spill later in EDF order may fit
-            pages = [self.free_pages.pop()
-                     for _ in range(entry["n_pages"])]
-            for p in pages:
-                self.refcount[p] = 1
-            self.slot_pages[s] = pages
-            idx = jnp.asarray(np.asarray(pages, np.int32))
+            if entry["restore_pages"] is None:
+                # not started: lane reservation + all pages up front
+                if lanes_free <= 0 or (budget is not None and budget <= 0):
+                    continue
+                if len(self.free_pages) - entry["n_pages"] < reserve:
+                    continue   # smaller spill later in EDF order may fit
+                pages = [self.free_pages.pop()
+                         for _ in range(entry["n_pages"])]
+                for p in pages:
+                    self.refcount[p] = 1
+                entry["restore_pages"] = pages
+                lanes_free -= 1
+            # copy the next chunk of pages (all of them when unbounded)
+            done = entry["restored"]
+            n_copy = entry["n_pages"] - done
+            if budget is not None:
+                n_copy = min(n_copy, budget)
+                budget -= n_copy
+            if n_copy > 0:
+                ids = jnp.asarray(np.asarray(
+                    entry["restore_pages"][done:done + n_copy], np.int32))
+                kvc = dc.replace(
+                    kvc,
+                    k_pages=kvc.k_pages.at[:, ids].set(
+                        jnp.asarray(entry["k"][:, done:done + n_copy],
+                                    kvc.k_pages.dtype)),
+                    v_pages=kvc.v_pages.at[:, ids].set(
+                        jnp.asarray(entry["v"][:, done:done + n_copy],
+                                    kvc.v_pages.dtype)))
+                if kvc.quantized:
+                    kvc = dc.replace(
+                        kvc,
+                        k_scale=kvc.k_scale.at[:, ids].set(jnp.asarray(
+                            entry["k_scale"][:, done:done + n_copy],
+                            kvc.k_scale.dtype)),
+                        v_scale=kvc.v_scale.at[:, ids].set(jnp.asarray(
+                            entry["v_scale"][:, done:done + n_copy],
+                            kvc.v_scale.dtype)))
+                entry["restored"] = done + n_copy
+            if entry["restored"] < entry["n_pages"]:
+                continue       # partial: keep OFFLOADED, resume next pass
+            # final chunk landed: wire the row, park DECODE_PAUSED, emit
+            pages = entry["restore_pages"]
+            self.slot_pages[s] = list(pages)
             row = np.full(kvc.block_table.shape[1], -1, np.int32)
             row[:len(pages)] = pages
             kvc = dc.replace(
                 kvc,
-                k_pages=kvc.k_pages.at[:, idx].set(
-                    jnp.asarray(entry["k"], kvc.k_pages.dtype)),
-                v_pages=kvc.v_pages.at[:, idx].set(
-                    jnp.asarray(entry["v"], kvc.v_pages.dtype)),
                 block_table=kvc.block_table.at[s].set(jnp.asarray(row)),
                 seq_lens=kvc.seq_lens.at[s].set(entry["seq_len"]))
-            if kvc.quantized:
-                kvc = dc.replace(
-                    kvc,
-                    k_scale=kvc.k_scale.at[:, idx].set(
-                        jnp.asarray(entry["k_scale"], kvc.k_scale.dtype)),
-                    v_scale=kvc.v_scale.at[:, idx].set(
-                        jnp.asarray(entry["v_scale"], kvc.v_scale.dtype)))
             self.cache["kv"] = kvc
             # restored slot owns its whole row afresh (no shared prefix)
             self.slot_cached[s] = 0
             self.prefill_done[s] = len(self.prompt[s])
             self.slot_state[s] = rb.DECODE_PAUSED
             del self.offload[s]
-            lanes_free -= 1
             self.events.append(("restore", self._rid(s), s))
         self.cache["kv"] = kvc
 

@@ -66,6 +66,12 @@ class KVOffloadEntry:
     v: np.ndarray
     k_scale: Optional[np.ndarray]      # [L, n_pages, ps, KV] (int8 pool)
     v_scale: Optional[np.ndarray]
+    # chunked-restore cursor: pages are allocated all-or-nothing at restore
+    # START (so the admission-reserve gate sees the full cost up front) but
+    # copied back over several boundaries; the slot stays OFFLOADED and the
+    # "restore" event fires only when the last chunk lands.
+    restore_pages: Optional[np.ndarray] = None   # [n_pages] allocated ids
+    restored_pages: int = 0                      # pages copied so far
 
     @property
     def nbytes(self) -> int:
@@ -118,6 +124,19 @@ def _pending_reserve(ring, serve: ServeConfig) -> int:
     return need
 
 
+def _restore_page_budget(serve: ServeConfig) -> Optional[int]:
+    """Pages the boundary may copy back per service pass.
+
+    With adaptive chunking on (``prefill_chunk_tokens_max > 0``) the
+    restore burst is bounded by the same knob that bounds a prefill
+    chunk — ``ceil(prefill_chunk_tokens_max / page_size)`` pages — so a
+    window boundary never blocks on a host copy larger than one chunk's
+    worth of KV. ``None`` means unbounded (legacy one-shot restore)."""
+    if serve.prefill_chunk_tokens_max <= 0:
+        return None
+    return max(1, -(-serve.prefill_chunk_tokens_max // serve.page_size))
+
+
 def service_overload(state, buf: KVOffloadBuffer, serve: ServeConfig
                      ) -> Tuple[Any, List[Tuple[str, int, int]]]:
     """One DPU-plane overload service pass over an ``EngineState``.
@@ -163,47 +182,87 @@ def service_overload(state, buf: KVOffloadBuffer, serve: ServeConfig
             if int(ring.deadline_step[slot]) <= step_now:
                 entry = buf.entries.pop(slot)
                 buf.drops += 1
+                if entry.restore_pages is not None:
+                    # mid-restore drop: the pages were allocated at restore
+                    # start but the block row was never wired — return them
+                    alloc = cache_lib.free_pages(
+                        alloc, jnp.asarray(entry.restore_pages, jnp.int32))
                 ring = dataclasses.replace(
                     ring,
                     slot_state=ring.slot_state.at[slot].set(rb.CANCELLED))
                 events.append(("drop", entry.request_id, slot))
 
     # -- 3. restore earliest-deadline-first, from surplus only --------------
+    # Chunked: pages are allocated all-or-nothing when a restore STARTS
+    # (the gate sees the full cost), but at most ``_restore_page_budget``
+    # pages of KV are copied back per boundary — an in-progress slot stays
+    # OFFLOADED (its lane reservation held via ``lanes_free``) until its
+    # last chunk lands, and only then surfaces the "restore" event.
     states_np = np.asarray(ring.slot_state)
+    in_progress = sum(1 for e in buf.entries.values()
+                      if e.restore_pages is not None)
     lanes_free = int(np.sum(np.asarray(state.lane_slot) < 0)) \
-        - int(np.sum(states_np == rb.DECODE_PAUSED))
+        - int(np.sum(states_np == rb.DECODE_PAUSED)) - in_progress
     reserve = _pending_reserve(ring, serve)
+    budget = _restore_page_budget(serve)
     order = sorted(buf.entries,
                    key=lambda s: (int(ring.deadline_step[s]),
                                   int(ring.arrival[s])))
     for slot in order:
         entry = buf.entries[slot]
-        if lanes_free <= 0:
-            break
-        if int(alloc.top) - entry.n_pages < reserve:
-            continue           # smaller spill later in EDF order may fit
-        pages, alloc, ok = cache_lib.alloc_pages(
-            alloc, jnp.asarray(entry.n_pages, jnp.int32),
-            serve.pages_per_req)
-        assert bool(ok), "restore allocation must succeed after the gate"
-        ids = jnp.asarray(np.asarray(pages)[:entry.n_pages], jnp.int32)
-        kvc = dataclasses.replace(
-            kvc,
-            k_pages=kvc.k_pages.at[:, ids].set(
-                jnp.asarray(entry.k, kvc.k_pages.dtype)),
-            v_pages=kvc.v_pages.at[:, ids].set(
-                jnp.asarray(entry.v, kvc.v_pages.dtype)),
-            block_table=kvc.block_table.at[slot].set(
-                jnp.where(jnp.arange(kvc.max_blocks) < entry.n_pages,
-                          pages[:kvc.max_blocks], -1)),
-            seq_lens=kvc.seq_lens.at[slot].set(entry.seq_len))
-        if kvc.quantized:
+        if entry.restore_pages is None:
+            # not started: take the lane reservation + all pages up front
+            if lanes_free <= 0 or (budget is not None and budget <= 0):
+                continue
+            if int(alloc.top) - entry.n_pages < reserve:
+                continue       # smaller spill later in EDF order may fit
+            pages, alloc, ok = cache_lib.alloc_pages(
+                alloc, jnp.asarray(entry.n_pages, jnp.int32),
+                serve.pages_per_req)
+            assert bool(ok), \
+                "restore allocation must succeed after the gate"
+            entry.restore_pages = np.asarray(pages)[:entry.n_pages] \
+                .astype(np.int32)
+            lanes_free -= 1
+        # copy the next chunk of pages (all of them when unbounded)
+        done = entry.restored_pages
+        n_copy = entry.n_pages - done
+        if budget is not None:
+            n_copy = min(n_copy, budget)
+            budget -= n_copy
+        if n_copy > 0:
+            ids = jnp.asarray(entry.restore_pages[done:done + n_copy],
+                              jnp.int32)
             kvc = dataclasses.replace(
                 kvc,
-                k_scale=kvc.k_scale.at[:, ids].set(
-                    jnp.asarray(entry.k_scale, kvc.k_scale.dtype)),
-                v_scale=kvc.v_scale.at[:, ids].set(
-                    jnp.asarray(entry.v_scale, kvc.v_scale.dtype)))
+                k_pages=kvc.k_pages.at[:, ids].set(
+                    jnp.asarray(entry.k[:, done:done + n_copy],
+                                kvc.k_pages.dtype)),
+                v_pages=kvc.v_pages.at[:, ids].set(
+                    jnp.asarray(entry.v[:, done:done + n_copy],
+                                kvc.v_pages.dtype)))
+            if kvc.quantized:
+                kvc = dataclasses.replace(
+                    kvc,
+                    k_scale=kvc.k_scale.at[:, ids].set(
+                        jnp.asarray(entry.k_scale[:, done:done + n_copy],
+                                    kvc.k_scale.dtype)),
+                    v_scale=kvc.v_scale.at[:, ids].set(
+                        jnp.asarray(entry.v_scale[:, done:done + n_copy],
+                                    kvc.v_scale.dtype)))
+            entry.restored_pages = done + n_copy
+        if entry.restored_pages < entry.n_pages:
+            continue           # partial: keep OFFLOADED, resume next pass
+        # final chunk landed: wire the row, park DECODE_PAUSED, emit
+        row_ids = jnp.asarray(entry.restore_pages, jnp.int32)
+        kvc = dataclasses.replace(
+            kvc,
+            block_table=kvc.block_table.at[slot].set(
+                jnp.where(jnp.arange(kvc.max_blocks) < entry.n_pages,
+                          jnp.pad(row_ids, (0, max(kvc.max_blocks
+                                                   - entry.n_pages, 0))
+                                  )[:kvc.max_blocks], -1)),
+            seq_lens=kvc.seq_lens.at[slot].set(entry.seq_len))
         # the restored slot no longer shares prefix pages — its whole row
         # is freshly owned, so the drain path's plain row free is exact
         ring = dataclasses.replace(
@@ -215,7 +274,6 @@ def service_overload(state, buf: KVOffloadBuffer, serve: ServeConfig
             slot_state=ring.slot_state.at[slot].set(rb.DECODE_PAUSED))
         del buf.entries[slot]
         buf.restores += 1
-        lanes_free -= 1
         events.append(("restore", entry.request_id, slot))
 
     state = dataclasses.replace(

@@ -1,0 +1,247 @@
+"""Crash recovery + scripted fault injection (the DPU-plane failure model).
+
+Blink's persistent window runs unsupervised: there is no host babysitter
+to notice a wedged or crashed GPU program, and the SmartNIC keeps
+RDMA-writing requests into the ring regardless. Two pieces make that
+survivable:
+
+**Window snapshots** (``snapshot_engine`` / ``restore_engine``). The whole
+serving truth — ring, page allocator, KV pages, lane table, RNG fold
+state, step counters — lives in ``EngineState`` device buffers, plus the
+host-side ``KVOffloadBuffer`` staging spilled KV. At a window boundary
+(the only point where the DPU plane touches the engine anyway) a byte-
+exact host copy of every leaf is taken. Because every scheduling decision
+is a pure function of that state and greedy sampling folds only
+``(slot, step)``, restoring the snapshot and re-running yields token
+streams IDENTICAL to the unkilled run — crash recovery re-enters at the
+last boundary, losing at most one window of work and zero committed
+tokens ("tokens lost = 0": everything the frontend already drained was
+produced before the snapshot it restores from).
+
+Ownership rule for snapshot pages: the snapshot copies the allocator and
+the KV pool TOGETHER, so a page's refcount and its bytes are always from
+the same boundary — restore can never resurrect a page the allocator
+thinks is free, or leak one it thinks is held.
+
+**FaultInjector**: a seeded script of ingress faults applied IDENTICALLY
+to the device ring and the ``HostEngine`` mirror, so the differential
+harness can replay a faulty trace on both planes and demand identical
+fault-event streams and bitwise token streams for the surviving requests.
+Fault kinds cover the ring integrity protocol end to end: torn writes
+(commit flag never lands), duplicate / stale sequence numbers, corrupted
+checksums, post-submit bit-flips in the token arena, and malformed
+payloads (out-of-vocab token, out-of-range max_new, non-finite
+temperature) that carry a VALID checksum — only payload validation can
+catch those.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ring_buffer as rb
+from repro.core.offload import KVOffloadBuffer
+
+INT32_MAX = int(np.iinfo(np.int32).max)
+
+
+# ---------------------------------------------------------------------------
+# Window-boundary snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineSnapshot:
+    """Byte-exact host image of one window boundary."""
+    leaves: List[np.ndarray]           # host copies of every EngineState leaf
+    treedef: Any                       # pytree structure to rebuild with
+    step: int                          # boundary step (for bookkeeping)
+    offload: Optional[KVOffloadBuffer]  # deep copy of the spill buffer
+
+    @property
+    def nbytes(self) -> int:
+        n = sum(x.nbytes for x in self.leaves)
+        if self.offload is not None:
+            n += self.offload.nbytes_held
+        return n
+
+
+def snapshot_engine(state, offload_buf: Optional[KVOffloadBuffer] = None
+                    ) -> EngineSnapshot:
+    """Copy every ``EngineState`` leaf (ring, allocator, KV pages, lanes,
+    RNG key, counters) to host memory, byte-exact, plus a deep copy of the
+    host-side offload buffer. Call ONLY at a window boundary — mid-window
+    there is no host rendezvous to snapshot at."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    host = [np.array(jax.device_get(x), copy=True) for x in leaves]
+    return EngineSnapshot(
+        leaves=host, treedef=treedef, step=int(state.step),
+        offload=copy.deepcopy(offload_buf) if offload_buf is not None
+        else None)
+
+
+def restore_engine(snap: EngineSnapshot):
+    """Rebuild a live ``EngineState`` (device buffers) from a snapshot.
+    Returns ``(state, offload_buf)`` — the buffer is a fresh deep copy, so
+    one snapshot can seed several restores (each kill gets pristine
+    state). The dtypes of every leaf round-trip exactly (the host copies
+    keep them), so the restored run is bit-for-bit the original."""
+    leaves = [jnp.asarray(x) for x in snap.leaves]
+    state = jax.tree_util.tree_unflatten(snap.treedef, leaves)
+    buf = copy.deepcopy(snap.offload) if snap.offload is not None else None
+    return state, buf
+
+
+# ---------------------------------------------------------------------------
+# Scripted ingress faults
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("torn", "dup", "stale", "corrupt_checksum", "flip_token",
+               "oov_token", "bad_max_new", "nan_temp")
+
+
+@dataclass
+class SubmitFault:
+    """One scripted ingress fault, resolved to concrete corruption:
+    possibly-mutated payload fields, integrity-protocol overrides for the
+    submit call, and an optional post-submit arena flip (applied AFTER the
+    checksum was written — the classic RDMA bit-rot scenario)."""
+    kind: Optional[str]
+    tokens: list
+    max_new: int
+    temperature: float
+    submit_kwargs: dict                # seq= / checksum= / committed=
+    flip: Optional[Tuple[int, int]]    # (position, new token value)
+
+    @property
+    def expect_fault(self) -> bool:
+        return self.kind is not None
+
+
+class FaultInjector:
+    """Seeded fault script shared by the device and host replay drivers.
+
+    Determinism contract: ``resolve(idx, ...)`` derives its randomness
+    from ``(seed, idx)`` alone, so the device driver and the host driver
+    (called in any order, any number of times) corrupt request ``idx``
+    identically — the precondition for demanding identical fault-event
+    streams from both engines. The injector also tracks the sequence
+    numbers it issued so duplicate/stale scripts can reference them."""
+
+    def __init__(self, seed: int, vocab: int, p_fault: float = 0.45,
+                 kinds=FAULT_KINDS):
+        self.seed = int(seed)
+        self.vocab = int(vocab)
+        self.p_fault = float(p_fault)
+        self.kinds = tuple(kinds)
+
+    def plan(self, n_requests: int) -> List[Optional[str]]:
+        """The fault script: per-request kind or None (clean). At least
+        one request stays clean so the trace always has surviving
+        traffic to hold the bitwise-stream contract against."""
+        rng = np.random.default_rng(self.seed)
+        kinds = [self.kinds[int(rng.integers(len(self.kinds)))]
+                 if rng.random() < self.p_fault else None
+                 for _ in range(n_requests)]
+        if all(k is not None for k in kinds):
+            kinds[int(rng.integers(n_requests))] = None
+        return kinds
+
+    def kill_window(self, n_windows: int) -> int:
+        """Random window index to kill at (for kill-and-restore scripts)."""
+        rng = np.random.default_rng((self.seed, 0xD1E))
+        return int(rng.integers(1, max(n_windows, 2)))
+
+    def resolve(self, idx: int, kind: Optional[str], *, tokens, max_new: int,
+                temperature: float, issued_seqs: List[int]) -> SubmitFault:
+        """Turn a scripted kind into concrete corruption for request
+        ``idx``. ``issued_seqs`` is the (driver-tracked) list of sequence
+        numbers already submitted — duplicate/stale faults replay one."""
+        rng = np.random.default_rng((self.seed, idx))
+        tokens = list(tokens)
+        kw: dict = {}
+        flip = None
+        if kind == "torn":
+            kw["committed"] = False
+        elif kind in ("dup", "stale") and not issued_seqs:
+            # nothing to duplicate yet: a fresh ring rejects seq -1 as
+            # stale (seq_seen starts at -1), same verdict on both planes
+            kw["seq"] = -1
+        elif kind == "dup":
+            kw["seq"] = int(issued_seqs[int(rng.integers(len(issued_seqs)))])
+        elif kind == "stale":
+            kw["seq"] = int(min(issued_seqs))
+        elif kind == "corrupt_checksum":
+            # any fixed perturbation of the true digest mismatches
+            kw["checksum_xor"] = 0x0001_0001
+        elif kind == "flip_token":
+            pos = int(rng.integers(len(tokens)))
+            flip = (pos, int(tokens[pos]) ^ 0x5)
+        elif kind == "oov_token":
+            tokens[int(rng.integers(len(tokens)))] = \
+                self.vocab + int(rng.integers(1, 7))
+        elif kind == "bad_max_new":
+            max_new = 0 if rng.random() < 0.5 else INT32_MAX
+        elif kind == "nan_temp":
+            temperature = float("nan")
+        return SubmitFault(kind=kind, tokens=tokens, max_new=int(max_new),
+                           temperature=float(temperature),
+                           submit_kwargs=kw, flip=flip)
+
+
+def faulty_submit_device(ring: rb.RingState, slot: int, fault: SubmitFault,
+                         *, request_id: int, arrival: int,
+                         step: int = 0) -> rb.RingState:
+    """Apply one resolved fault to a device ring submission: integrity
+    overrides at submit, then the post-submit arena flip (which leaves the
+    stored checksum stale — exactly what the validator must catch)."""
+    kw = dict(fault.submit_kwargs)
+    xor = kw.pop("checksum_xor", None)
+    if xor is not None:
+        seq = kw.get("seq", rb.next_seq(ring))
+        good = rb.entry_checksum(
+            seq=int(seq), prompt_len=len(fault.tokens),
+            max_new=fault.max_new, arrival=arrival, cached_len=0,
+            slo_class=0, deadline_step=INT32_MAX,
+            temperature=fault.temperature, tokens=fault.tokens)
+        kw["checksum"] = good ^ xor
+    ring = rb.submit_request(ring, slot, tokens=fault.tokens,
+                             request_id=request_id, max_new=fault.max_new,
+                             arrival=arrival, temperature=fault.temperature,
+                             step=step, **kw)
+    if fault.flip is not None:
+        pos, val = fault.flip
+        ring = dataclasses.replace(
+            ring, input_arena=ring.input_arena.at[slot, pos].set(val))
+    return ring
+
+
+def faulty_submit_host(host, fault: SubmitFault, *, request_id: int,
+                       arrival: int) -> int:
+    """The host-mirror twin of ``faulty_submit_device`` — same overrides,
+    same post-submit flip, against ``HostEngine`` state."""
+    kw = dict(fault.submit_kwargs)
+    xor = kw.pop("checksum_xor", None)
+    if xor is not None:
+        seq = kw.get("seq",
+                     max(int(host.seq_seen), int(host.seq.max())) + 1)
+        good = rb.entry_checksum(
+            seq=int(seq), prompt_len=len(fault.tokens),
+            max_new=fault.max_new, arrival=arrival, cached_len=0,
+            slo_class=0, deadline_step=INT32_MAX,
+            temperature=fault.temperature, tokens=fault.tokens)
+        kw["checksum"] = good ^ xor
+        kw["seq"] = int(seq)
+    slot = host.submit(fault.tokens, max_new=fault.max_new,
+                       temperature=fault.temperature, arrival=arrival,
+                       request_id=request_id, **kw)
+    if slot >= 0 and fault.flip is not None:
+        pos, val = fault.flip
+        host.prompt[slot][pos] = val
+    return slot

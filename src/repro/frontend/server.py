@@ -34,6 +34,7 @@ PREFILLING slot's pages are partially written; see ``poll``).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 from dataclasses import dataclass, field
@@ -46,6 +47,7 @@ import numpy as np
 from repro.configs.base import ServeConfig
 from repro.core import engine as eng
 from repro.core import offload as offload_lib
+from repro.core import recovery as recovery_lib
 from repro.core import ring_buffer as rb
 from repro.frontend.prefix_index import PrefixIndex
 from repro.frontend.slot_tracker import SlotTracker
@@ -73,7 +75,10 @@ class Request:
     # request reaches one of: "completed" (full stream), "timed_out"
     # (deadline expired — partial output in ``output``), "preempted"
     # (evicted to the offload buffer, then expired before restore),
-    # "rejected" (bounced at intake by ``intake_queue_limit``).
+    # "rejected" (bounced at intake — queue overload or a malformed
+    # payload caught by submit validation, before a ring slot is
+    # consumed), "faulted" (quarantined by the ring integrity protocol,
+    # watchdog or poison guard — partial output stays in ``output``).
     slo_class: int = 0
     status: str = "pending"
     shared_pages: List[int] = field(default_factory=list)
@@ -83,9 +88,11 @@ class BlinkFrontend:
     def __init__(self, serve: ServeConfig,
                  tokenizer: Optional[BPETokenizer] = None,
                  jitter: Optional[Callable[[], None]] = None,
-                 on_token: Optional[Callable[[int, int, int], None]] = None):
+                 on_token: Optional[Callable[[int, int, int], None]] = None,
+                 vocab: Optional[int] = None):
         self.serve = serve
         self.tokenizer = tokenizer
+        self.vocab = vocab               # token-id range for submit validation
         self.jitter = jitter or (lambda: None)
         self.tracker = SlotTracker(serve.num_slots)
         self.reader = TokenReader(serve.num_slots, on_token=on_token)
@@ -110,6 +117,22 @@ class BlinkFrontend:
         req = Request(self._next_id, tokens, max_new, temperature,
                       submit_wall=time.perf_counter(), slo_class=slo_class)
         self._next_id += 1
+        # frontend-side submit validation: a malformed request bounces at
+        # the DPU edge BEFORE a ring slot is consumed. The ring integrity
+        # protocol downstream is the backstop for corruption IN FLIGHT
+        # (RDMA bit-rot, torn writes), not a substitute for validating
+        # what the client actually sent.
+        malformed = (
+            not tokens
+            or max_new <= 0 or max_new > self.serve.max_new_tokens
+            or (self.vocab is not None
+                and any(t < 0 or t >= self.vocab for t in tokens))
+            or not np.isfinite(temperature) or temperature < 0)
+        if malformed:
+            req.status = "rejected"
+            req.finish_wall = req.submit_wall
+            self.done[req.request_id] = req
+            return req.request_id
         limit = self.serve.intake_queue_limit
         if limit and len(self.queue) >= limit:
             # overload rejection at the DPU edge: the request never touches
@@ -204,6 +227,8 @@ class BlinkFrontend:
             if slot_states[slot] == rb.CANCELLED:
                 if req.status != "preempted":      # offload drop wins
                     req.status = "timed_out"
+            elif slot_states[slot] == rb.FAULTED:
+                req.status = "faulted"             # quarantined, not served
             else:
                 req.status = "completed"
             if self.tokenizer is not None:
@@ -322,7 +347,8 @@ class BlinkServer:
         self.params = params
         self.frontend = BlinkFrontend(serve, tokenizer,
                                       jitter=frontend_jitter,
-                                      on_token=on_token)
+                                      on_token=on_token,
+                                      vocab=api.cfg.vocab_size)
         self.host_jitter = host_jitter or (lambda: None)
         self._enc_len = enc_len
         self.state = eng.init_engine_state(api, serve, seed=seed,
@@ -333,6 +359,11 @@ class BlinkServer:
         self.window_wall: List[float] = []
         # host-DRAM staging for preempted requests' spilled KV (DPU plane)
         self.offload_buf = offload_lib.KVOffloadBuffer()
+        # crash-recovery snapshot (serve.snapshot_every_steps > 0): the
+        # latest window-boundary image of the full engine + spill buffer +
+        # frontend (trie, reader counts, in-flight map)
+        self.snapshot: Optional[recovery_lib.EngineSnapshot] = None
+        self._snapshot_frontend: Optional[BlinkFrontend] = None
 
     def submit(self, prompt, max_new: int, temperature: float = 0.0,
                slo_class: int = 0) -> int:
@@ -344,11 +375,14 @@ class BlinkServer:
         fe = self.frontend
         self.frontend = BlinkFrontend(self.serve, fe.tokenizer,
                                       jitter=fe.jitter,
-                                      on_token=fe.reader.on_token)
+                                      on_token=fe.reader.on_token,
+                                      vocab=fe.vocab)
         self.state = eng.init_engine_state(self.api, self.serve, seed=seed,
                                            enc_len=self._enc_len)
         self.window_wall = []
         self.offload_buf = offload_lib.KVOffloadBuffer()
+        self.snapshot = None
+        self._snapshot_frontend = None
 
     def run_window(self) -> None:
         fe = self.frontend
@@ -389,6 +423,32 @@ class BlinkServer:
             for kind, _rid, slot in events:
                 if kind == "drop" and slot in fe.in_flight:
                     fe.in_flight[slot].status = "preempted"
+        if self.serve.snapshot_every_steps:
+            # crash-recovery snapshot: taken AFTER every DPU-plane touch of
+            # this boundary, so the image is exactly what the next window
+            # would have consumed — restoring replays from here losing
+            # zero committed tokens
+            if int(self.state.step) % self.serve.snapshot_every_steps == 0:
+                self.take_snapshot()
+
+    # -- crash recovery (window-boundary snapshot / restore) -----------------
+    def take_snapshot(self) -> None:
+        """Byte-exact image of engine + spill buffer + frontend (trie,
+        reader counts, in-flight map) at the current window boundary."""
+        self.snapshot = recovery_lib.snapshot_engine(self.state,
+                                                     self.offload_buf)
+        self._snapshot_frontend = copy.deepcopy(self.frontend)
+
+    def restore_snapshot(self) -> None:
+        """Rewind the whole serving stack to the latest snapshot — the
+        recovery path after a window kill. Compiled windows are KEPT (they
+        are pure functions); only state rewinds. Token streams after the
+        restore are identical to the unkilled run."""
+        assert self.snapshot is not None, "no snapshot taken yet"
+        self.state, buf = recovery_lib.restore_engine(self.snapshot)
+        self.offload_buf = buf if buf is not None \
+            else offload_lib.KVOffloadBuffer()
+        self.frontend = copy.deepcopy(self._snapshot_frontend)
 
     def run_until_idle(self, max_windows: int = 1000) -> int:
         n = 0

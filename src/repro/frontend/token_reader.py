@@ -62,11 +62,12 @@ class TokenReader:
             # CANCELLED joins the scan set so a timed-out request's partial
             # output still streams; PREEMPTED/OFFLOADED are read like the
             # decode states (their tokens-so-far must not strand while the
-            # slot waits for offload/restore).
+            # slot waits for offload/restore); FAULTED likewise — a
+            # quarantined request's tokens-so-far drain before release.
             if st not in (rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
                           rb.DECODE_COMPLETED, rb.PREFILL_PROCESSING,
                           rb.PREFILLING, rb.CANCELLED, rb.PREEMPTED,
-                          rb.OFFLOADED):
+                          rb.OFFLOADED, rb.FAULTED):
                 continue
             have = int(self.read_counts[s])
             avail = int(generated[s])
@@ -79,9 +80,10 @@ class TokenReader:
                 self.read_counts[s] = avail
                 self.tokens_read += avail - have
                 found = True
-            # both terminal states complete once their output is drained —
-            # the frontend maps CANCELLED to timed_out/preempted status
-            if st in (rb.DECODE_COMPLETED, rb.CANCELLED) \
+            # terminal states complete once their output is drained — the
+            # frontend maps CANCELLED to timed_out/preempted status and
+            # FAULTED to "faulted"
+            if st in (rb.DECODE_COMPLETED, rb.CANCELLED, rb.FAULTED) \
                     and avail <= self.read_counts[s]:
                 completed.append(s)
                 if s in self.urgent:

@@ -71,6 +71,17 @@ def main():
     ap.add_argument("--intake-limit", type=int, default=0,
                     help="reject new submissions once this many requests "
                          "queue at the frontend (0 = unbounded)")
+    ap.add_argument("--no-ring-checksum", action="store_true",
+                    help="skip payload checksum verification at device "
+                         "admission (sequence/commit-flag checks still run)")
+    ap.add_argument("--watchdog-steps", type=int, default=0,
+                    help="fault a slot making no admission/prefill/decode "
+                         "progress for this many consecutive steps "
+                         "(0 = off; needs --prefill-chunk)")
+    ap.add_argument("--snapshot-every-steps", type=int, default=0,
+                    help="take a byte-exact crash-recovery snapshot every "
+                         "N steps (0 = off; must be a multiple of "
+                         "--window)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -80,6 +91,9 @@ def main():
     if (args.slo_preempt or args.deadline_policy != "none") \
             and not args.prefill_chunk:
         ap.error("SLO overload control runs in the mixed-phase scheduler: "
+                 "pass --prefill-chunk as well")
+    if args.watchdog_steps and not args.prefill_chunk:
+        ap.error("the stall watchdog runs in the mixed-phase scheduler: "
                  "pass --prefill-chunk as well")
     serve = ServeConfig(num_slots=16, max_prompt_len=32,
                         max_new_tokens=args.max_new, decode_batch=8,
@@ -93,7 +107,10 @@ def main():
                         slo_preempt=args.slo_preempt,
                         deadline_policy=args.deadline_policy,
                         slo_ttft_steps=slo_ttft, slo_tpot_steps=slo_tpot,
-                        intake_queue_limit=args.intake_limit)
+                        intake_queue_limit=args.intake_limit,
+                        ring_checksum=not args.no_ring_checksum,
+                        watchdog_steps=args.watchdog_steps,
+                        snapshot_every_steps=args.snapshot_every_steps)
     api = make_model(cfg, attn_backend=serve.attn_backend,
                      attn_pages_per_block=serve.attn_pages_per_block,
                      prefill_block_q=serve.prefill_block_q,

@@ -85,3 +85,73 @@ def test_blink_server_slot_reuse_beyond_capacity():
     srv.run_until_idle(max_windows=40)
     assert len(srv.frontend.done) == 5
     assert all(len(r.output) == 3 for r in srv.frontend.done.values())
+
+
+def test_frontend_rejects_malformed_submissions():
+    """Submit validation is the FIRST line of the fault model: a payload
+    the frontend can prove malformed (empty prompt, out-of-vocab token,
+    nonpositive or oversized max_new, non-finite temperature) is bounced
+    with status "rejected" BEFORE a ring slot is consumed — the ring never
+    sees it, no pages move, and well-formed traffic is unaffected."""
+    cfg = TINY_ARCHS["qwen2-1.5b"]
+    api = make_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    serve = ServeConfig(num_slots=4, max_prompt_len=16, max_new_tokens=8,
+                        decode_batch=2, window=4, admit_per_step=2,
+                        page_size=4, num_pages=32, eos_token=-1)
+    srv = BlinkServer(api, serve, params)
+    bad = [
+        ([], 4, 0.0),                             # empty prompt
+        ([5, cfg.vocab_size + 3, 7], 4, 0.0),     # out-of-vocab token
+        ([5, -1, 7], 4, 0.0),                     # negative token id
+        ([5, 6, 7], 0, 0.0),                      # nonpositive max_new
+        ([5, 6, 7], serve.max_new_tokens + 1, 0.0),  # oversized max_new
+        ([5, 6, 7], 4, float("nan")),             # non-finite temperature
+        ([5, 6, 7], 4, -0.5),                     # negative temperature
+    ]
+    rids = [srv.submit(t, max_new=m, temperature=temp)
+            for t, m, temp in bad]
+    for rid in rids:
+        req = srv.frontend.done[rid]
+        assert req.status == "rejected"
+        assert req.output == []
+    # nothing reached the ring: no slot consumed, no queue entry
+    assert not srv.frontend.queue and not srv.frontend.in_flight
+    assert (np.asarray(srv.state.ring.slot_state) == rb.EMPTY).all()
+    # a well-formed request sails through untouched
+    ok = srv.submit([5, 6, 7, 8], max_new=4)
+    srv.run_until_idle(max_windows=20)
+    assert srv.frontend.done[ok].status == "completed"
+    assert len(srv.frontend.done[ok].output) == 4
+
+
+def test_frontend_surfaces_faulted_status():
+    """A request corrupted AFTER the frontend wrote it (the RDMA bit-rot
+    scenario: arena flip behind the stored checksum) is quarantined by
+    device validation and surfaces as status "faulted"; its slot and
+    pages recycle, and later traffic reuses them."""
+    import dataclasses as _dc
+    cfg = TINY_ARCHS["qwen2-1.5b"]
+    api = make_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    serve = ServeConfig(num_slots=4, max_prompt_len=16, max_new_tokens=8,
+                        decode_batch=2, window=4, admit_per_step=2,
+                        page_size=4, num_pages=32, eos_token=-1)
+    srv = BlinkServer(api, serve, params)
+    rid = srv.submit([5, 6, 7, 8], max_new=4)
+    fe = srv.frontend
+    ring, alloc = fe.flush_submissions(srv.state.ring, 0, srv.state.alloc)
+    (slot,) = [s for s, r in fe.in_flight.items() if r.request_id == rid]
+    ring = _dc.replace(ring,
+                       input_arena=ring.input_arena.at[slot, 1].set(9))
+    srv.state = _dc.replace(srv.state, ring=ring, alloc=alloc)
+    srv.run_until_idle(max_windows=20)
+    req = srv.frontend.done[rid]
+    assert req.status == "faulted"
+    assert req.output == []
+    assert (np.asarray(srv.state.ring.slot_state) == rb.EMPTY).all()
+    # the quarantined slot is clean for reuse
+    rid2 = srv.submit([5, 6, 7, 8], max_new=4)
+    srv.run_until_idle(max_windows=20)
+    assert srv.frontend.done[rid2].status == "completed"
+    assert len(srv.frontend.done[rid2].output) == 4

@@ -132,8 +132,12 @@ def test_fcfs_engine_equals_kernel(seed, k):
     ring = rb.make_ring(serve)
     states = rng.integers(0, 4, S).astype(np.int32)
     arrivals = rng.permutation(S).astype(np.int32)
+    # admission only looks at validated entries (ring integrity protocol);
+    # the Pallas ring-scan kernel is handed the already-validated view, so
+    # the equivalence is over rings where every entry passed validation
     ring = dataclasses.replace(ring, slot_state=jnp.asarray(states),
-                               arrival=jnp.asarray(arrivals))
+                               arrival=jnp.asarray(arrivals),
+                               validated=jnp.ones(S, jnp.int32))
     cand, valid = select_pending_fcfs(ring, k)
     ids_k, found_k = ops.ring_select_topk(
         jnp.asarray(states), jnp.asarray(arrivals),
@@ -159,18 +163,23 @@ def test_fcfs_engine_equals_kernel(seed, k):
 # max_new==1 early finish at the final chunk); it never pauses.
 _LIFECYCLE_CLOSURE = {
     rb.EMPTY: {rb.EMPTY},
+    # FAULTED joins from every state the integrity protocol scopes:
+    # PREFILL_PENDING (validation failure / watchdog on a torn entry),
+    # PREFILLING and DECODE_PROCESSING (poison guard, stall watchdog)
     rb.PREFILL_PENDING: {rb.PREFILL_PENDING, rb.PREFILL_PROCESSING,
                          rb.PREFILLING, rb.DECODE_PROCESSING,
-                         rb.DECODE_PAUSED, rb.DECODE_COMPLETED},
+                         rb.DECODE_PAUSED, rb.DECODE_COMPLETED,
+                         rb.FAULTED},
     rb.PREFILL_PROCESSING: {rb.PREFILL_PROCESSING, rb.DECODE_PROCESSING,
                             rb.DECODE_PAUSED, rb.DECODE_COMPLETED},
     rb.PREFILLING: {rb.PREFILLING, rb.DECODE_PROCESSING,
-                    rb.DECODE_COMPLETED},
+                    rb.DECODE_COMPLETED, rb.FAULTED},
     rb.DECODE_PROCESSING: {rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
-                           rb.DECODE_COMPLETED},
+                           rb.DECODE_COMPLETED, rb.FAULTED},
     rb.DECODE_PAUSED: {rb.DECODE_PROCESSING, rb.DECODE_PAUSED,
                        rb.DECODE_COMPLETED},
     rb.DECODE_COMPLETED: {rb.DECODE_COMPLETED},
+    rb.FAULTED: {rb.FAULTED},
 }
 
 
@@ -320,6 +329,7 @@ _SLO_CLOSURE = {
     rb.PREEMPTED: {rb.PREEMPTED, rb.OFFLOADED, rb.CANCELLED},
     rb.OFFLOADED: {rb.OFFLOADED, rb.DECODE_PAUSED, rb.CANCELLED},
     rb.CANCELLED: {rb.CANCELLED},
+    rb.FAULTED: {rb.FAULTED},
 }
 
 # states a deadline fault may legally be injected into (anything the
@@ -425,6 +435,97 @@ def test_fault_injection_slo_overload(seed, tiny_apis):
     state = eng.drain_completed(state)
     assert int(state.alloc.top) == serve.num_pages
     assert not buf.entries and buf.restores + buf.drops == buf.offloads
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 2))
+def test_fault_injection_page_conservation(seed, tiny_apis):
+    """Scripted ingress faults (``recovery.FaultInjector``: torn writes,
+    duplicate/stale sequences, corrupted checksums, post-submit bit-flips,
+    malformed payloads) against the mixed-phase engine with the stall
+    watchdog armed: every quarantine lands in FAULTED through a legal
+    lifecycle edge, pages are conserved at every window boundary, lanes
+    never leak, and the trace drains — every fault-free request completes,
+    every FAULTED slot releases its pages through the refcounted drain."""
+    from repro.core import engine as eng
+    from repro.core import recovery as rec
+
+    api, params = tiny_apis("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    serve = ServeConfig(num_slots=8, max_prompt_len=16, max_new_tokens=8,
+                        decode_batch=2, window=1, admit_per_step=2,
+                        page_size=4, num_pages=14, eos_token=-1,
+                        prefill_chunk_tokens=4, watchdog_steps=4)
+    fn = _mixed_window_fn(tiny_apis, serve)
+    state = eng.init_engine_state(api, serve)
+    inj = rec.FaultInjector(seed=seed, vocab=api.cfg.vocab_size)
+    n_req = int(rng.integers(3, 7))
+    reqs = [(int(rng.integers(0, 8)),                  # arrival step
+             rng.integers(3, api.cfg.vocab_size,
+                          int(rng.integers(2, 16))).tolist(),
+             int(rng.integers(1, 8)))                  # max_new
+            for _ in range(n_req)]
+    plan = inj.plan(n_req)
+    submitted = {}
+    issued = []
+    prev = np.asarray(state.ring.slot_state)
+    for it in range(150):
+        step = int(state.step)
+        ring = state.ring
+        states_np = np.asarray(ring.slot_state)
+        for i, (arr, toks, max_new) in enumerate(reqs):
+            if arr > step or i in submitted:
+                continue
+            empties = np.where(states_np == rb.EMPTY)[0]
+            if not len(empties):
+                continue
+            fault = inj.resolve(i, plan[i], tokens=toks, max_new=max_new,
+                                temperature=0.0, issued_seqs=issued)
+            slot = int(empties[0])
+            ring = rec.faulty_submit_device(ring, slot, fault,
+                                            request_id=i, arrival=i,
+                                            step=step)
+            issued.append(int(ring.seq[slot]))
+            states_np = np.asarray(ring.slot_state)
+            submitted[i] = slot
+        prev = np.asarray(ring.slot_state)
+        state = dataclasses.replace(state, ring=ring)
+        state = fn(params, state)
+        cur = np.asarray(state.ring.slot_state)
+        for s in range(serve.num_slots):
+            assert cur[s] in _LIFECYCLE_CLOSURE[prev[s]], \
+                f"illegal transition {rb.STATE_NAMES[prev[s]]} -> " \
+                f"{rb.STATE_NAMES[cur[s]]} (slot {s})"
+        # page conservation at every boundary, faults in flight or not
+        rc = np.asarray(state.alloc.refcount)
+        assert int(state.alloc.top) + int((rc > 0).sum()) == serve.num_pages
+        free_now = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
+        assert len(np.unique(free_now)) == len(free_now)
+        # lane hygiene: a quarantined slot frees its lane the same step
+        lanes = np.asarray(state.lane_slot)
+        held = lanes[lanes >= 0]
+        assert len(np.unique(held)) == len(held)
+        assert all(cur[s] in (rb.PREFILLING, rb.DECODE_PROCESSING)
+                   for s in held), "lane points at a non-running slot"
+        if len(submitted) == n_req and all(
+                cur[s] in (rb.DECODE_COMPLETED, rb.FAULTED)
+                for s in submitted.values()):
+            break
+    else:
+        raise AssertionError("fault script wedged the scheduler")
+    # clean requests complete; scripted faults quarantine (a dup/stale
+    # script with nothing issued yet still faults: seq -1 is stale)
+    for i, s in submitted.items():
+        if plan[i] is None:
+            assert cur[s] == rb.DECODE_COMPLETED, \
+                f"clean request {i} did not complete: " \
+                f"{rb.STATE_NAMES[cur[s]]}"
+        else:
+            assert cur[s] == rb.FAULTED, \
+                f"{plan[i]} request {i} not quarantined: " \
+                f"{rb.STATE_NAMES[cur[s]]}"
+    state = eng.drain_completed(state)
+    assert int(state.alloc.top) == serve.num_pages
 
 
 def test_ring_submit_release_protocol():

@@ -375,7 +375,7 @@ TTFT_ONLY = dataclasses.replace(
 OVERLOAD_CONFIGS = {"overload_e2e": OVERLOAD, "preempt_only": PREEMPT_ONLY,
                     "ttft_only": TTFT_ONLY}
 
-_TERMINAL = (rb.DECODE_COMPLETED, rb.CANCELLED)
+_TERMINAL = (rb.DECODE_COMPLETED, rb.CANCELLED, rb.FAULTED)
 
 
 def _random_overload_trace(seed):
@@ -590,3 +590,274 @@ def test_preempt_restore_token_identity():
     # and the host mirror preempts/restores identically
     out_h, _, host = _run_host_overload(PREEMPT_ONLY, reqs)
     assert out_p == out_h and events == host.events
+
+
+# --- fault-tolerant ingress: ring integrity, watchdog, poison quarantine ----
+#
+# The ring is untrusted transport (SmartNIC RDMA: torn, duplicate,
+# reordered and bit-rotted writes are all legal failure modes). The same
+# differential contract extends to faults: every quarantine decision is a
+# pure function of the top-of-step snapshot, so the device engine and the
+# HostEngine mirror must agree on the full ordered fault-EVENT stream and
+# stay bitwise-identical on every surviving request's tokens.
+
+from repro.core import recovery as rec  # noqa: E402  (section-local import)
+
+# stall watchdog armed: torn writes (commit flag never lands) are invisible
+# to validation and must be reaped by the progress watchdog instead
+FAULT_MIXED = dataclasses.replace(MIXED, watchdog_steps=4)
+# the exclusive path validates at intake too (no watchdog there -> no torn
+# scripts: an uncommitted entry legitimately waits forever)
+_EXCL_KINDS = tuple(k for k in rec.FAULT_KINDS if k != "torn")
+
+
+def _random_fault_trace(seed):
+    """Greedy-only traces (survivor bitwise identity is the contract;
+    temperature variation is covered by the clean differentials)."""
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(0, 11)),
+             rng.integers(3, 512, int(rng.integers(2, 25))).tolist(),
+             int(rng.integers(1, 9)), 0.0)
+            for _ in range(int(rng.integers(2, 6)))]
+
+
+def _run_device_faulty(serve, reqs, inj):
+    """Replay a scripted-fault trace through the persistent-window engine.
+    Fault events are recovered from slot-state diffs across the fused step
+    (ascending slot), exactly how a DPU-side observer would see them."""
+    api, params = _model()
+    fn = _window_fn(serve)
+    plan = inj.plan(len(reqs))
+    state = eng.init_engine_state(api, serve, seed=0)
+    slot_of = {}
+    events = []
+    issued = []
+    arrival = 0
+    for step in range(MAX_STEPS):
+        ring = state.ring
+        states_np = np.asarray(ring.slot_state)
+        for i, (arr, toks, max_new, temp) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            empties = np.where(states_np == rb.EMPTY)[0]
+            if not len(empties):
+                continue
+            slot = int(empties[0])
+            fault = inj.resolve(i, plan[i], tokens=toks, max_new=max_new,
+                                temperature=temp, issued_seqs=issued)
+            ring = rec.faulty_submit_device(ring, slot, fault,
+                                            request_id=i, arrival=arrival,
+                                            step=step)
+            issued.append(int(ring.seq[slot]))
+            states_np = np.asarray(ring.slot_state)
+            slot_of[i] = slot
+            arrival += 1
+        pre = np.asarray(ring.slot_state).copy()
+        state = dataclasses.replace(state, ring=ring)
+        state = fn(params, state)
+        post = np.asarray(state.ring.slot_state)
+        rid = np.asarray(state.ring.request_id)
+        for s in np.flatnonzero((post == rb.FAULTED) & (pre != rb.FAULTED)):
+            events.append(("fault", int(rid[s]), int(s)))
+        if len(slot_of) == len(reqs) and all(
+                post[s] in _TERMINAL for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("fault trace did not drain (device)")
+    out = np.asarray(state.ring.output_arena)
+    gen = np.asarray(state.ring.generated)
+    outputs = {i: out[s, :gen[s]].tolist() for i, s in slot_of.items()}
+    final = {i: int(post[s]) for i, s in slot_of.items()}
+    return outputs, final, events, state, plan
+
+
+def _run_host_faulty(serve, reqs, inj):
+    api, params = _model()
+    plan = inj.plan(len(reqs))
+    host = HostEngine(api, serve, params, seed=0)
+    slot_of = {}
+    issued = []
+    arrival = 0
+    for step in range(MAX_STEPS):
+        for i, (arr, toks, max_new, temp) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            fault = inj.resolve(i, plan[i], tokens=toks, max_new=max_new,
+                                temperature=temp, issued_seqs=issued)
+            s = rec.faulty_submit_host(host, fault, request_id=i,
+                                       arrival=arrival)
+            if s < 0:
+                continue
+            issued.append(int(host.seq[s]))
+            slot_of[i] = s
+            arrival += 1
+        host.step()
+        if len(slot_of) == len(reqs) and all(
+                host.slot_state[s] in _TERMINAL
+                for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("fault trace did not drain (host)")
+    outputs = {i: list(host.outputs[s]) for i, s in slot_of.items()}
+    final = {i: int(host.slot_state[s]) for i, s in slot_of.items()}
+    return outputs, final, [e for e in host.events if e[0] == "fault"], host
+
+
+def _assert_fault_device_host(reqs, serve, inj):
+    """Identical fault-event streams, identical terminal states, bitwise
+    token streams for the survivors, zero page/lane leaks on both
+    planes."""
+    dev, dev_final, dev_ev, state, plan = _run_device_faulty(
+        serve, reqs, inj)
+    hst, hst_final, hst_ev, host = _run_host_faulty(serve, reqs, inj)
+    assert dev_final == hst_final, plan
+    assert dev == hst, plan
+    assert dev_ev == hst_ev, plan
+    # scripted faults quarantine; clean requests complete untouched
+    for i, kind in enumerate(plan):
+        if i not in dev_final:
+            continue
+        expect = rb.DECODE_COMPLETED if kind is None else rb.FAULTED
+        assert dev_final[i] == expect, (i, kind, plan)
+    # conservation: quarantine released every page and lane on both planes
+    state = eng.drain_completed(state)
+    assert int(state.alloc.top) == serve.num_pages
+    free = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
+    assert sorted(free.tolist()) == list(range(serve.num_pages))
+    assert len(host.free_pages) == serve.num_pages
+    assert (np.asarray(state.lane_slot) == -1).all()
+    return dev_ev
+
+
+@pytest.mark.parametrize("seed", range(46, 54))
+def test_fault_device_bitwise_equals_host_mixed(seed):
+    reqs = _random_fault_trace(seed)
+    inj = rec.FaultInjector(seed=seed * 31 + 7, vocab=512)
+    _assert_fault_device_host(reqs, FAULT_MIXED, inj)
+
+
+@pytest.mark.parametrize("seed", range(54, 58))
+def test_fault_device_bitwise_equals_host_exclusive(seed):
+    reqs = _random_fault_trace(seed)
+    inj = rec.FaultInjector(seed=seed * 31 + 7, vocab=512,
+                            kinds=_EXCL_KINDS)
+    _assert_fault_device_host(reqs, EXCLUSIVE, inj)
+
+
+def test_fault_traces_exercise_every_fault_kind():
+    """The seeded sweep is only a quarantine differential if every fault
+    kind actually fires and faults. These seeds are known to cover the
+    full kind set between them (deterministic: same trace space as the
+    sweep)."""
+    fired = set()
+    for seed in range(46, 54):
+        reqs = _random_fault_trace(seed)
+        inj = rec.FaultInjector(seed=seed * 31 + 7, vocab=512)
+        plan = inj.plan(len(reqs))
+        _, final, _, _, _ = _run_device_faulty(FAULT_MIXED, reqs, inj)
+        fired |= {plan[i] for i, st_ in final.items()
+                  if st_ == rb.FAULTED and plan[i] is not None}
+    missing = set(rec.FAULT_KINDS) - fired
+    # make any gap deterministic to close: force one trace per missing kind
+    for kind in sorted(missing):
+        inj = rec.FaultInjector(seed=7, vocab=512, p_fault=1.0,
+                                kinds=(kind,))
+        reqs = [(0, [5, 6, 7, 8], 4, 0.0), (0, [9, 10, 11], 4, 0.0)]
+        _, final, ev, _, plan = _run_device_faulty(FAULT_MIXED, reqs, inj)
+        assert rb.FAULTED in final.values(), (kind, plan, ev)
+        fired.add(kind)
+    assert fired == set(rec.FAULT_KINDS)
+
+
+# --- crash recovery: kill the window, restore, identical streams ------------
+
+
+def _restore_serve():
+    # snapshot at every boundary (window=2) so any kill point restores
+    return dataclasses.replace(MIXED, num_pages=48, window=2,
+                               snapshot_every_steps=2)
+
+
+def test_kill_and_restore_token_identity():
+    """Kill the persistent window mid-serve at a random boundary, restore
+    the latest snapshot, run to idle: every request's greedy stream is
+    BIT-IDENTICAL to the unkilled run and nothing is lost or duplicated —
+    the snapshot captures ring + allocator + KV pages + RNG fold state
+    together, and every decision is a pure function of that state."""
+    api, params = _model()
+    serve = _restore_serve()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(3, 512, int(rng.integers(4, 20))).tolist()
+               for _ in range(5)]
+
+    def submit_all(srv):
+        return [srv.submit(p, max_new=8) for p in prompts]
+
+    ref_srv = BlinkServer(api, serve, params)
+    ids = submit_all(ref_srv)
+    ref_srv.run_until_idle(max_windows=200)
+    ref = {r: tuple(ref_srv.frontend.done[r].output) for r in ids}
+    assert all(len(v) == 8 for v in ref.values())
+
+    inj = rec.FaultInjector(seed=23, vocab=512)
+    kill_at = inj.kill_window(6)
+    srv = BlinkServer(api, serve, params)
+    ids2 = submit_all(srv)
+    for _ in range(kill_at):
+        srv.run_window()
+    assert srv.snapshot is not None     # snapshot_every_steps == window
+    srv.restore_snapshot()              # the "crash": live state discarded
+    srv.run_until_idle(max_windows=200)
+    got = {r: tuple(srv.frontend.done[r].output) for r in ids2}
+    assert ref == got                   # tokens lost = 0, none duplicated
+    # double-kill: restoring twice from the same snapshot still converges
+    srv.restore_snapshot()
+    srv.run_until_idle(max_windows=200)
+    got2 = {r: tuple(srv.frontend.done[r].output) for r in ids2}
+    assert ref == got2
+
+
+def test_restore_with_faults_in_flight():
+    """Snapshot/restore composes with quarantine: a trace carrying
+    scripted faults is killed and restored, and the surviving requests'
+    streams still match the unkilled faulty run (FAULTED slots restore as
+    FAULTED or re-fault identically — the verdict is deterministic)."""
+    api, params = _model()
+    serve = dataclasses.replace(_restore_serve(), watchdog_steps=4)
+    inj = rec.FaultInjector(seed=5, vocab=512, p_fault=0.6)
+    prompts = [(0, np.random.default_rng(i).integers(
+        3, 512, 8 + i).tolist(), 6, 0.0) for i in range(4)]
+
+    def run(kill):
+        plan = inj.plan(len(prompts))
+        srv = BlinkServer(api, serve, params)
+        issued = []
+        ring = srv.state.ring
+        for i, (_a, toks, max_new, temp) in enumerate(prompts):
+            fault = inj.resolve(i, plan[i], tokens=toks, max_new=max_new,
+                                temperature=temp, issued_seqs=issued)
+            slot = i  # ring is empty: slots assigned in order
+            ring = rec.faulty_submit_device(ring, slot, fault,
+                                            request_id=i, arrival=i)
+            issued.append(int(ring.seq[slot]))
+        srv.state = dataclasses.replace(srv.state, ring=ring)
+        for _ in range(kill if kill else 1):
+            srv.run_window()
+        if kill:
+            srv.restore_snapshot()
+        for _ in range(60):
+            srv.run_window()
+            states_np = np.asarray(srv.state.ring.slot_state)
+            if np.isin(states_np[:len(prompts)], _TERMINAL).all():
+                break
+        out = np.asarray(srv.state.ring.output_arena)
+        gen = np.asarray(srv.state.ring.generated)
+        states_np = np.asarray(srv.state.ring.slot_state)
+        return ({i: out[i, :gen[i]].tolist() for i in range(len(prompts))},
+                {i: int(states_np[i]) for i in range(len(prompts))}, plan)
+
+    ref_out, ref_final, plan = run(kill=0)
+    assert rb.FAULTED in ref_final.values(), plan   # faults actually fired
+    got_out, got_final, _ = run(kill=2)
+    assert ref_out == got_out
+    assert ref_final == got_final
