@@ -5,6 +5,11 @@ scaled to smoke size) against both engines in ISOLATION. Reports P99 TTFT,
 P99 TPOT (device-step-derived, converted with measured step time) and
 completed-request throughput. The paper's claim: Blink has the lowest
 pre-saturation latency envelope and the highest plateau.
+
+The Blink run serves with the device telemetry plane on and extracts its
+latency numbers from the Prometheus exporter over the drained counter
+rows + per-request event records — the same path a scrape would read —
+rather than peeking at raw ring stamps.
 """
 from __future__ import annotations
 
@@ -19,7 +24,8 @@ from repro.core import engine as eng
 from repro.core import ring_buffer as rb
 from repro.core.host_engine import HostEngine
 from repro.data.pipeline import make_prompts, sharegpt_like_trace
-from repro.telemetry.metrics import from_ring, percentiles
+from repro.telemetry import export as tel_export
+from repro.telemetry.metrics import percentiles, request_records
 
 N_REQ = 16
 RATES = [2.0, 6.0, 16.0]    # requests per second of *simulated* time
@@ -37,6 +43,7 @@ def trace_for(rate, api):
 
 
 def run_blink(api, params, serve, prompts, outs, arrivals):
+    serve = dataclasses.replace(serve, telemetry=True)
     window_fn = eng.make_serve_window(api, serve)
     state = eng.init_engine_state(api, serve)
     state = window_fn(params, state)         # warm
@@ -44,6 +51,7 @@ def run_blink(api, params, serve, prompts, outs, arrivals):
     pending = list(zip(range(N_REQ), prompts, outs, arrivals))
     t0 = time.perf_counter()
     completed = set()
+    tel_rows, drained = [], 0
     while len(completed) < N_REQ:
         step_now = int(state.step)
         ring = state.ring
@@ -55,6 +63,13 @@ def run_blink(api, params, serve, prompts, outs, arrivals):
                 pending.remove((i, p, o, a))
         state = dataclasses.replace(state, ring=ring)
         state = window_fn(params, state)
+        # window-boundary drain, like BlinkServer: the per-step counter
+        # ring is window-deep, so one read per window loses nothing
+        rows = np.asarray(state.telemetry.rows)
+        cur = int(state.step)
+        for s in range(max(drained, cur - rows.shape[0]), cur):
+            tel_rows.append(rows[s % rows.shape[0]].copy())
+        drained = cur
         st = np.asarray(state.ring.slot_state)
         for s in np.where(st == rb.DECODE_COMPLETED)[0]:
             completed.add(int(s))
@@ -62,8 +77,20 @@ def run_blink(api, params, serve, prompts, outs, arrivals):
             break
     wall = time.perf_counter() - t0
     steps = int(state.step)
-    m = from_ring(state.ring, sorted(completed))
-    return m, steps, wall
+    recs = request_records(state.ring, sorted(completed),
+                           events=state.telemetry)
+    return recs, np.stack(tel_rows), steps, wall
+
+
+def _scrape(text: str) -> dict:
+    """Parse sample lines of a Prometheus text exposition."""
+    out = {}
+    for line in text.splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        name, val = line.rsplit(" ", 1)
+        out[name] = float(val)
+    return out
 
 
 def run_host(api, params, serve, prompts, outs, arrivals, jitter=None):
@@ -114,23 +141,30 @@ def main() -> None:
     serve = bench_serve_config()
     for rate in RATES:
         prompts, outs, arrivals = trace_for(rate, api)
-        m, steps_b, wall_b = run_blink(api, params, serve, prompts, outs,
-                                       arrivals)
+        recs, rows, steps_b, wall_b = run_blink(api, params, serve, prompts,
+                                                outs, arrivals)
         # latency = scheduler steps x that engine's MEASURED step time —
         # the step count captures queueing (identical policy); the step time
-        # captures where the scheduler runs (the architectural difference)
+        # captures where the scheduler runs (the architectural difference).
+        # The Blink numbers come off the exporter: render the drained
+        # telemetry into the Prometheus text format and scrape it back.
         st_b = wall_b / max(steps_b, 1)
-        ttft_b = percentiles([t * st_b for t in m.ttft_steps])
-        tpot_b = percentiles([t * st_b for t in m.tpot_steps])
+        scraped = _scrape(tel_export.prometheus_text(
+            rows, records=recs, step_time_s=st_b))
+        p99_ttft_b = scraped['blink_ttft_seconds{quantile="p99"}']
+        p99_tpot_b = scraped['blink_tpot_seconds{quantile="p99"}']
+        tok_b = scraped["blink_tokens_total"]
+        assert tok_b == sum(r["n_tokens"] for r in recs), \
+            "counter rows disagree with per-request token counts"
         h_ttft, h_tpot, steps_h, wall_h = run_host(
             api, params, serve, prompts, outs, arrivals)
         st_h = wall_h / max(steps_h, 1)
         ttft_h = percentiles([t * st_h for t in h_ttft])
         tpot_h = percentiles([t * st_h for t in h_tpot])
         emit(f"table6_rate{rate:g}_blink", st_b * 1e6,
-             f"p99_ttft_ms={ttft_b['p99']*1e3:.1f};"
-             f"p99_tpot_ms={tpot_b['p99']*1e3:.2f};"
-             f"tput_tok_s={sum(outs)/wall_b:.1f}")
+             f"p99_ttft_ms={p99_ttft_b*1e3:.1f};"
+             f"p99_tpot_ms={p99_tpot_b*1e3:.2f};"
+             f"tput_tok_s={tok_b/wall_b:.1f}")
         emit(f"table6_rate{rate:g}_hostbase", st_h * 1e6,
              f"p99_ttft_ms={ttft_h['p99']*1e3:.1f};"
              f"p99_tpot_ms={tpot_h['p99']*1e3:.2f};"

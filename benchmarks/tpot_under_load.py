@@ -37,6 +37,11 @@ token-identical across all policies — asserted, the scheduler must be
 invisible in the tokens. The chunk sweep records the chunk-size <-> TTFT
 tradeoff (smaller chunks = more steps to a long prompt's first token).
 
+A telemetry-overhead row reruns the busy-lane workload with the device
+telemetry plane off and on: steps/s must stay within noise and the greedy
+token streams bitwise identical (in-step counters are fused arithmetic,
+not host readbacks).
+
 Writes JSON records that ``benchmarks/report.py`` renders.
 
 REPRO_BENCH_SMOKE=1 shrinks the sweep to one tiny point (CI dry run).
@@ -288,6 +293,32 @@ def _run_fault_row(api, params, serve: ServeConfig):
             "faults_quarantined": 1, "snapshot_mib": snap_mib}
 
 
+def _telemetry_overhead_row(api, params, serve, n_steps: int):
+    """Telemetry-plane cost datapoint: the SAME busy-lane workload with
+    ``serve.telemetry`` off and on. The instrumentation is pure in-step
+    array arithmetic fused into the window executable, so the steps/s
+    ratio must stay within noise — and the greedy token streams must be
+    bitwise identical (the counters read scheduler state; they never
+    influence it)."""
+    outs, rates = {}, {}
+    for on in (False, True):
+        sv = dataclasses.replace(serve, telemetry=on)
+        busy_out, _stamps, walls, _ttft = _run(api, params, sv, n_steps)
+        outs[on] = busy_out
+        rates[on] = len(walls) / float(walls.sum())
+    assert outs[True] == outs[False], \
+        "telemetry changed greedy decode output"
+    ratio = rates[True] / rates[False]
+    # interpret-mode timing is noisy; the bound only catches a regression
+    # to host-side readbacks (those cost integer multiples, not percents)
+    assert ratio > 0.5, f"telemetry overhead ratio {ratio:.2f}"
+    return {"kind": "tpot_under_load", "policy": "telemetry_overhead",
+            "chunk": serve.prefill_chunk_tokens, "chunk_max": 0,
+            "n_steps": n_steps,
+            "steps_per_s_off": rates[False], "steps_per_s_on": rates[True],
+            "on_off_ratio": ratio}
+
+
 def _gaps(busy_stamps, walls):
     """Inter-token gaps on the busy lanes, in steps and wall seconds."""
     cum = np.concatenate([[0.0], np.cumsum(walls)])
@@ -410,6 +441,17 @@ def main() -> None:
          f"faults_quarantined={fault_rec['faults_quarantined']};"
          f"snapshot_every={fault_rec['snapshot_every_steps']};"
          f"snapshot_mib={fault_rec['snapshot_mib']:.1f}")
+
+    # -- telemetry overhead row: same workload, counters off vs on ---------
+    # (the CPU-free-observability claim in measurable form: in-step
+    # telemetry is fused arithmetic, so throughput stays within noise and
+    # the token streams are bitwise identical)
+    tel_rec = _telemetry_overhead_row(api, params, _serve(sweep[0], smoke),
+                                      n_steps)
+    records.append(tel_rec)
+    emit("tpot_load_telemetry_overhead", tel_rec["on_off_ratio"],
+         f"steps_per_s_off={tel_rec['steps_per_s_off']:.2f};"
+         f"steps_per_s_on={tel_rec['steps_per_s_on']:.2f}")
 
     # the claims this benchmark exists to pin down: the mixed scheduler's
     # inter-token gap is exactly one step (bounded by ~1 chunk-step of

@@ -272,6 +272,18 @@ class ServeConfig:
     # 0 = no snapshots. Must be a multiple of ``window`` (snapshots only
     # exist at window boundaries).
     snapshot_every_steps: int = 0
+    # --- telemetry plane (CPU-free observability) -------------------------
+    # Carry a TelemetryState of SoA counter/event arrays inside
+    # EngineState, updated with pure jnp diffs by every step and drained
+    # at window boundaries (src/repro/telemetry/state.py). Off = the
+    # instrumentation compiles out entirely; on = identical Pallas
+    # dispatch count, zero host callbacks, bitwise-identical streams.
+    telemetry: bool = False
+    # Bound on each slot's event log (event code + step stamp per entry).
+    # Writes past the bound are dropped; ev_count keeps counting so the
+    # exporter can surface the drop. Size it at roughly
+    # 6 + max_prompt_len / prefill_chunk_tokens (chunk events dominate).
+    telemetry_events_per_slot: int = 16
 
     def __post_init__(self):
         if self.prefill_chunk_tokens < 0:
@@ -410,6 +422,11 @@ class ServeConfig:
                 f"snapshot_every_steps={self.snapshot_every_steps} is not "
                 f"a multiple of window={self.window}: snapshots are taken "
                 f"by the DPU plane and only window boundaries exist there")
+        if self.telemetry_events_per_slot < 1:
+            raise ValueError(
+                f"telemetry_events_per_slot must be >= 1 (every request "
+                f"logs at least its submission), got "
+                f"{self.telemetry_events_per_slot}")
 
     def deadline_steps(self, slo_class: int, max_new: int):
         """Relative deadline (engine steps from submission) for a request

@@ -123,6 +123,7 @@ from repro.core import ring_buffer as rb
 from repro.core.sampling import sample_tokens
 from repro.models import cache as cache_lib
 from repro.models.api import ModelApi, cache_for_serve
+from repro.telemetry import state as tel_lib
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -137,6 +138,8 @@ class EngineState:
     key: jax.Array              # PRNG key
     step: jax.Array             # [] int32 global device step counter
     windows_done: jax.Array     # [] int32
+    # CPU-free telemetry plane (None = instrumentation compiled out)
+    telemetry: Optional[tel_lib.TelemetryState] = None
 
 
 def _check_attn_backend(api: ModelApi, serve: ServeConfig) -> None:
@@ -230,6 +233,8 @@ def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
         key=jax.random.PRNGKey(seed),
         step=jnp.asarray(0, jnp.int32),
         windows_done=jnp.asarray(0, jnp.int32),
+        telemetry=tel_lib.make_telemetry_state(serve)
+        if serve.telemetry else None,
     )
 
 
@@ -874,6 +879,14 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
     # -- the per-iteration scheduler functions ------------------------------
 
     def engine_step_exclusive(params, state: EngineState) -> EngineState:
+        if serve.telemetry:
+            # boundary transitions (submission) observed before any
+            # sub-phase; top-of-step snapshot taken after, like the host
+            state = dataclasses.replace(
+                state, telemetry=tel_lib.device_prologue(
+                    state.telemetry, state.ring, state.step))
+        ring_top = state.ring
+        lane_top = state.lane_slot
         # intake validation first: admission below only ever sees entries
         # the integrity protocol accepted
         state = intake_branch(state)
@@ -898,6 +911,18 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             lambda s: prefill_branch(params, s, cand, cand_valid),
             decode_or_idle,
             state)
+        if serve.telemetry:
+            # a prefill step pauses every lane; otherwise all top-of-step
+            # lanes decode (the decode_or_idle predicate)
+            lanes = jnp.where(
+                do_prefill, 0, jnp.sum((lane_top >= 0).astype(jnp.int32)))
+            state = dataclasses.replace(
+                state, telemetry=tel_lib.device_epilogue(
+                    state.telemetry, ring_top, state.ring, state.step,
+                    mixed=False, wd_fired=jnp.asarray(0, jnp.int32),
+                    decode_lanes=lanes,
+                    chunk_dispatch=do_prefill.astype(jnp.int32),
+                    free_pages=state.alloc.top))
         return dataclasses.replace(
             state,
             step=state.step + 1,
@@ -905,6 +930,12 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         )
 
     def engine_step_mixed(params, state: EngineState) -> EngineState:
+        if serve.telemetry:
+            # boundary transitions (submission, offload, restore, drop)
+            # observed before any sub-phase touches the ring
+            state = dataclasses.replace(
+                state, telemetry=tel_lib.device_prologue(
+                    state.telemetry, state.ring, state.step))
         # top-of-step snapshot for the watchdog's progress accounting
         ring_top = state.ring
 
@@ -917,6 +948,12 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
                 & (state.ring.stall_steps >= serve.watchdog_steps))
             state = jax.lax.cond(wd_any, watchdog_branch,
                                  lambda s: s, state)
+        wd_fired = None
+        if serve.telemetry:
+            # faults so far are the watchdog's alone (intake runs next)
+            wd_fired = jnp.sum(((state.ring.slot_state == rb.FAULTED)
+                                & (ring_top.slot_state != rb.FAULTED))
+                               .astype(jnp.int32))
 
         # 0v. intake validation: admission below only ever sees entries
         # the integrity protocol accepted
@@ -979,8 +1016,9 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             n_busy = jnp.sum(decode_active.astype(jnp.int32))
             budget = adaptive_chunk_budget(n_busy, Bd,
                                            serve.prefill_block_q, Cmax)
+        do_chunk = jnp.any(state.ring.slot_state == rb.PREFILLING)
         state = jax.lax.cond(
-            jnp.any(state.ring.slot_state == rb.PREFILLING),
+            do_chunk,
             lambda s: chunk_branch(params, s, budget),
             lambda s: s,
             state)
@@ -1007,6 +1045,17 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             state = dataclasses.replace(
                 state, ring=dataclasses.replace(
                     r1, stall_steps=stall.astype(jnp.int32)))
+        if serve.telemetry:
+            # 5. telemetry epilogue: counter row + in-step events, all
+            # derived from the same top/end-of-step diff the watchdog's
+            # progress accounting uses (no branch internals touched)
+            state = dataclasses.replace(
+                state, telemetry=tel_lib.device_epilogue(
+                    state.telemetry, ring_top, state.ring, state.step,
+                    mixed=True, wd_fired=wd_fired,
+                    decode_lanes=jnp.sum(decode_active.astype(jnp.int32)),
+                    chunk_dispatch=do_chunk.astype(jnp.int32),
+                    free_pages=state.alloc.top))
         return dataclasses.replace(
             state,
             step=state.step + 1,

@@ -35,6 +35,7 @@ from repro.core import ring_buffer as rb
 from repro.core.sampling import sample_tokens
 from repro.frontend.prefix_index import PrefixIndex
 from repro.models.api import ModelApi, cache_for_serve
+from repro.telemetry import state as tel_lib
 
 
 class HostEngine:
@@ -97,6 +98,19 @@ class HostEngine:
         self.submit_time = np.zeros(S, np.float64)
         self.first_token_time = np.full(S, -1.0, np.float64)
         self.token_times: List[List[float]] = [[] for _ in range(S)]
+        # CPU-free telemetry mirror (numpy twins of TelemetryState; the
+        # differential harness compares these arrays element-for-element
+        # with the drained device plane)
+        self.tel_on = serve.telemetry
+        E = serve.telemetry_events_per_slot
+        self.tel_rows: List[np.ndarray] = []
+        self.tel_ev_code = np.zeros((S, E), np.int32)
+        self.tel_ev_step = np.full((S, E), -1, np.int32)
+        self.tel_ev_count = np.zeros(S, np.int32)
+        self.tel_ev_seq = np.full(S, -1, np.int64)
+        self.tel_last_state = np.zeros(S, np.int32)
+        self.tel_submit_step = np.full(S, -1, np.int32)
+        self._tel_info = {"wd_fired": 0, "decode_lanes": 0, "chunk_disp": 0}
 
         # jitted compute steps (the GPU work; CUDA-graph analogue)
         cfg = api.cfg
@@ -174,6 +188,15 @@ class HostEngine:
         self.submit_time = np.zeros(S, np.float64)
         self.first_token_time = np.full(S, -1.0, np.float64)
         self.token_times = [[] for _ in range(S)]
+        E = serve.telemetry_events_per_slot
+        self.tel_rows = []
+        self.tel_ev_code = np.zeros((S, E), np.int32)
+        self.tel_ev_step = np.full((S, E), -1, np.int32)
+        self.tel_ev_count = np.zeros(S, np.int32)
+        self.tel_ev_seq = np.full(S, -1, np.int64)
+        self.tel_last_state = np.zeros(S, np.int32)
+        self.tel_submit_step = np.full(S, -1, np.int32)
+        self._tel_info = {"wd_fired": 0, "decode_lanes": 0, "chunk_disp": 0}
 
     # -- frontend ----------------------------------------------------------
     def submit(self, tokens, max_new: int, temperature: float = 0.0,
@@ -234,6 +257,9 @@ class HostEngine:
         self.slot_state[s] = rb.PREFILL_PENDING
         self.submit_time[s] = time.perf_counter()
         self.first_token_time[s] = -1.0
+        # device twin stamps ring.submit_step at submit_request; here the
+        # DPU-plane submission happens between steps, i.e. at step_count
+        self.tel_submit_step[s] = self.step_count
         return s
 
     def drain(self, slot: int) -> List[int]:
@@ -366,12 +392,60 @@ class HostEngine:
         return ((st == rb.PREFILL_PENDING) & (self.validated == 0)) \
             | (st == rb.DECODE_PROCESSING)
 
+    # -- telemetry mirror ---------------------------------------------------
+    def _tel_prologue(self) -> None:
+        """Numpy twin of ``telemetry.state.device_prologue``: boundary
+        transitions (submission, offload service) diffed against the
+        previous end-of-step snapshot, before any sub-phase runs."""
+        mask, code, stamp, submitted = tel_lib.boundary_candidates(
+            np, last_state=self.tel_last_state, cur_state=self.slot_state,
+            cur_seq=self.seq, ev_seq=self.tel_ev_seq,
+            submit_step=self.tel_submit_step, step=self.step_count)
+        self.tel_ev_count = np.where(
+            submitted, 0, self.tel_ev_count).astype(np.int32)
+        tel_lib.host_scatter(self.tel_ev_code, self.tel_ev_step,
+                             self.tel_ev_count, mask, code, stamp)
+        self.tel_ev_seq = np.where(submitted, self.seq, self.tel_ev_seq)
+
+    def _tel_epilogue(self, st0, pd0, gen0, val0) -> None:
+        """Numpy twin of ``telemetry.state.device_epilogue``: this step's
+        counter row + in-step events from the same top/end-of-step diff."""
+        S = self.serve.num_slots
+        prompt_len = np.array([0 if p is None else len(p)
+                               for p in self.prompt], np.int32)
+        masks, codes, counters = tel_lib.step_candidates(
+            np, mixed=self.serve.prefill_chunk_tokens > 0,
+            top_state=st0, top_pd=pd0, top_gen=gen0, top_val=val0,
+            end_state=self.slot_state, end_pd=self.prefill_done,
+            end_gen=self.generated, end_val=self.validated,
+            cached=self.slot_cached, prompt_len=prompt_len)
+        info = self._tel_info
+        self.tel_rows.append(np.array([
+            self.step_count, info["decode_lanes"], counters["tokens"],
+            counters["chunk_tokens"], info["chunk_disp"],
+            counters["admitted"], counters["cancelled"],
+            counters["preempted"], counters["resumed"],
+            counters["faulted"], info["wd_fired"], len(self.free_pages),
+            counters["trie_hit_tokens"]], np.int32))
+        tel_lib.host_scatter(
+            self.tel_ev_code, self.tel_ev_step, self.tel_ev_count,
+            np.stack(masks, axis=1), np.stack(codes, axis=1),
+            np.full((S, len(masks)), self.step_count, np.int32))
+        self.tel_last_state = self.slot_state.copy()
+
     # -- one host-driven scheduler iteration --------------------------------
     def step(self) -> None:
+        if self.tel_on:
+            self._tel_prologue()
+            tel_top = (self.slot_state.copy(), self.prefill_done.copy(),
+                       self.generated.copy(), self.validated.copy())
+        self._tel_info = {"wd_fired": 0, "decode_lanes": 0, "chunk_disp": 0}
         if self.serve.prefill_chunk_tokens > 0:
             self._step_mixed()
         else:
             self._step_exclusive()
+        if self.tel_on:
+            self._tel_epilogue(*tel_top)
         # flush this step's quarantines as ordered events (ascending slot —
         # the order the differential harness reconstructs device faults in)
         for s in sorted(self._step_faults):
@@ -452,8 +526,11 @@ class HostEngine:
         pending, free_lanes = self._scan_pending()
         admit = self._admit_scan(pending, free_lanes)
         if admit:
+            self._tel_info["chunk_disp"] = 1
             self._run_prefill(admit, free_lanes)
         else:
+            self._tel_info["decode_lanes"] = \
+                int(np.count_nonzero(self.lane_slot >= 0))
             self._run_decode()
 
     def _step_mixed(self) -> None:
@@ -479,6 +556,7 @@ class HostEngine:
                                               >= serve.watchdog_steps)
             for s in np.flatnonzero(wd):
                 self._fault(int(s))
+            self._tel_info["wd_fired"] = int(np.count_nonzero(wd))
         # 0v. intake validation (the integrity protocol's device side)
         self._validate_intake()
         # 0a. deadline cancellation over the top-of-step snapshot
@@ -494,6 +572,7 @@ class HostEngine:
         slots = np.maximum(self.lane_slot, 0)
         decode_active = (self.lane_slot >= 0) & \
             (self.slot_state[slots] == rb.DECODE_PROCESSING)
+        self._tel_info["decode_lanes"] = int(np.count_nonzero(decode_active))
         # 0c. restored victims re-acquire lanes ahead of fresh admission
         if serve.slo_preempt:
             self._resume_grant()
@@ -514,6 +593,9 @@ class HostEngine:
             budget = int(adaptive_chunk_budget(
                 int(decode_active.sum()), serve.decode_batch,
                 serve.prefill_block_q, serve.prefill_chunk_tokens_max))
+        # same predicate the device's hoisted chunk cond evaluates
+        self._tel_info["chunk_disp"] = \
+            int((self.slot_state == rb.PREFILLING).any())
         self._run_chunk(budget)
         # 3. decode all snapshot lanes
         self._run_decode(decode_active)

@@ -55,6 +55,8 @@ from repro.frontend.token_reader import TokenReader
 from repro.frontend.tokenizer import BPETokenizer
 from repro.models import cache as cache_lib
 from repro.models.api import ModelApi
+from repro.telemetry import export as tel_export
+from repro.telemetry import state as tel_lib
 
 
 @dataclass
@@ -364,6 +366,14 @@ class BlinkServer:
         # frontend (trie, reader counts, in-flight map)
         self.snapshot: Optional[recovery_lib.EngineSnapshot] = None
         self._snapshot_frontend: Optional[BlinkFrontend] = None
+        # telemetry drain (serve.telemetry): counter rows accumulate here,
+        # per-request event timelines are keyed by request_id. Both are
+        # read at window boundaries, exactly like the token reader — the
+        # device plane never pushes.
+        self.telemetry_rows: List[np.ndarray] = []
+        self._request_events: Dict[int, list] = {}
+        self._drained_step = 0
+        self._tel_snapshot = None
 
     def submit(self, prompt, max_new: int, temperature: float = 0.0,
                slo_class: int = 0) -> int:
@@ -383,6 +393,10 @@ class BlinkServer:
         self.offload_buf = offload_lib.KVOffloadBuffer()
         self.snapshot = None
         self._snapshot_frontend = None
+        self.telemetry_rows = []
+        self._request_events = {}
+        self._drained_step = 0
+        self._tel_snapshot = None
 
     def run_window(self) -> None:
         fe = self.frontend
@@ -403,6 +417,9 @@ class BlinkServer:
         self.state = window_fn(self.params, self.state)
         jax.block_until_ready(self.state.step)
         self.window_wall.append(time.perf_counter() - t0)
+        if self.serve.telemetry:
+            # drain BEFORE poll: completing slots still map to requests
+            self._drain_telemetry()
         kvc = self.state.cache.get("kv")
         ring, alloc, kvc = fe.poll(self.state.ring, self.state.alloc, kvc)
         st = self.state
@@ -438,6 +455,9 @@ class BlinkServer:
         self.snapshot = recovery_lib.snapshot_engine(self.state,
                                                      self.offload_buf)
         self._snapshot_frontend = copy.deepcopy(self.frontend)
+        self._tel_snapshot = ([r.copy() for r in self.telemetry_rows],
+                              copy.deepcopy(self._request_events),
+                              self._drained_step)
 
     def restore_snapshot(self) -> None:
         """Rewind the whole serving stack to the latest snapshot — the
@@ -449,6 +469,11 @@ class BlinkServer:
         self.offload_buf = buf if buf is not None \
             else offload_lib.KVOffloadBuffer()
         self.frontend = copy.deepcopy(self._snapshot_frontend)
+        if self._tel_snapshot is not None:
+            rows, events, drained = self._tel_snapshot
+            self.telemetry_rows = [r.copy() for r in rows]
+            self._request_events = copy.deepcopy(events)
+            self._drained_step = drained
 
     def run_until_idle(self, max_windows: int = 1000) -> int:
         n = 0
@@ -460,6 +485,78 @@ class BlinkServer:
         return n
 
     # -- telemetry -------------------------------------------------------------
+    def _drain_telemetry(self) -> None:
+        """Read the device telemetry ring at a window boundary.
+
+        Counter rows for steps ``[_drained_step, state.step)`` come out of
+        the per-step ring (depth = window, so one drain per window never
+        loses a row); each in-flight slot's event log is re-read whole and
+        keyed by request id — timelines grow monotonically until terminal,
+        so overwriting is idempotent."""
+        tel = self.state.telemetry
+        if tel is None:
+            return
+        cur = int(self.state.step)
+        rows = np.asarray(tel.rows)
+        depth = rows.shape[0]
+        for s in range(max(self._drained_step, cur - depth), cur):
+            self.telemetry_rows.append(rows[s % depth].copy())
+        self._drained_step = cur
+        ev_code = np.asarray(tel.ev_code)
+        ev_step = np.asarray(tel.ev_step)
+        ev_count = np.asarray(tel.ev_count)
+        for slot, req in self.frontend.in_flight.items():
+            self._request_events[req.request_id] = tel_lib.events_of_slot(
+                ev_code, ev_step, ev_count, slot)
+
+    def step_time_s(self) -> float:
+        """Measured mean engine step time — the step→seconds scale for
+        exported spans and latency summaries."""
+        if not self.window_wall:
+            return 0.0
+        return float(np.mean(self.window_wall)) / max(self.serve.window, 1)
+
+    def telemetry_records(self) -> List[dict]:
+        """Per-request records built from the drained event timelines.
+
+        Shaped like ``metrics.request_records`` output (minus ring-stamp
+        ITL, which needs live token stamps) so the exporters accept them
+        directly. ``terminal`` is the frontend status — it distinguishes
+        ``timed_out`` from ``preempted`` drops, which the ring's CANCELLED
+        state alone cannot."""
+        recs = []
+        fe = self.frontend
+        reqs = list(fe.done.values()) + list(fe.in_flight.values())
+        for req in reqs:
+            ev = self._request_events.get(req.request_id, [])
+            stamps: Dict[str, int] = {}
+            for name, step in ev:
+                stamps.setdefault(name, step)
+            ttft = None
+            if "first_token" in stamps and "submitted" in stamps:
+                ttft = stamps["first_token"] - stamps["submitted"]
+            recs.append({
+                "slot": req.slot, "request_id": req.request_id,
+                "terminal": req.status, "n_tokens": len(req.output),
+                "submit_step": stamps.get("submitted", -1),
+                "events": ev, "ttft_steps": ttft, "tpot_steps": None,
+                "itl_steps": [],
+            })
+        return recs
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of everything drained so far."""
+        rows = np.stack(self.telemetry_rows) if self.telemetry_rows \
+            else np.zeros((0, tel_lib.N_COUNTERS), np.int64)
+        return tel_export.prometheus_text(
+            rows, records=self.telemetry_records(),
+            step_time_s=self.step_time_s())
+
+    def trace_json(self) -> dict:
+        """Chrome-trace / Perfetto JSON object of all request spans."""
+        return tel_export.perfetto_trace(self.telemetry_records(),
+                                         self.step_time_s() or 1e-6)
+
     def request_metrics(self) -> List[dict]:
         out = []
         for req in self.frontend.done.values():
@@ -468,10 +565,13 @@ class BlinkServer:
             ntok = len(req.output)
             tpot = ((req.finish_wall - req.first_token_wall) / max(ntok - 1, 1)
                     if req.finish_wall > 0 else float("nan"))
-            out.append({"request_id": req.request_id, "ttft": ttft,
-                        "tpot": tpot, "tokens": ntok,
-                        "latency": req.finish_wall - req.submit_wall,
-                        "cached_len": req.cached_len,
-                        "prompt_len": len(req.tokens),
-                        "slo_class": req.slo_class, "status": req.status})
+            rec = {"request_id": req.request_id, "ttft": ttft,
+                   "tpot": tpot, "tokens": ntok,
+                   "latency": req.finish_wall - req.submit_wall,
+                   "cached_len": req.cached_len,
+                   "prompt_len": len(req.tokens),
+                   "slo_class": req.slo_class, "status": req.status}
+            if self.serve.telemetry:
+                rec["events"] = self._request_events.get(req.request_id, [])
+            out.append(rec)
         return out

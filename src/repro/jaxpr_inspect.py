@@ -63,6 +63,24 @@ def count_pallas_calls(fn, *args, name_contains: str) -> int:
     return n
 
 
+def count_primitives(fn, *args, names) -> dict:
+    """Count equations by primitive name across the whole traced
+    computation of ``fn`` (sub-jaxprs included).
+
+    ``names`` is an iterable of primitive names (e.g. ``("pallas_call",
+    "io_callback", "debug_callback")``); the result maps each requested
+    name to its eqn count, zero when absent. Used by the telemetry tests
+    to prove instrumentation adds no host callbacks and no extra kernel
+    dispatch sites."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    counts = {n: 0 for n in names}
+    for j in iter_jaxprs(jaxpr.jaxpr):
+        for eqn in j.eqns:
+            if eqn.primitive.name in counts:
+                counts[eqn.primitive.name] += 1
+    return counts
+
+
 def max_intermediate_bytes(fn, *args) -> int:
     """Largest single intermediate (bytes) in the traced computation."""
     jaxpr = jax.make_jaxpr(fn)(*args)

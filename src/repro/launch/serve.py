@@ -82,6 +82,17 @@ def main():
                     help="take a byte-exact crash-recovery snapshot every "
                          "N steps (0 = off; must be a multiple of "
                          "--window)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="device-resident telemetry plane: per-step "
+                         "counter rows + per-request event timelines, "
+                         "updated in-step with pure array ops (zero host "
+                         "callbacks) and drained at window boundaries")
+    ap.add_argument("--metrics-out", default="",
+                    help="write Prometheus text exposition here at exit "
+                         "(implies --telemetry)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of request "
+                         "spans here at exit (implies --telemetry)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -110,7 +121,9 @@ def main():
                         intake_queue_limit=args.intake_limit,
                         ring_checksum=not args.no_ring_checksum,
                         watchdog_steps=args.watchdog_steps,
-                        snapshot_every_steps=args.snapshot_every_steps)
+                        snapshot_every_steps=args.snapshot_every_steps,
+                        telemetry=(args.telemetry or bool(args.metrics_out)
+                                   or bool(args.trace_out)))
     api = make_model(cfg, attn_backend=serve.attn_backend,
                      attn_pages_per_block=serve.attn_pages_per_block,
                      prefill_block_q=serve.prefill_block_q,
@@ -141,6 +154,21 @@ def main():
         tag = "" if m["status"] == "completed" else f" [{m['status']}]"
         print(f"  req {m['request_id']} (class {m['slo_class']}): "
               f"{m['tokens']} tokens, ttft {m['ttft']*1e3:.0f}ms{tag}")
+    if serve.telemetry:
+        from repro.telemetry.export import span_summaries
+        print(f"telemetry: {len(srv.telemetry_rows)} step rows drained, "
+              f"step time {srv.step_time_s()*1e3:.2f}ms")
+        for line in span_summaries(srv.telemetry_records()):
+            print(f"  {line}")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                f.write(srv.metrics_text())
+            print(f"wrote Prometheus metrics -> {args.metrics_out}")
+        if args.trace_out:
+            import json
+            with open(args.trace_out, "w") as f:
+                json.dump(srv.trace_json(), f)
+            print(f"wrote Perfetto trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,192 @@
+"""Telemetry exporters: Prometheus text exposition and Perfetto traces.
+
+The device telemetry plane produces two raw streams (see
+``telemetry/state.py``): per-step counter rows and a per-slot event log
+of ``(code, step)`` stamps. This module turns those into the two
+standard observability formats without touching the hot path:
+
+  * :func:`prometheus_text` — the Prometheus text exposition format
+    (counters summed over drained rows, gauges from the latest row,
+    optional latency summaries as quantile-labelled gauges);
+  * :func:`perfetto_trace` — a Chrome-trace / Perfetto JSON object whose
+    spans are event step stamps multiplied by the measured mean step
+    time (the engine is a fixed-shape ``fori_loop``, so steps are the
+    natural clock and one wall-time scale converts them exactly);
+  * :func:`span_summaries` — compact per-request phase durations for the
+    CLI final report.
+
+Everything here runs on the host after drain; nothing is jitted.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.telemetry import state as tel_lib
+from repro.telemetry.metrics import percentiles
+
+#: Row columns exported as monotonically increasing counters (summed
+#: over drained rows). The rest are point-in-time gauges.
+_COUNTER_COLS = (
+    "tokens", "chunk_tokens", "chunk_dispatches", "admitted", "cancelled",
+    "preempted", "resumed", "faulted", "watchdog_fires", "trie_hit_tokens",
+)
+_GAUGE_COLS = ("decode_lanes", "free_pages")
+
+_HELP = {
+    "tokens": "Decode tokens produced across all lanes.",
+    "chunk_tokens": "Prompt tokens prefetched into KV by chunked prefill.",
+    "chunk_dispatches": "Steps that launched a prefill chunk dispatch.",
+    "admitted": "Requests admitted from the submission ring.",
+    "cancelled": "Requests cancelled (deadline or explicit).",
+    "preempted": "Decode-lane preemptions by the overload controller.",
+    "resumed": "Paused requests re-admitted onto a decode lane.",
+    "faulted": "Requests terminated by fault containment.",
+    "watchdog_fires": "Watchdog liveness expirations.",
+    "trie_hit_tokens": "Prompt tokens served from the prefix trie.",
+    "decode_lanes": "Decode lanes active in the most recent step.",
+    "free_pages": "Free KV pages after the most recent step.",
+    "steps": "Engine steps covered by the drained telemetry rows.",
+}
+
+
+def _rows_array(rows) -> np.ndarray:
+    a = np.asarray(rows, np.int64)
+    if a.ndim == 1:
+        a = a.reshape(1, -1)
+    return a
+
+
+def prometheus_text(rows, *, records: Optional[List[dict]] = None,
+                    step_time_s: Optional[float] = None,
+                    prefix: str = "blink") -> str:
+    """Render drained counter rows in Prometheus text exposition format.
+
+    ``rows`` is the concatenation of drained per-step rows (any
+    row-iterable; column order = ``state.COUNTERS``). When ``records``
+    (from ``metrics.request_records``) and ``step_time_s`` are supplied,
+    TTFT/TPOT quantiles are appended as labelled gauges in seconds."""
+    a = _rows_array(rows)
+    lines: List[str] = []
+
+    def emit(name: str, help_key: str, kind: str, value) -> None:
+        lines.append(f"# HELP {prefix}_{name} {_HELP.get(help_key, help_key)}")
+        lines.append(f"# TYPE {prefix}_{name} {kind}")
+        lines.append(f"{prefix}_{name} {value}")
+
+    emit("steps_total", "steps", "counter", int(a.shape[0]) if a.size else 0)
+    for col in _COUNTER_COLS:
+        v = int(a[:, tel_lib.COL[col]].sum()) if a.size else 0
+        emit(f"{col}_total", col, "counter", v)
+    for col in _GAUGE_COLS:
+        v = int(a[-1, tel_lib.COL[col]]) if a.size else 0
+        emit(col, col, "gauge", v)
+
+    if records is not None and step_time_s is not None:
+        for metric, key in (("ttft", "ttft_steps"), ("tpot", "tpot_steps")):
+            xs = [r[key] * step_time_s for r in records if r[key] is not None]
+            if not xs:
+                continue
+            stats = percentiles(xs)
+            name = f"{metric}_seconds"
+            lines.append(f"# HELP {prefix}_{name} Step-stamp {metric.upper()}"
+                         " scaled by measured step time.")
+            lines.append(f"# TYPE {prefix}_{name} gauge")
+            for q, v in stats.items():
+                if np.isfinite(v):
+                    lines.append(f'{prefix}_{name}{{quantile="{q}"}} {v:.6g}')
+    return "\n".join(lines) + "\n"
+
+
+def _span(name: str, ts_us: float, dur_us: float, tid: int, args: dict) -> dict:
+    return {"name": name, "ph": "X", "ts": ts_us, "dur": max(dur_us, 0.0),
+            "pid": 1, "tid": tid, "cat": "request", "args": args}
+
+
+def request_spans(record: dict, step_time_s: float) -> List[dict]:
+    """Chrome-trace events for one request record.
+
+    Phases are cut at the canonical lifecycle stamps: ``queued`` =
+    submitted→admitted, ``prefill`` = admitted→first token, ``decode`` =
+    first token→terminal. Preempt/offload/restore/resume show up as
+    instant markers inside the decode span rather than splitting it —
+    the stall is already visible in the counter rows and excluded from
+    ITL by the metrics layer."""
+    us = step_time_s * 1e6
+    ev: dict = {}
+    for name, step in record["events"]:
+        ev.setdefault(name, step)
+    tid = record["slot"]
+    args = {"request_id": record["request_id"],
+            "terminal": record["terminal"], "n_tokens": record["n_tokens"]}
+    terminal_step = None
+    for name in ("completed", "cancelled", "faulted"):
+        if name in ev:
+            terminal_step = ev[name]
+    out: List[dict] = []
+    sub = ev.get("submitted", record["submit_step"])
+    adm = ev.get("admitted")
+    ft = ev.get("first_token")
+    if adm is not None:
+        out.append(_span("queued", sub * us, (adm - sub) * us, tid, args))
+        end = ft if ft is not None else terminal_step
+        if end is not None:
+            out.append(_span("prefill", adm * us, (end - adm) * us, tid, args))
+    if ft is not None and terminal_step is not None:
+        out.append(_span("decode", ft * us, (terminal_step - ft) * us, tid,
+                         args))
+    for name, step in record["events"]:
+        if name in ("preempted", "offloaded", "restored", "resumed",
+                    "watchdog", "chunk"):
+            out.append({"name": name, "ph": "i", "ts": step * us, "pid": 1,
+                        "tid": tid, "s": "t", "cat": "request", "args": args})
+    return out
+
+
+def perfetto_trace(records: Sequence[dict], step_time_s: float) -> dict:
+    """Chrome-trace / Perfetto JSON object for a set of request records.
+
+    Load the result (``json.dump``-ed) in ``ui.perfetto.dev`` or
+    ``chrome://tracing``. One track (tid) per ring slot."""
+    events: List[dict] = []
+    seen_tids = set()
+    for rec in records:
+        events.extend(request_spans(rec, step_time_s))
+        tid = rec["slot"]
+        if tid not in seen_tids:
+            seen_tids.add(tid)
+            events.append({"name": "thread_name", "ph": "M", "pid": 1,
+                           "tid": tid,
+                           "args": {"name": f"slot {tid}"}})
+    events.append({"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+                   "args": {"name": "blink-engine"}})
+    return {"traceEvents": events,
+            "displayTimeUnit": "ms",
+            "otherData": {"step_time_s": step_time_s}}
+
+
+def span_summaries(records: Sequence[dict]) -> List[str]:
+    """One compact line per request for the CLI final report."""
+    out = []
+    for rec in sorted(records, key=lambda r: r["request_id"]):
+        ev = {}
+        for name, step in rec["events"]:
+            ev.setdefault(name, step)
+        terminal_step = None
+        for name in ("completed", "cancelled", "faulted"):
+            if name in ev:
+                terminal_step = ev[name]
+        sub = ev.get("submitted", rec["submit_step"])
+        adm, ft = ev.get("admitted"), ev.get("first_token")
+        queued = (adm - sub) if adm is not None else None
+        prefill = (ft - adm) if (adm is not None and ft is not None) else None
+        decode = ((terminal_step - ft)
+                  if (ft is not None and terminal_step is not None) else None)
+        fmt = lambda v: "-" if v is None else f"{v}"
+        out.append(
+            f"req {rec['request_id']:>3} slot {rec['slot']:>2} "
+            f"{rec['terminal']:<16} tokens={rec['n_tokens']:>4} "
+            f"queued={fmt(queued)} prefill={fmt(prefill)} "
+            f"decode={fmt(decode)} (steps)")
+    return out

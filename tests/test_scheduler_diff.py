@@ -137,10 +137,12 @@ def _random_trace(seed):
     return _materialize(trace, seed)
 
 
-def _run_device(serve, reqs, *, check_no_stall=False):
+def _run_device(serve, reqs, *, check_no_stall=False, on_step=None):
     """Replay a trace through the persistent-window engine (window=1 so
     submissions land at exact step boundaries, mirroring the host's
-    per-step control). Returns (outputs by request idx, final state)."""
+    per-step control). Returns (outputs by request idx, final state).
+    ``on_step`` (if given) observes the state after every window — the
+    telemetry differentials use it to drain the one-step counter ring."""
     api, params = _model()
     fn = _window_fn(serve)
     state = eng.init_engine_state(api, serve, seed=0)
@@ -164,6 +166,8 @@ def _run_device(serve, reqs, *, check_no_stall=False):
             arrival += 1
         state = dataclasses.replace(state, ring=ring)
         state = fn(params, state)
+        if on_step is not None:
+            on_step(state)
         states_np = np.asarray(state.ring.slot_state)
         if len(slot_of) == len(reqs) and all(
                 states_np[s] == rb.DECODE_COMPLETED for s in slot_of.values()):
@@ -396,7 +400,7 @@ def _random_overload_trace(seed):
             for (a, t, m, temp), s in zip(reqs, slo)]
 
 
-def _run_device_overload(serve, reqs):
+def _run_device_overload(serve, reqs, *, on_step=None):
     """Replay an SLO trace through the persistent-window engine at
     window=1 with ``service_overload`` at every window boundary — the
     full device plane. Returns (outputs, drained state, ordered events,
@@ -434,6 +438,8 @@ def _run_device_overload(serve, reqs):
         pre = np.asarray(ring.slot_state).copy()
         state = dataclasses.replace(state, ring=ring)
         state = fn(params, state)
+        if on_step is not None:
+            on_step(state)
         post = np.asarray(state.ring.slot_state)
         rid = np.asarray(state.ring.request_id)
         # in-window decisions, recovered from the ring (cancel sub-phase
@@ -621,7 +627,7 @@ def _random_fault_trace(seed):
             for _ in range(int(rng.integers(2, 6)))]
 
 
-def _run_device_faulty(serve, reqs, inj):
+def _run_device_faulty(serve, reqs, inj, *, on_step=None):
     """Replay a scripted-fault trace through the persistent-window engine.
     Fault events are recovered from slot-state diffs across the fused step
     (ascending slot), exactly how a DPU-side observer would see them."""
@@ -655,6 +661,8 @@ def _run_device_faulty(serve, reqs, inj):
         pre = np.asarray(ring.slot_state).copy()
         state = dataclasses.replace(state, ring=ring)
         state = fn(params, state)
+        if on_step is not None:
+            on_step(state)
         post = np.asarray(state.ring.slot_state)
         rid = np.asarray(state.ring.request_id)
         for s in np.flatnonzero((post == rb.FAULTED) & (pre != rb.FAULTED)):
@@ -861,3 +869,114 @@ def test_restore_with_faults_in_flight():
     got_out, got_final, _ = run(kill=2)
     assert ref_out == got_out
     assert ref_final == got_final
+
+
+# --- telemetry plane: identical counter/event streams device vs host ---------
+#
+# The telemetry plane (``repro.telemetry.state``) derives every counter and
+# event from (top-of-step, end-of-step) ring snapshot diffs, OUTSIDE the
+# branch bodies — so the HostEngine mirror computing the same diffs over
+# numpy arrays must produce IDENTICAL counter rows and per-slot event logs
+# over any trace, including overload and fault sections. And because the
+# instrumentation only reads scheduler state, turning it on must not move
+# a single token.
+
+from repro.telemetry import state as tel_state  # noqa: E402
+
+
+def _tel_collector(rows):
+    """``on_step`` hook: drain the (window=1, depth-1) counter ring."""
+    def hook(state):
+        r = np.asarray(state.telemetry.rows)
+        rows.append(r[(int(state.step) - 1) % r.shape[0]].copy())
+    return hook
+
+
+def _assert_telemetry_streams_equal(dev_rows, tel, host):
+    dev_rows = np.stack(dev_rows)
+    host_rows = np.stack(host.tel_rows)
+    assert dev_rows.shape == host_rows.shape, \
+        (dev_rows.shape, host_rows.shape)
+    assert (dev_rows == host_rows).all(), \
+        np.argwhere(dev_rows != host_rows)
+    assert (np.asarray(tel.ev_code) == host.tel_ev_code).all()
+    assert (np.asarray(tel.ev_step) == host.tel_ev_step).all()
+    assert (np.asarray(tel.ev_count) == host.tel_ev_count).all()
+    return dev_rows
+
+
+TEL_CONFIGS = {"mixed": MIXED, "exclusive": EXCLUSIVE,
+               "adaptive_mp3": ADAPTIVE_MP}
+
+
+@pytest.mark.parametrize("cfg_name", sorted(TEL_CONFIGS))
+@pytest.mark.parametrize("seed", range(58, 61))
+def test_telemetry_device_stream_equals_host(cfg_name, seed):
+    serve = dataclasses.replace(TEL_CONFIGS[cfg_name], telemetry=True)
+    reqs = _random_trace(seed)
+    rows = []
+    dev, state = _run_device(serve, reqs, on_step=_tel_collector(rows))
+    hst, _, host = _run_host(serve, reqs)
+    assert dev == hst
+    got = _assert_telemetry_streams_equal(rows, state.telemetry, host)
+    # the stream isn't vacuous: every request was admitted and counted,
+    # and the token counter totals the drained streams exactly
+    assert got[:, tel_state.COL["admitted"]].sum() == len(reqs)
+    assert got[:, tel_state.COL["tokens"]].sum() == \
+        sum(len(v) for v in dev.values())
+
+
+@pytest.mark.parametrize("cfg_name,seed",
+                         [("overload_e2e", 41), ("overload_e2e", 44),
+                          ("ttft_only", 45)])
+def test_telemetry_overload_stream_equals_host(cfg_name, seed):
+    """Overload sections too: in-step cancellations and lane preemptions
+    land in the counter row of the step that decided them, and boundary
+    decisions (offload/restore/drop) surface as events at the next step's
+    prologue — identically on both planes. (Known-firing (config, seed)
+    pairs from the overload sweep.)"""
+    serve = dataclasses.replace(OVERLOAD_CONFIGS[cfg_name], telemetry=True)
+    reqs = _random_overload_trace(seed)
+    rows = []
+    dev, state, events, _buf, _ = _run_device_overload(
+        serve, reqs, on_step=_tel_collector(rows))
+    hst, _, host = _run_host_overload(serve, reqs)
+    assert dev == hst
+    got = _assert_telemetry_streams_equal(rows, state.telemetry, host)
+    kinds = [k for k, _r, _s in events]
+    assert got[:, tel_state.COL["cancelled"]].sum() == kinds.count("cancel")
+    assert got[:, tel_state.COL["preempted"]].sum() == kinds.count("preempt")
+    assert kinds.count("cancel") + kinds.count("preempt") > 0, \
+        "trace exercised no overload decisions — differential vacuous"
+
+
+@pytest.mark.parametrize("seed", [46, 49])
+def test_telemetry_fault_stream_equals_host(seed):
+    """Fault sections: intake rejections, watchdog reaps and poison
+    quarantines all increment the ``faulted`` counter in the deciding
+    step's row and stamp a terminal ``faulted`` event — identically on
+    both planes, one count per quarantined request."""
+    serve = dataclasses.replace(FAULT_MIXED, telemetry=True)
+    reqs = _random_fault_trace(seed)
+    inj = rec.FaultInjector(seed=seed * 31 + 7, vocab=512)
+    rows = []
+    dev, final, _ev, state, _plan = _run_device_faulty(
+        serve, reqs, inj, on_step=_tel_collector(rows))
+    inj2 = rec.FaultInjector(seed=seed * 31 + 7, vocab=512)
+    hst, hst_final, _hev, host = _run_host_faulty(serve, reqs, inj2)
+    assert dev == hst and final == hst_final
+    got = _assert_telemetry_streams_equal(rows, state.telemetry, host)
+    n_faulted = sum(1 for v in final.values() if v == rb.FAULTED)
+    assert got[:, tel_state.COL["faulted"]].sum() == n_faulted
+    assert n_faulted > 0, "trace quarantined nothing — differential vacuous"
+
+
+@pytest.mark.parametrize("seed", [3, 17])
+def test_telemetry_bitwise_token_identity_on_off(seed):
+    """The counters read scheduler state; they never influence it: the
+    same trace (temperatures included) serves bitwise-identically with
+    telemetry on and off."""
+    reqs = _random_trace(seed)
+    on, _ = _run_device(dataclasses.replace(MIXED, telemetry=True), reqs)
+    off, _ = _run_device(MIXED, reqs)
+    assert on == off
