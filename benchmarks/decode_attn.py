@@ -25,6 +25,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.kernels import ops, ref
+from repro.kernels.ragged_attention import build_cu_lens
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "decode_attn")
@@ -99,6 +100,53 @@ def main() -> None:
              f"pallas_MB={pb/1e6:.2f};bytes_ratio={gb/pb:.1f};"
              f"max_err={err:.1e}")
 
+    # --- ragged unified kernel, decode-shaped (q_len=1 rows) + the
+    # pages_per_block autotune sweep. The unified engine serves decode
+    # lanes through kernels.ragged_attention; this row checks the decode
+    # special case agrees with the dedicated paged kernel and picks the
+    # page-fetch granularity (one datapoint: the mid sweep geometry).
+    live, max_kv = sweep[min(1, len(sweep) - 1)]
+    mb = max_kv // PS
+    P = B * mb + 1
+    q = jax.random.normal(keys[0], (B, KV, G, HD), jnp.float32)
+    kp = jax.random.normal(keys[1], (P, PS, KV, HD), jnp.float32)
+    vp = jax.random.normal(keys[2], (P, PS, KV, HD), jnp.float32)
+    bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+    kv_lens = jnp.full((B,), live, jnp.int32)
+    T = 8  # decode rows ride the ragged grid as q_len=1, left-padded
+    q_r = jnp.zeros((B, T, KV * G, HD), jnp.float32
+                    ).at[:, -1].set(q.reshape(B, KV * G, HD))
+    # the unified path sources the CURRENT token's K/V from the in-batch
+    # suffix (pre-pool); mirror the paged setup by copying the pool entry
+    # at the newest live position into the suffix row
+    pos = live - 1
+    page = bt[:, pos // PS]
+    k_r = jnp.zeros((B, T, KV, HD), jnp.float32
+                    ).at[:, -1].set(kp[page, pos % PS])
+    v_r = jnp.zeros((B, T, KV, HD), jnp.float32
+                    ).at[:, -1].set(vp[page, pos % PS])
+    cu_q, cu_kv = build_cu_lens(jnp.full((B,), 1, jnp.int32), kv_lens - 1)
+    expect = ref.paged_attention_ref(q, kp, vp, bt, kv_lens)
+    autotune = []
+    for ppb in (1, 2, 4):
+        us_r, out_r = _time(ops.ragged_attention, q_r, k_r, v_r, cu_q,
+                            cu_kv, bt, k_pages=kp, v_pages=vp, reps=1,
+                            block_q=T, pages_per_block=ppb)
+        err_r = float(jnp.max(jnp.abs(
+            out_r[:, -1].reshape(B, KV, G, HD) - expect)))
+        autotune.append({"pages_per_block": ppb, "ragged_us": us_r,
+                         "max_err_vs_paged": err_r})
+        emit(f"decode_attn_ragged_live{live}_ppb{ppb}", us_r,
+             f"max_err_vs_paged={err_r:.1e}")
+        assert err_r < 1e-4
+    best = min(autotune, key=lambda r: r["ragged_us"])
+    records.append({"kind": "decode_attn_ragged_autotune",
+                    "live_len": live, "max_kv": max_kv, "block_q": T,
+                    "sweep": autotune,
+                    "best_pages_per_block": best["pages_per_block"]})
+    emit(f"decode_attn_ragged_autotune_live{live}", best["ragged_us"],
+         f"best_pages_per_block={best['pages_per_block']}")
+
     if os.environ.get("REPRO_BENCH_SMOKE") != "1":
         # keep the committed sweep datapoints out of CI dry runs
         with open(os.path.join(OUT_DIR, "sweep.json"), "w") as f:
@@ -107,6 +155,8 @@ def main() -> None:
     # invariants the sweep is meant to demonstrate
     by_live = {}
     for r in records:
+        if r["kind"] != "decode_attn":
+            continue
         by_live.setdefault(r["live_len"], []).append(r)
     # pallas bytes depend on live_len only; gather bytes on max_kv only
     for live, rs in by_live.items():

@@ -5,28 +5,38 @@ per token tracks 1/throughput; interference collapses baseline throughput at
 constant power, inflating their mJ/token 69-182% while Blink stays within
 21%. We reproduce the mechanism with the telemetry.energy wall-power model
 applied to the measured throughputs of both engines, isolated + interfered.
+
+Rides table7's modern harness: both engines serve the mixed-phase stack
+(chunked prefill, batched chunk step) and the Blink leg's token counts
+come off the telemetry exporter scrape. REPRO_BENCH_SMOKE=1 shrinks the
+trace; full runs commit records under ``experiments/fig8_energy/``.
 """
 from __future__ import annotations
 
-import time
+import json
+import os
 
 import numpy as np
 
-from benchmarks.common import (bench_model, bench_serve_config, emit,
-                               make_jitter)
-from benchmarks.table7_interference import (JITTER_MEAN_S, OUT_TOKENS,
-                                            run_blink, run_host)
+from benchmarks.common import bench_model, emit, make_jitter
+from benchmarks.table7_interference import (JITTER_MEAN_S, _smoke,
+                                            mixed_phase_serve, run_blink,
+                                            run_host)
 from repro.telemetry.energy import EnergyReport
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "fig8_energy")
 
 N_REQ = 10
 
 
 def main() -> None:
     api, params = bench_model()
-    serve = bench_serve_config()
+    serve = mixed_phase_serve()
+    n_req = 4 if _smoke() else N_REQ
     rng = np.random.default_rng(5)
     prompts = [rng.integers(3, api.cfg.vocab_size, 10).tolist()
-               for _ in range(N_REQ)]
+               for _ in range(n_req)]
     jit = make_jitter(JITTER_MEAN_S)
 
     results = {}
@@ -49,6 +59,18 @@ def main() -> None:
                        / results["blink_iso"].mj_per_token - 1) * 100
     emit("fig8_energy_inflation_pct", 0.0,
          f"blink={inflation_blink:.0f};host={inflation_host:.0f}")
+
+    if not _smoke():
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(os.path.join(OUT_DIR, "sweep.json"), "w") as f:
+            json.dump([{
+                "kind": "fig8_energy", "n_req": n_req,
+                "mixed_phase": True, "telemetry": True,
+                "mj_per_token": {k: r.mj_per_token
+                                 for k, r in results.items()},
+                "inflation_pct": {"blink": inflation_blink,
+                                  "host": inflation_host},
+            }], f, indent=1)
 
 
 if __name__ == "__main__":

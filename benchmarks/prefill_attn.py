@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.jaxpr_inspect import max_intermediate_bytes
 from repro.kernels import ops, ref
+from repro.kernels.ragged_attention import build_cu_lens
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "prefill_attn")
@@ -124,6 +125,45 @@ def main() -> None:
              f"pallas_peak_MB={pb/1e6:.2f};bytes_ratio={gb/pb:.1f};"
              f"max_err={err:.1e}")
 
+    # --- ragged unified kernel, prefill-shaped (fresh rows, cached=0) +
+    # the block_q autotune sweep. The unified engine serves prefill chunks
+    # through kernels.ragged_attention; this row checks the pure-causal
+    # special case against the flash oracle and picks the q tile (one
+    # datapoint: the mid sweep geometry).
+    bucket, batch = sweep[min(1, len(sweep) - 1)]
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(keys[0], (batch, bucket, KV * G, HD), jnp.float32)
+    k = jax.random.normal(keys[1], (batch, bucket, KV, HD), jnp.float32)
+    v = jax.random.normal(keys[2], (batch, bucket, KV, HD), jnp.float32)
+    offs = jnp.asarray(
+        [bucket - max(1, (b + 1) * bucket // batch) for b in range(batch)],
+        jnp.int32)
+    q = q * (jnp.arange(bucket)[None, :, None, None] >= offs[:, None, None,
+                                                            None])
+    # no cached prefix: a 1-page dummy pool + all -1 block tables
+    kp = jnp.zeros((1, 16, KV, HD), jnp.float32)
+    bt = jnp.full((batch, 1), -1, jnp.int32)
+    cu_q, cu_kv = build_cu_lens((bucket - offs).astype(jnp.int32),
+                                jnp.zeros((batch,), jnp.int32))
+    expect = ref.flash_prefill_ref(q, k, v, offs)
+    autotune = []
+    for bq in sorted({min(32, bucket), min(128, bucket)}):
+        us_r, out_r = _time(ops.ragged_attention, q, k, v, cu_q, cu_kv,
+                            bt, k_pages=kp, v_pages=kp, reps=1,
+                            block_q=bq, pages_per_block=1)
+        err_r = float(jnp.max(jnp.abs(out_r - expect)))
+        autotune.append({"block_q": bq, "ragged_us": us_r,
+                         "max_err_vs_flash": err_r})
+        emit(f"prefill_attn_ragged_T{bucket}_bq{bq}", us_r,
+             f"max_err_vs_flash={err_r:.1e}")
+        assert err_r < 1e-4
+    best = min(autotune, key=lambda r: r["ragged_us"])
+    records.append({"kind": "prefill_attn_ragged_autotune",
+                    "bucket_len": bucket, "batch": batch, "sweep": autotune,
+                    "best_block_q": best["block_q"]})
+    emit(f"prefill_attn_ragged_autotune_T{bucket}", best["ragged_us"],
+         f"best_block_q={best['block_q']}")
+
     if not smoke:  # keep the committed datapoints out of CI dry runs
         with open(os.path.join(OUT_DIR, "sweep.json"), "w") as f:
             json.dump(records, f, indent=1)
@@ -132,6 +172,8 @@ def main() -> None:
 
     # invariants the sweep is meant to demonstrate
     for r in records:
+        if r["kind"] != "prefill_attn":
+            continue
         # the dense path really materialises the T^2 logits ...
         assert r["gather_measured_peak_bytes"] >= r["gather_peak_bytes"] / 2
         # ... and the flash path really doesn't (tile/output-sized temps)

@@ -20,6 +20,8 @@ PREFIX_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..",
                                 "experiments", "prefix_cache")
 TPOT_LOAD_DIR = os.path.join(os.path.dirname(__file__), "..",
                              "experiments", "tpot_under_load")
+UNIFIED_ATTN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                                "experiments", "unified_attn")
 
 
 def load_all():
@@ -112,6 +114,10 @@ def print_tpot_load(recs):
     print("| policy | chunk | chunk max | dispatches/step | p99 gap ms | "
           "max gap ms | p99 gap steps | max gap steps | long TTFT steps |")
     print("|---|---|---|---|---|---|---|---|---|")
+    # the overload_slo row (added by the SLO PR) carries its own schema —
+    # interactive-class TTFT instead of the long-prompt TTFT column
+    slo = [r for r in recs if "long_ttft_steps_mean" not in r]
+    recs = [r for r in recs if "long_ttft_steps_mean" in r]
     for r in sorted(recs, key=lambda r: (r["chunk"], r.get("chunk_max", 0))):
         disp = r.get("prefill_dispatches_per_step")
         print(f"| {r['policy']} | {r['chunk'] or '-'} | "
@@ -134,6 +140,16 @@ def print_tpot_load(recs):
           "that row's own config (plus a max_prefills_per_step=4 probe) — "
           "the batched chunk step keeps it at 1. Wall clock is "
           "interpret-mode.)")
+    for r in sorted(slo, key=lambda r: r.get("offered_load_x", 0)):
+        print(f"\nOverload SLO row ({r['policy']}, "
+              f"{r.get('offered_load_x', 0):.0f}x load, "
+              f"{r.get('slo_classes')} classes): interactive TTFT "
+              f"{r['interactive_ttft_steps_mean']:.1f} steps mean "
+              f"({r.get('interactive_finished')} finished), batch p99 gap "
+              f"{r.get('batch_p99_gap_steps', 0):.0f} steps "
+              f"({r.get('preemptions')} preemptions, "
+              f"{r.get('restores')} restores) — the interactive class "
+              f"holds its 1-step decode cadence by preempting batch lanes.")
 
 
 def print_decode_attn(recs):
@@ -150,6 +166,36 @@ def print_decode_attn(recs):
               f"{r['pallas_us']:.0f} | {r['max_err']:.1e} |")
     print("\n(gather scales with max_kv; pallas scales with live_len. "
           "Latency is interpret-mode — bytes are the perf statement.)")
+
+
+def load_unified_attn():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(UNIFIED_ATTN_DIR, "*.json"))):
+        with open(p) as f:
+            loaded = json.load(f)
+        recs.extend(loaded if isinstance(loaded, list) else [loaded])
+    return [r for r in recs if r.get("kind") == "unified_attn"]
+
+
+def print_unified_attn(recs):
+    """§Unified attention: one ragged dispatch per mixed iteration."""
+    print("\n## Unified attention dispatch (split vs unified engine)\n")
+    print("| workload | engine | attention dispatches/step | steps/s | "
+          "steps to drain |")
+    print("|---|---|---|---|---|")
+    for r in recs:
+        wl = f"{r['n_req']}req x {r['out_tokens']}tok"
+        for leg in ("split", "unified"):
+            d = r[leg]
+            print(f"| {wl} | {leg} | {d['attention_dispatches']} | "
+                  f"{d['steps_per_s']:.1f} | {d['steps_to_drain']} |")
+        print(f"\nsteps/s ratio (unified over split): "
+              f"{r['steps_per_s_ratio']:.2f}")
+    print("\n(dispatch counts are jaxpr-walked off the traced mixed step — "
+          "the portable claim; equal steps-to-drain shows the unification "
+          "changes kernel launches, not scheduling policy. Wall clock is "
+          "interpret-mode, where the split path's jnp-heavy branches pay "
+          "per-grid-cell Python overhead the statement does not rely on.)")
 
 
 def fmt_row(r):
@@ -189,6 +235,9 @@ def main():
     prefill_attn = load_prefill_attn()
     if prefill_attn:
         print_prefill_attn(prefill_attn)
+    unified_attn = load_unified_attn()
+    if unified_attn:
+        print_unified_attn(unified_attn)
     prefix_cache = load_prefix_cache()
     if prefix_cache:
         print_prefix_cache(prefix_cache)

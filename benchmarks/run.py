@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
   kernels              §4.2    Pallas kernels vs oracles
   decode_attn          §4.2    decode attention backends: gather vs pallas
   prefill_attn         §4.2    prefill attention backends: gather vs flash
+  unified_attn         §4.2    unified ragged dispatch: 1 vs 2 launches/step
   prefix_cache         §4.2    radix prefix reuse: hit rate vs TTFT / pages
   tpot_under_load      Table 6 P99 inter-token gap: mixed-phase vs
                                phase-exclusive scheduling under admission
@@ -27,7 +28,7 @@ import traceback
 from benchmarks import (decode_attn, fig3_makespan, fig4_tokenizer,
                         fig8_energy, kernels, prefill_attn, prefix_cache,
                         roofline, table6_presaturation, table7_interference,
-                        tpot_under_load)
+                        tpot_under_load, unified_attn)
 from benchmarks.common import emit
 
 MODULES = [
@@ -35,6 +36,7 @@ MODULES = [
     ("kernels", kernels),
     ("decode_attn", decode_attn),
     ("prefill_attn", prefill_attn),
+    ("unified_attn", unified_attn),
     ("prefix_cache", prefix_cache),
     ("tpot_under_load", tpot_under_load),
     ("fig3_makespan", fig3_makespan),

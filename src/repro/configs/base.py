@@ -186,6 +186,20 @@ class ServeConfig:
     # machinery as radix prefix reuse). Greedy token streams are identical
     # under both policies — chunked prefill is bitwise-equal to single shot.
     prefill_chunk_tokens: int = 0
+    # unify the mixed step's TWO attention dispatches (batched chunk
+    # prefill + paged decode) into ONE ragged kernel call per iteration
+    # (``kernels.ragged_attention``): decode lanes ride as q_len=1 rows of
+    # the chunk bucket, prefill chunks as ragged rows, and the kernel's
+    # epilogue merges the new tokens' K/V into their pool pages (int8:
+    # quantised in-kernel — no float staging tensor). Greedy token streams
+    # are identical to the split-dispatch path. Requires the mixed-phase
+    # scheduler. See docs/ARCHITECTURE.md "Unified attention kernel".
+    attn_unified: bool = False
+    # opt-in interleaved K/V page layout ([P, ps, KV, 2, hd] — K and V of
+    # a page share one buffer row), halving the page copies the unified
+    # kernel issues per prefix block. Requires attn_unified; incompatible
+    # with slo_preempt (the host offload path reads split pools).
+    kv_fused_layout: bool = False
     # how many PREFILLING slots advance one chunk per step (bounds the
     # per-step prefill compute riding alongside decode; FCFS beyond it).
     # All of them share ONE prefill dispatch per iteration — the engine's
@@ -427,6 +441,24 @@ class ServeConfig:
                 f"telemetry_events_per_slot must be >= 1 (every request "
                 f"logs at least its submission), got "
                 f"{self.telemetry_events_per_slot}")
+        if self.attn_unified and self.prefill_chunk_tokens <= 0:
+            raise ValueError(
+                "attn_unified requires the mixed-phase scheduler "
+                "(prefill_chunk_tokens > 0): the unified dispatch merges "
+                "the chunk-prefill and decode branches of the mixed step, "
+                "and the phase-exclusive engine has neither")
+        if self.kv_fused_layout:
+            if not self.attn_unified:
+                raise ValueError(
+                    "kv_fused_layout (interleaved K/V pages) requires "
+                    "attn_unified: only the unified ragged kernel and the "
+                    "gather reference read the fused layout — the split "
+                    "paged-attention / flash-prefill kernels do not")
+            if self.slo_preempt:
+                raise ValueError(
+                    "kv_fused_layout is incompatible with slo_preempt: the "
+                    "KV offload/restore path copies split k_pages/v_pages "
+                    "pools host-side")
 
     def deadline_steps(self, slo_class: int, max_new: int):
         """Relative deadline (engine steps from submission) for a request

@@ -194,6 +194,19 @@ def _check_mixed_phase(api: ModelApi, serve: ServeConfig) -> None:
             f"chunk step — but the {cfg.name!r} api does not provide it")
 
 
+def _check_unified(api: ModelApi, serve: ServeConfig) -> None:
+    """``attn_unified`` changes the traced shape of the mixed step (one
+    attention dispatch instead of two) — a config/api mismatch would
+    silently serve the wrong dispatch count, so refuse at init, same as
+    ``_check_attn_backend``."""
+    if bool(serve.attn_unified) != bool(api.attn_unified):
+        raise ValueError(
+            f"ServeConfig.attn_unified={serve.attn_unified!r} but the model "
+            f"api was built with attn_unified={api.attn_unified!r}; pass "
+            f"make_model(cfg, ..., attn_unified=serve.attn_unified, "
+            f"kv_fused_layout=serve.kv_fused_layout)")
+
+
 def adaptive_chunk_budget(busy_lanes, decode_batch: int, floor: int,
                           ceiling: int):
     """Per-lane chunk budget for one mixed-step iteration (pure policy).
@@ -224,6 +237,7 @@ def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
     _check_attn_backend(api, serve)
     _check_prefix_cache(api, serve)
     _check_mixed_phase(api, serve)
+    _check_unified(api, serve)
     cache = cache_for_serve(api, serve, enc_len=enc_len)
     return EngineState(
         ring=rb.make_ring(serve),
@@ -575,11 +589,25 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         passes every occupied lane; the mixed step passes its top-of-step
         snapshot of DECODE_PROCESSING lanes (a slot still PREFILLING holds
         its reserved lane but must not decode)."""
-        ring, cache, alloc = state.ring, state.cache, state.alloc
+        ring, cache = state.ring, state.cache
         slots = jnp.maximum(state.lane_slot, 0)
         tokens = ring.last_token[slots]
 
         logits, cache = api.decode(params, tokens, cache, slots, active)
+        tok = sample_tokens(state.key, logits.astype(jnp.float32),
+                            ring.temperature[slots], top_p=serve.top_p,
+                            slot_ids=slots, step=state.step)
+        state = dataclasses.replace(state, cache=cache)
+        return decode_commit(state, active, logits, tok)
+
+    def decode_commit(state: EngineState, active, logits, tok):
+        """Post-dispatch bookkeeping of one decode step: poison guard,
+        token emission, completion transitions, page frees, lane release.
+        Split out so the unified (single-dispatch) step commits its decode
+        rows through EXACTLY the code the split step runs — bitwise parity
+        between the two dispatch shapes reduces to the attention math."""
+        ring, cache, alloc = state.ring, state.cache, state.alloc
+        slots = jnp.maximum(state.lane_slot, 0)
         # poison guard: a lane whose logits are non-finite (bit-rotted KV
         # page, numerically wedged model) must not stream garbage — it is
         # quarantined in FAULTED instead of emitting. Healthy logits leave
@@ -587,9 +615,6 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         row_ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
         poisoned = active & ~row_ok
         emit = active & row_ok
-        tok = sample_tokens(state.key, logits.astype(jnp.float32),
-                            ring.temperature[slots], top_p=serve.top_p,
-                            slot_ids=slots, step=state.step)
 
         out_idx = ring.generated[slots]                       # [Bd]
         mark = jnp.where(emit, slots, ring.num_slots)
@@ -659,7 +684,21 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         (chunk i's cached prefix = everything already written). ``budget``
         (adaptive mode) clamps this iteration's per-lane chunk length; the
         final chunk samples the first token."""
-        ring, cache, alloc = state.ring, state.cache, state.alloc
+        ring = state.ring
+        pslots, pvalid, cursor, prompts, lens = chunk_select(ring, budget)
+        logits, cache = api.prefill_batched(params, prompts, lens,
+                                            state.cache, pslots, pvalid,
+                                            cursor)
+        tok = sample_tokens(state.key, logits.astype(jnp.float32),
+                            ring.temperature[pslots], top_p=serve.top_p,
+                            slot_ids=pslots, step=state.step)
+        state = dataclasses.replace(state, cache=cache)
+        return chunk_commit(state, pslots, pvalid, cursor, lens, logits, tok)
+
+    def chunk_select(ring, budget):
+        """FCFS pick of this iteration's PREFILLING lanes + their chunk
+        windows. Shared by the split chunk branch and the unified
+        (single-dispatch) step so both select identical work."""
         keyed = jnp.where(ring.slot_state == rb.PREFILLING, ring.arrival,
                           INT_MAX)
         pslots = jnp.argsort(keyed)[:Mp].astype(jnp.int32)
@@ -668,12 +707,14 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
         prompts, lens = _left_pad_prompts(ring, pslots, chunk_bucket,
                                           start=cursor, limit=budget)
         lens = jnp.where(pvalid, lens, 0)
-        logits, cache = api.prefill_batched(params, prompts, lens, cache,
-                                            pslots, pvalid, cursor)
-        tok = sample_tokens(state.key, logits.astype(jnp.float32),
-                            ring.temperature[pslots], top_p=serve.top_p,
-                            slot_ids=pslots, step=state.step)
+        return pslots, pvalid, cursor, prompts, lens
 
+    def chunk_commit(state: EngineState, pslots, pvalid, cursor, lens,
+                     logits, tok):
+        """Post-dispatch bookkeeping of one batched chunk step (cursor
+        advance, first-token emission, completions, faults, lane release)
+        — the counterpart of ``decode_commit`` for the prefill rows."""
+        ring, cache, alloc = state.ring, state.cache, state.alloc
         new_done = cursor + lens
         completing = pvalid & (new_done >= ring.prompt_len[pslots])
         # poison guard (same quarantine as the decode sub-phase): a
@@ -722,6 +763,44 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             last_token=last_token, prefill_step=prefill_step)
         return dataclasses.replace(
             state, ring=ring, cache=cache, alloc=alloc, lane_slot=lane_slot)
+
+    def unified_branch(params, state: EngineState, budget, decode_active):
+        """ONE attention dispatch per iteration (ServeConfig.attn_unified):
+        the chunk-prefill rows and the decode lanes ride the SAME
+        ``api.prefill_batched`` call — decode lanes become q_len=1 rows
+        whose token sits at the bucket's last column with the chunk cursor
+        at the lane's current KV length (the cornerstone identity: a
+        decode step IS a one-token chunk). Selection and commit reuse the
+        split branches' code verbatim, in the split order (chunk rows
+        first), so token streams match the two-dispatch path bitwise on
+        the gather leg and greedy-token-exactly on the pallas leg."""
+        ring = state.ring
+        pslots, pvalid, cursor, prompts, lens = chunk_select(ring, budget)
+
+        slots_d = jnp.maximum(state.lane_slot, 0)               # [Bd]
+        dtokens = ring.last_token[slots_d]
+        dprompts = jnp.zeros((Bd, chunk_bucket), prompts.dtype)
+        dprompts = dprompts.at[:, -1].set(dtokens)
+        dlens = jnp.where(decode_active, 1, 0).astype(lens.dtype)
+        dcursor = state.cache["kv"].seq_lens[slots_d]
+
+        all_prompts = jnp.concatenate([prompts, dprompts], axis=0)
+        all_lens = jnp.concatenate([lens, dlens])
+        all_slots = jnp.concatenate([pslots, slots_d])
+        all_active = jnp.concatenate([pvalid, decode_active])
+        all_cursor = jnp.concatenate([cursor, dcursor])
+        logits, cache = api.prefill_batched(
+            params, all_prompts, all_lens, state.cache, all_slots,
+            all_active, all_cursor)
+        tok = sample_tokens(state.key, logits.astype(jnp.float32),
+                            ring.temperature[all_slots], top_p=serve.top_p,
+                            slot_ids=all_slots, step=state.step)
+        # per-row sampling keys fold in (slot, step) only, so the combined
+        # batch samples exactly what the two split batches would
+        state = dataclasses.replace(state, cache=cache)
+        state = chunk_commit(state, pslots, pvalid, cursor, lens,
+                             logits[:Mp], tok[:Mp])
+        return decode_commit(state, decode_active, logits[Mp:], tok[Mp:])
 
     # -- SLO overload-control sub-branches (mixed-phase only) ---------------
 
@@ -1017,18 +1096,29 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
             budget = adaptive_chunk_budget(n_busy, Bd,
                                            serve.prefill_block_q, Cmax)
         do_chunk = jnp.any(state.ring.slot_state == rb.PREFILLING)
-        state = jax.lax.cond(
-            do_chunk,
-            lambda s: chunk_branch(params, s, budget),
-            lambda s: s,
-            state)
+        if serve.attn_unified:
+            # 2+3 unified: chunk rows and decode lanes share ONE attention
+            # dispatch (the whole point of attn_unified — the traced step
+            # contains exactly one attention pallas_call; jaxpr-asserted
+            # in tier-1)
+            state = jax.lax.cond(
+                do_chunk | jnp.any(decode_active),
+                lambda s: unified_branch(params, s, budget, decode_active),
+                lambda s: s,
+                state)
+        else:
+            state = jax.lax.cond(
+                do_chunk,
+                lambda s: chunk_branch(params, s, budget),
+                lambda s: s,
+                state)
 
-        # 3. decode all snapshot lanes
-        state = jax.lax.cond(
-            jnp.any(decode_active),
-            lambda s: decode_branch(params, s, decode_active),
-            lambda s: s,
-            state)
+            # 3. decode all snapshot lanes
+            state = jax.lax.cond(
+                jnp.any(decode_active),
+                lambda s: decode_branch(params, s, decode_active),
+                lambda s: s,
+                state)
 
         # 4. watchdog progress accounting against the top-of-step
         # snapshot: a lifecycle transition, chunk-cursor advance, token

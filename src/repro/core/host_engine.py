@@ -596,9 +596,14 @@ class HostEngine:
         # same predicate the device's hoisted chunk cond evaluates
         self._tel_info["chunk_disp"] = \
             int((self.slot_state == rb.PREFILLING).any())
-        self._run_chunk(budget)
-        # 3. decode all snapshot lanes
-        self._run_decode(decode_active)
+        if serve.attn_unified:
+            # 2+3 unified (attn_unified): chunk rows and decode lanes share
+            # ONE dispatch — two host touches per iteration instead of four
+            self._run_unified(budget, decode_active)
+        else:
+            self._run_chunk(budget)
+            # 3. decode all snapshot lanes
+            self._run_decode(decode_active)
         # 4. watchdog progress accounting against the top-of-step snapshot
         if serve.watchdog_steps > 0:
             moved = (self.slot_state != st0) | (self.prefill_done != pd0) \
@@ -747,6 +752,101 @@ class HostEngine:
                 self._fault(s)
                 continue
             t = int(tok_host[lane])
+            self.outputs[s].append(t)
+            self.token_times[s].append(now)
+            if self.first_token_time[s] < 0:
+                self.first_token_time[s] = now
+            self.generated[s] += 1
+            self.last_token[s] = t
+            if t == serve.eos_token or self.generated[s] >= self.max_new[s]:
+                self._complete(s)
+                self.lane_slot[lane] = -1
+
+    def _run_unified(self, budget: int, decode_active: np.ndarray) -> None:
+        """Mixed-phase chunk + decode through ONE ragged dispatch (mirror
+        of the device engine's ``unified_branch``): chunk rows occupy the
+        first ``max_prefills_per_step`` rows, decode lanes ride along as
+        q_len=1 rows with their token in the last column and their cursor
+        at the slot's current KV length. Two host touches per iteration
+        instead of four — the host-involvement delta the unified kernel
+        buys is visible in the mirror's jitter accounting."""
+        serve = self.serve
+        bucket = serve.chunk_bucket
+        mp = serve.max_prefills_per_step
+        bd = serve.decode_batch
+        filling = np.where(self.slot_state == rb.PREFILLING)[0]
+        filling = filling[np.argsort(self.arrival[filling], kind="stable")
+                          ][:mp]
+        if len(filling) == 0 and not decode_active.any():
+            return
+        width = mp + bd
+        prompts = np.zeros((width, bucket), np.int32)
+        lens = np.zeros(width, np.int32)
+        cached = np.zeros(width, np.int32)
+        slots = np.zeros(width, np.int32)
+        active = np.zeros(width, bool)
+        temps = np.zeros(width, np.float32)
+        for j, s in enumerate(filling):
+            s = int(s)
+            cur = int(self.prefill_done[s])
+            toks = self.prompt[s][cur:cur + budget]
+            prompts[j, bucket - len(toks):] = toks   # left pad
+            lens[j] = len(toks)
+            cached[j] = cur
+            slots[j] = s
+            active[j] = True
+            temps[j] = self.temperature[s]
+        lane_slots = np.maximum(self.lane_slot, 0)
+        for lane in range(bd):
+            row = mp + lane
+            s = int(lane_slots[lane])
+            slots[row] = s
+            if not decode_active[lane]:
+                continue                     # q_len=0 filler: dead tile
+            prompts[row, bucket - 1] = int(self.last_token[s])
+            lens[row] = 1
+            # the slot's current KV length — same value the device branch
+            # reads from cache seq_lens (prompt fully resident + all but
+            # the newest generated token written back)
+            cached[row] = len(self.prompt[s]) + int(self.generated[s]) - 1
+            active[row] = True
+            temps[row] = self.temperature[s]
+        self.jitter()                      # host touch 3: the ONE dispatch
+
+        tok, ok, self.cache = self._chunk_fn(
+            self.params, jnp.asarray(prompts), jnp.asarray(lens),
+            jnp.asarray(cached), self.cache, jnp.asarray(slots),
+            jnp.asarray(active), jnp.asarray(temps), self.key,
+            jnp.asarray(self.step_count, jnp.int32))
+        tok_host = np.asarray(jax.device_get(tok))   # PCIe round-trip
+        ok_host = np.asarray(jax.device_get(ok))
+        self.jitter()                      # host touch 4: copy-back handling
+
+        # chunk commit tail (rows [:mp]) — identical to _run_chunk
+        now = time.perf_counter()
+        for j, s in enumerate(filling):
+            s = int(s)
+            self.prefill_done[s] += min(
+                budget, len(self.prompt[s]) - int(self.prefill_done[s]))
+            if self.prefill_done[s] < len(self.prompt[s]):
+                continue                   # partial: no token surfaces
+            if not ok_host[j]:
+                self._fault(s)
+                continue
+            self._commit_prompt_to_trie(s)
+            if self._emit_first_token(s, int(tok_host[j]), now):
+                self.lane_slot[self.lane_slot == s] = -1
+            else:
+                self.slot_state[s] = rb.DECODE_PROCESSING
+        # decode commit tail (rows [mp:]) — identical to _run_decode
+        for lane in range(bd):
+            if not decode_active[lane]:
+                continue
+            s = int(self.lane_slot[lane])
+            if not ok_host[mp + lane]:
+                self._fault(s)
+                continue
+            t = int(tok_host[mp + lane])
             self.outputs[s].append(t)
             self.token_times[s].append(now)
             if self.first_token_time[s] < 0:

@@ -41,6 +41,22 @@ def intermediate_shapes(fn, *args) -> set:
     return shapes
 
 
+def intermediate_avals(fn, *args) -> set:
+    """All intermediate ``(shape, dtype_name)`` pairs in the traced
+    computation of fn — the dtype-aware sibling of
+    ``intermediate_shapes`` (the int8-staging assertions need to tell a
+    float tensor from the quantised one at the same shape)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    avals = set()
+    for j in iter_jaxprs(jaxpr.jaxpr):
+        for eqn in j.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    avals.add((tuple(aval.shape), str(aval.dtype)))
+    return avals
+
+
 def count_pallas_calls(fn, *args, name_contains: str) -> int:
     """Count ``pallas_call`` eqns whose kernel name contains
     ``name_contains`` anywhere in the traced computation of ``fn``.
@@ -61,6 +77,26 @@ def count_pallas_calls(fn, *args, name_contains: str) -> int:
             if name_contains in str(name):
                 n += 1
     return n
+
+
+# every attention kernel the serving stack can dispatch — the unified
+# acceptance criterion ("exactly ONE attention pallas_call per traced
+# mixed iteration") counts across all of them so a stray split dispatch
+# cannot hide behind a rename
+ATTENTION_KERNEL_NAMES = ("ragged_attention", "flash_prefill",
+                          "paged_attention")
+
+
+def count_attention_dispatches(fn, *args) -> int:
+    """Count attention ``pallas_call`` eqns (any kernel in
+    ``ATTENTION_KERNEL_NAMES``) in the traced computation of ``fn``.
+
+    The unified engine's invariant: a traced mixed-phase step shows
+    exactly ONE such eqn (the ragged kernel serves both decode lanes and
+    prefill chunks); the split engine shows TWO (paged decode + flash
+    prefill). Gather backends dispatch zero — use only on pallas legs."""
+    return sum(count_pallas_calls(fn, *args, name_contains=n)
+               for n in ATTENTION_KERNEL_NAMES)
 
 
 def count_primitives(fn, *args, names) -> dict:

@@ -14,10 +14,55 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_prefill as _fp
 from repro.kernels import paged_attention as _pa
+from repro.kernels import ragged_attention as _ra
 from repro.kernels import ring_scan as _rs
 from repro.kernels import ssm_scan as _ss
 
 INTERPRET = True
+
+
+def validate_compiled_tiling(*, head_dim: int, block_q: int, block_k: int,
+                             pages_per_block: int, page_size: int = 0,
+                             where: str = "make_model"):
+    """Reject tilings that interpret mode masks but a compiled TPU lowering
+    rejects (or silently pads into garbage throughput).
+
+    Interpret mode executes kernel bodies in Python, so any positive tile
+    size "works" on CPU; off interpret mode Mosaic requires sublane-aligned
+    second-minor tiles (multiples of 8) and lane-aligned minor tiles
+    (multiples of 128). Called at ``make_model`` time — a no-op while
+    ``INTERPRET`` is True so CPU validation runs are unaffected.
+    """
+    if INTERPRET:
+        return
+    errs = []
+    if head_dim % 128 != 0:
+        errs.append(
+            f"head_dim={head_dim} is not a multiple of the TPU lane width "
+            "(128); compiled attention kernels need head_dim in "
+            "{128, 256, ...} — repad the model or stay in interpret mode")
+    if block_q <= 0 or block_q % 8 != 0:
+        errs.append(
+            f"prefill_block_q={block_q} must be a positive multiple of the "
+            "TPU sublane width (8); try 128")
+    if block_k <= 0 or block_k % 128 != 0:
+        errs.append(
+            f"prefill_block_k={block_k} must be a positive multiple of the "
+            "TPU lane width (128); try 128 or 256")
+    if pages_per_block <= 0:
+        errs.append(
+            f"attn_pages_per_block={pages_per_block} must be positive")
+    elif page_size and (pages_per_block * page_size) % 8 != 0:
+        errs.append(
+            f"attn_pages_per_block={pages_per_block} x page_size="
+            f"{page_size} = {pages_per_block * page_size} KV rows per "
+            "fetch, not a multiple of the TPU sublane width (8); pick "
+            "pages_per_block so the product is 8-aligned, e.g. "
+            f"{-(-8 // max(page_size, 1))}")
+    if errs:
+        raise ValueError(
+            f"illegal compiled-mode (interpret=False) kernel tiling at "
+            f"{where}:\n  - " + "\n  - ".join(errs))
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "pages_per_block",
@@ -58,6 +103,33 @@ def flash_prefill_attention(q, k, v, offsets, *, window=0, softcap: float = 0.0,
         k_pages=k_pages, v_pages=v_pages, block_rows=block_rows,
         cached_lens=cached_lens, k_scale=k_scale, v_scale=v_scale,
         interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_q",
+                                             "pages_per_block", "writes_kv",
+                                             "interpret"))
+def ragged_attention(q, k, v, cu_q_lens, cu_kv_lens, block_tables, *,
+                     k_pages=None, v_pages=None, kv_fused=None,
+                     k_scale=None, v_scale=None, window=0,
+                     softcap: float = 0.0, block_q: int = 128,
+                     pages_per_block: int = 4, writes_kv: bool = False,
+                     interpret: bool = None):
+    """Unified ragged attention: ONE dispatch serves decode lanes
+    (q_len=1) and prefill chunks (ragged q) in the same grid. Row b
+    attends ``cu_kv_lens`` minus ``cu_q_lens`` cached pool tokens plus its
+    own left-padded in-flight suffix causally (``window`` is a dynamic
+    scalar, 0 = full). ``kv_fused`` selects the interleaved K/V page
+    layout (one copy per page instead of two); ``writes_kv=True``
+    additionally merges the new tokens into their suffix pages — int8
+    pools quantise inside the epilogue, no float staging tensor — and
+    returns ``(out, *updated_pools)``."""
+    interp = INTERPRET if interpret is None else interpret
+    return _ra.ragged_attention(
+        q, k, v, cu_q_lens, cu_kv_lens, block_tables,
+        k_pages=k_pages, v_pages=v_pages, kv_fused=kv_fused,
+        k_scale=k_scale, v_scale=v_scale, window=window, softcap=softcap,
+        block_q=block_q, pages_per_block=pages_per_block,
+        writes_kv=writes_kv, interpret=interp)
 
 
 @functools.partial(jax.jit,

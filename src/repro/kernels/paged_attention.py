@@ -221,5 +221,6 @@ def paged_attention(
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
+        name="paged_attention",
     )(safe_table, kv_lens.astype(jnp.int32), window_arr, *inputs)
     return out

@@ -117,6 +117,29 @@ def flash_prefill_ref(q, k, v, offsets, *, window: int = 0,
     return out.reshape(B, T, H, hd).astype(q.dtype)
 
 
+def ragged_attention_ref(q, k, v, cu_q_lens, cu_kv_lens, block_tables, *,
+                         k_pages=None, v_pages=None, kv_fused=None,
+                         k_scale=None, v_scale=None, window: int = 0,
+                         softcap: float = 0.0):
+    """Oracle for ``kernels.ragged_attention`` (attention output only — the
+    KV-write epilogue's reference is ``cache.write_kv_layer``). Derives the
+    per-row offsets/cached lengths from the ragged cumulative metadata and
+    delegates to the prefix-mode flash oracle; a fused interleaved pool is
+    split back into K/V views first."""
+    T = q.shape[1]
+    cu_q = jnp.asarray(cu_q_lens, jnp.int32)
+    cu_kv = jnp.asarray(cu_kv_lens, jnp.int32)
+    q_lens = cu_q[1:] - cu_q[:-1]
+    cached = (cu_kv[1:] - cu_kv[:-1]) - q_lens
+    if kv_fused is not None:
+        k_pages = kv_fused[:, :, :, 0]
+        v_pages = kv_fused[:, :, :, 1]
+    return flash_prefill_ref(
+        q, k, v, T - q_lens, window=window, softcap=softcap,
+        k_pages=k_pages, v_pages=v_pages, block_rows=block_tables,
+        cached_lens=cached, k_scale=k_scale, v_scale=v_scale)
+
+
 def ring_scan_blocks_ref(states, arrivals, *, want_state: int,
                          block_size: int = 64):
     S = states.shape[0]

@@ -37,6 +37,14 @@ def main():
                          "many prefill tokens per step while decode keeps "
                          "streaming (0 = phase-exclusive legacy policy; "
                          "requires a paged-KV decoder-only arch)")
+    ap.add_argument("--attn-unified", action="store_true",
+                    help="fold prefill chunks + decode lanes into ONE "
+                         "ragged attention dispatch per mixed iteration "
+                         "(needs --prefill-chunk)")
+    ap.add_argument("--kv-fused-layout", action="store_true",
+                    help="interleaved K/V page pool (one copy per prefix "
+                         "block; needs --attn-unified, excludes "
+                         "--slo-preempt)")
     ap.add_argument("--prefill-chunk-max", type=int, default=0,
                     help="adaptive chunk sizing ceiling: each step's chunk "
                          "budget follows decode-lane occupancy between "
@@ -106,11 +114,16 @@ def main():
     if args.watchdog_steps and not args.prefill_chunk:
         ap.error("the stall watchdog runs in the mixed-phase scheduler: "
                  "pass --prefill-chunk as well")
+    if args.attn_unified and not args.prefill_chunk:
+        ap.error("the unified attention dispatch merges the mixed step's "
+                 "two phases: pass --prefill-chunk as well")
     serve = ServeConfig(num_slots=16, max_prompt_len=32,
                         max_new_tokens=args.max_new, decode_batch=8,
                         window=args.window, admit_per_step=4, page_size=8,
                         num_pages=160, eos_token=-1,
                         attn_backend=args.attn_backend,
+                        attn_unified=args.attn_unified,
+                        kv_fused_layout=args.kv_fused_layout,
                         prefill_chunk_tokens=args.prefill_chunk,
                         prefill_chunk_tokens_max=args.prefill_chunk_max,
                         prefill_block_q=block_q,
@@ -127,7 +140,9 @@ def main():
     api = make_model(cfg, attn_backend=serve.attn_backend,
                      attn_pages_per_block=serve.attn_pages_per_block,
                      prefill_block_q=serve.prefill_block_q,
-                     prefill_block_k=serve.prefill_block_k)
+                     prefill_block_k=serve.prefill_block_k,
+                     attn_unified=serve.attn_unified,
+                     kv_fused_layout=serve.kv_fused_layout)
     params = api.init_params(jax.random.PRNGKey(0))
     jitter = None
     if args.interfere:

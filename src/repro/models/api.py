@@ -29,6 +29,11 @@ class ModelApi(NamedTuple):
     decode: Callable[..., Any]
     make_cache: Callable[..., Dict[str, Any]]
     attn_backend: str = "gather"
+    # True when ``prefill_batched`` is bound to a UNIFIED attention backend
+    # (one ragged dispatch serves decode lanes + prefill chunks; see
+    # ``attn_backend.get_unified_backend``). The engine refuses a
+    # ServeConfig.attn_unified mismatch at init.
+    attn_unified: bool = False
     # chunked prefill (bucket > VMEM budget): same contract as ``prefill``
     # plus a ``chunk`` kwarg; None for families without paged prefix support
     prefill_chunked: Optional[Callable[..., Any]] = None
@@ -47,7 +52,9 @@ class ModelApi(NamedTuple):
 def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
                attn_pages_per_block: int = 1,
                prefill_block_q: int = 128,
-               prefill_block_k: int = 128) -> ModelApi:
+               prefill_block_k: int = 128,
+               attn_unified: bool = False,
+               kv_fused_layout: bool = False) -> ModelApi:
     """Build the opaque model API.
 
     ``attn_backend`` selects the attention implementation for BOTH serving
@@ -60,11 +67,32 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
     ``ServeConfig.prefill_block_q`` / ``ServeConfig.prefill_block_k``;
     the engine refuses a config/api mismatch at init and the flash-prefill
     tile sizes are validated here, at model-build time.
+
+    ``attn_unified`` rebinds ``prefill_batched`` to a UNIFIED backend
+    (``attn_backend.get_unified_backend``): one ragged dispatch serves
+    decode lanes (q_len=1 rows) and prefill chunks in the same grid, and
+    with the pallas implementation the kernel's epilogue merges the new
+    K/V into the pool (so the jnp scatter path is skipped). The other
+    entry points keep their split backends — the unified engine step only
+    ever calls ``prefill_batched``. ``kv_fused_layout`` makes
+    ``make_cache`` allocate the interleaved K/V page pool the unified
+    kernel fetches with one copy per page.
     """
+    from repro.kernels import ops as ops_lib
+    ops_lib.validate_compiled_tiling(
+        head_dim=cfg.resolved_head_dim, block_q=prefill_block_q,
+        block_k=prefill_block_k, pages_per_block=attn_pages_per_block,
+        where="make_model")
     attend = attn_backend_lib.get_backend(
         attn_backend, pages_per_block=attn_pages_per_block)
     pre_attend = attn_backend_lib.get_prefill_backend(
         attn_backend, block_q=prefill_block_q, block_k=prefill_block_k)
+    if attn_unified and cfg.arch_type not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"attn_unified requires a paged-KV decoder-only arch "
+            f"(dense/moe/vlm), got arch_type={cfg.arch_type!r}")
+    if kv_fused_layout and not attn_unified:
+        raise ValueError("kv_fused_layout requires attn_unified")
     chunked = batched = None
     if cfg.is_encoder_decoder:
         train = lambda params, batch, **kw: encdec_lib.train_loss(
@@ -79,8 +107,13 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
         if cfg.arch_type in ("dense", "moe", "vlm"):
             chunked = lambda params, *a, **kw: tf_lib.chunked_prefill(
                 params, cfg, *a, prefill_attend=pre_attend, **kw)
+            batched_attend = pre_attend
+            if attn_unified:
+                batched_attend = attn_backend_lib.get_unified_backend(
+                    attn_backend, block_q=prefill_block_q,
+                    pages_per_block=attn_pages_per_block)
             batched = lambda params, *a, **kw: tf_lib.prefill_batched(
-                params, cfg, *a, prefill_attend=pre_attend, **kw)
+                params, cfg, *a, prefill_attend=batched_attend, **kw)
 
     dec = lambda params, *a, **kw: tf_lib.decode(
         params, cfg, *a, attend=attend, **kw)
@@ -90,7 +123,7 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
         return cache_lib.make_cache(
             cfg, num_slots=num_slots, num_pages=num_pages,
             page_size=page_size, max_blocks=max_blocks, enc_len=enc_len,
-            dtype=dtype)
+            dtype=dtype, kv_fused_layout=kv_fused_layout)
 
     return ModelApi(
         cfg=cfg,
@@ -101,6 +134,7 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
         decode=dec,
         make_cache=mk_cache,
         attn_backend=attend.backend_name,
+        attn_unified=attn_unified,
         prefill_chunked=chunked,
         prefill_batched=batched,
     )

@@ -74,17 +74,21 @@ class PagedPrefix(NamedTuple):
     """One layer's cached-prefix view for a prefill batch.
 
     ``cached_lens[b]`` tokens at absolute positions [0, cached) already
-    live in ``k_pages``/``v_pages`` through ``block_rows[b]``; the in-flight
-    suffix token at column c sits at position ``cached + c - offset``."""
-    k_pages: jax.Array                    # [P, ps, KV, hd] (this layer)
-    v_pages: jax.Array
+    live in ``k_pages``/``v_pages`` (or the interleaved ``kv_fused`` pool
+    when ``ServeConfig.kv_fused_layout`` is on — the split pair is then
+    None) through ``block_rows[b]``; the in-flight suffix token at column
+    c sits at position ``cached + c - offset``."""
     block_rows: jax.Array                 # [B, max_blocks] int32
     cached_lens: jax.Array                # [B] int32
+    k_pages: Optional[jax.Array] = None   # [P, ps, KV, hd] (this layer)
+    v_pages: Optional[jax.Array] = None
     k_scale: Optional[jax.Array] = None   # [P, ps, KV] int8 dequant scales
     v_scale: Optional[jax.Array] = None
+    kv_fused: Optional[jax.Array] = None  # [P, ps, KV, 2, hd] fused layout
 
 _REGISTRY: Dict[str, Callable[..., DecodeAttend]] = {}
 _PREFILL_REGISTRY: Dict[str, Callable[..., PrefillAttend]] = {}
+_UNIFIED_REGISTRY: Dict[str, Callable[..., PrefillAttend]] = {}
 
 
 def register(name: str):
@@ -97,6 +101,13 @@ def register(name: str):
 def register_prefill(name: str):
     def deco(factory):
         _PREFILL_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def register_unified(name: str):
+    def deco(factory):
+        _UNIFIED_REGISTRY[name] = factory
         return factory
     return deco
 
@@ -185,6 +196,11 @@ def _make_pallas(*, pages_per_block: int = 1) -> DecodeAttend:
     the live KV length (+ sliding-window page skip + fused int8 dequant)."""
 
     def pallas_attend(cfg, q, kvc, layer, slot_ids, pos, window):
+        if kvc.fused:
+            raise ValueError(
+                "the split pallas decode backend does not read the fused "
+                "interleaved KV layout; kv_fused_layout requires "
+                "attn_unified (one ragged dispatch) or the gather backend")
         B = q.shape[0]
         KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         G = cfg.num_heads // KV
@@ -231,7 +247,7 @@ def _make_gather_prefill(*, block_q: int = 128,
         # equivalence tests pin the flash kernel against.
         kp, vp = cache_lib.gather_pages(
             prefix.k_pages, prefix.v_pages, prefix.block_rows,
-            prefix.k_scale, prefix.v_scale)
+            prefix.k_scale, prefix.v_scale, kv_fused=prefix.kv_fused)
         cached = prefix.cached_lens
         mbps = kp.shape[1]
         pos_axis = jnp.arange(mbps)[None, :]                  # [1, mb*ps]
@@ -264,6 +280,12 @@ def _make_pallas_prefill(*, block_q: int = 128,
     def pallas_prefill(cfg, q, k, v, offset, window, prefix=None):
         extra = {}
         if prefix is not None:
+            if prefix.kv_fused is not None:
+                raise ValueError(
+                    "the split flash-prefill kernel does not read the fused "
+                    "interleaved KV layout; kv_fused_layout requires "
+                    "attn_unified (one ragged dispatch) or the gather "
+                    "backend")
             extra = dict(k_pages=prefix.k_pages, v_pages=prefix.v_pages,
                          block_rows=prefix.block_rows,
                          cached_lens=prefix.cached_lens,
@@ -276,3 +298,94 @@ def _make_pallas_prefill(*, block_q: int = 128,
         return att.astype(q.dtype)
 
     return pallas_prefill
+
+
+# ---------------------------------------------------------------------------
+# Unified (single-dispatch) attention backends — ``ServeConfig.attn_unified``
+# ---------------------------------------------------------------------------
+#
+# A unified backend keeps the prefill-attend calling convention
+# ``attend(cfg, q, k, v, offset, window, prefix)`` but serves BOTH phases in
+# one call: decode lanes are rows with q_len = T - offset = 1, prefill
+# chunks are ragged rows, dead rows have q_len = 0. The ragged cumulative
+# metadata (``cu_q_lens``/``cu_kv_lens``) is derived here from the per-row
+# offsets and the prefix's cached lengths, so the transformer needs no new
+# operands. ``prefix`` is mandatory — a unified step always attends against
+# the paged pool.
+#
+# The factory result carries ``writes_kv``: True means the backend merges
+# the new tokens' K/V into their pool pages itself (the ragged kernel's
+# fused epilogue — int8 pools quantise in-kernel with no float staging
+# tensor) and returns ``(att, *updated_pools)``; the transformer then skips
+# ``cache.write_kv_layer`` for that layer. False (the gather reference)
+# returns just ``att`` and leaves the KV write on the jnp path — keeping
+# gather as the bitwise oracle for the whole unified step.
+
+
+def get_unified_backend(name: Optional[str] = None, *,
+                        block_q: int = 128,
+                        pages_per_block: int = 1) -> PrefillAttend:
+    """Resolve a unified-attention backend by name (same resolution and
+    names as ``get_backend`` — one ``ServeConfig.attn_backend`` selects
+    the implementation; ``attn_unified`` selects the dispatch shape)."""
+    resolved = _resolve(name, _UNIFIED_REGISTRY)
+    if not isinstance(block_q, int) or block_q <= 0 or block_q % 8 != 0:
+        raise ValueError("unified attention block_q (prefill_block_q) must "
+                         f"be a positive multiple of 8, got {block_q!r}")
+    if not isinstance(pages_per_block, int) or pages_per_block <= 0:
+        raise ValueError("attn_pages_per_block must be a positive int, "
+                         f"got {pages_per_block!r}")
+    fn = _UNIFIED_REGISTRY[resolved](block_q=block_q,
+                                     pages_per_block=pages_per_block)
+    fn.backend_name = resolved
+    return fn
+
+
+@register_unified("gather")
+def _make_gather_unified(*, block_q: int = 128,
+                         pages_per_block: int = 1) -> PrefillAttend:
+    """Reference path: the prefix-mode gather prefill already handles
+    ragged rows (decode = one-token chunk) bitwise-identically to the
+    phase-split reference — the cornerstone the unified engine step and
+    the ragged kernel are both pinned against."""
+    inner = _make_gather_prefill(block_q=block_q, block_k=block_q)
+
+    def gather_unified(cfg, q, k, v, offset, window, prefix=None):
+        if prefix is None:
+            raise ValueError("unified attention always attends against the "
+                             "paged pool; prefix is mandatory")
+        return inner(cfg, q, k, v, offset, window, prefix=prefix)
+
+    gather_unified.writes_kv = False
+    return gather_unified
+
+
+@register_unified("pallas")
+def _make_pallas_unified(*, block_q: int = 128,
+                         pages_per_block: int = 1) -> PrefillAttend:
+    """Hot path: ONE ragged kernel dispatch per layer serves decode lanes
+    and prefill chunks together — double-buffered page copies, dead-tile
+    skip, live-page early exit, sliding-window page skip, fused int8
+    dequant AND quantise (KV-write epilogue), optional fused-KV layout."""
+    from repro.kernels.ragged_attention import build_cu_lens
+
+    def pallas_unified(cfg, q, k, v, offset, window, prefix=None):
+        if prefix is None:
+            raise ValueError("unified attention always attends against the "
+                             "paged pool; prefix is mandatory")
+        T = q.shape[1]
+        q_lens = (T - offset).astype(jnp.int32)
+        cu_q, cu_kv = build_cu_lens(q_lens, prefix.cached_lens)
+        res = ops.ragged_attention(
+            q, k, v, cu_q, cu_kv, prefix.block_rows,
+            k_pages=prefix.k_pages, v_pages=prefix.v_pages,
+            kv_fused=prefix.kv_fused,
+            k_scale=prefix.k_scale, v_scale=prefix.v_scale,
+            window=jnp.maximum(window, 0).astype(jnp.int32),
+            softcap=float(cfg.attn_softcap or 0.0),
+            block_q=block_q, pages_per_block=pages_per_block,
+            writes_kv=True)
+        return (res[0].astype(q.dtype),) + tuple(res[1:])
+
+    pallas_unified.writes_kv = True
+    return pallas_unified

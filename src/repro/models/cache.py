@@ -29,13 +29,24 @@ class PagedKVCache:
     k_scale/v_scale: [L, P, page_size, KV] — per-(token, head) dequant
                      scales, present only for int8 KV (beyond-paper
                      optimization: halves KV HBM traffic and footprint)
+    kv_fused:        [L, P, page_size, KV, 2, hd] — opt-in interleaved
+                     K/V layout (``ServeConfig.kv_fused_layout``): K at
+                     [..., 0, :] and V at [..., 1, :] share one page, so
+                     the unified ragged kernel issues ONE page copy where
+                     the split layout needs two. Mutually exclusive with
+                     k_pages/v_pages (which are None when fused).
     """
-    k_pages: jax.Array
-    v_pages: jax.Array
+    k_pages: Optional[jax.Array]
+    v_pages: Optional[jax.Array]
     block_table: jax.Array
     seq_lens: jax.Array
     k_scale: Optional[jax.Array] = None
     v_scale: Optional[jax.Array] = None
+    kv_fused: Optional[jax.Array] = None
+
+    @property
+    def fused(self) -> bool:
+        return self.kv_fused is not None
 
     @property
     def quantized(self) -> bool:
@@ -43,7 +54,13 @@ class PagedKVCache:
 
     @property
     def page_size(self) -> int:
-        return self.k_pages.shape[2]
+        pool = self.kv_fused if self.fused else self.k_pages
+        return pool.shape[2]
+
+    @property
+    def num_pages(self) -> int:
+        pool = self.kv_fused if self.fused else self.k_pages
+        return pool.shape[1]
 
     @property
     def max_blocks(self) -> int:
@@ -62,6 +79,7 @@ def make_paged_kv_cache(
     page_size: int,
     max_blocks: int,
     dtype=None,
+    fused: bool = False,
 ) -> PagedKVCache:
     L = cfg.num_attn_layers
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -71,12 +89,16 @@ def make_paged_kv_cache(
     mk_scales = lambda: (jnp.zeros((L, num_pages, page_size, kv), jnp.bfloat16)
                          if dtype == jnp.int8 else None)
     return PagedKVCache(
-        k_pages=jnp.zeros((L, num_pages, page_size, kv, hd), dtype),
-        v_pages=jnp.zeros((L, num_pages, page_size, kv, hd), dtype),
+        k_pages=None if fused else jnp.zeros(
+            (L, num_pages, page_size, kv, hd), dtype),
+        v_pages=None if fused else jnp.zeros(
+            (L, num_pages, page_size, kv, hd), dtype),
         block_table=jnp.full((num_slots, max_blocks), -1, jnp.int32),
         seq_lens=jnp.zeros((num_slots,), jnp.int32),
         k_scale=mk_scales(),
         v_scale=mk_scales(),
+        kv_fused=jnp.zeros((L, num_pages, page_size, kv, 2, hd), dtype)
+        if fused else None,
     )
 
 
@@ -85,8 +107,12 @@ def page_nbytes(cache: PagedKVCache) -> int:
     plus dequant scales when the pool is quantised. Byte-denominated
     policies (the radix-trie byte cap, offload-buffer accounting) divide
     their budget by this to get a page budget."""
-    L, _, ps, KV, hd = cache.k_pages.shape
-    n = 2 * L * ps * KV * hd * cache.k_pages.dtype.itemsize
+    if cache.fused:
+        L, _, ps, KV, two, hd = cache.kv_fused.shape
+        n = two * L * ps * KV * hd * cache.kv_fused.dtype.itemsize
+    else:
+        L, _, ps, KV, hd = cache.k_pages.shape
+        n = 2 * L * ps * KV * hd * cache.k_pages.dtype.itemsize
     if cache.quantized:
         n += 2 * L * ps * KV * cache.k_scale.dtype.itemsize
     return n
@@ -137,7 +163,7 @@ def write_kv_layer(
         & (page_of >= 0) & (pos // ps < cache.max_blocks)
     if min_pos is not None:
         valid &= pos >= min_pos[:, None]
-    page_idx = jnp.where(valid, page_of, cache.k_pages.shape[1])  # OOB -> drop
+    page_idx = jnp.where(valid, page_of, cache.num_pages)  # OOB -> drop
     l_idx = jnp.broadcast_to(layer, (B, Tq))
     extra = {}
     if cache.quantized:
@@ -147,6 +173,11 @@ def write_kv_layer(
             k_sc.astype(cache.k_scale.dtype), mode="drop")
         extra["v_scale"] = cache.v_scale.at[l_idx, page_idx, off].set(
             v_sc.astype(cache.v_scale.dtype), mode="drop")
+    if cache.fused:
+        kv_new = jnp.stack([k_new, v_new], axis=3)       # [B, Tq, KV, 2, hd]
+        kv_fused = cache.kv_fused.at[l_idx, page_idx, off].set(
+            kv_new.astype(cache.kv_fused.dtype), mode="drop")
+        return dataclasses.replace(cache, kv_fused=kv_fused, **extra)
     k_pages = cache.k_pages.at[l_idx, page_idx, off].set(
         k_new.astype(cache.k_pages.dtype), mode="drop")
     v_pages = cache.v_pages.at[l_idx, page_idx, off].set(
@@ -194,9 +225,13 @@ def gather_kv_window(cache: PagedKVCache, layer: jax.Array,
     blk = first_blk[:, None] + jnp.arange(W)[None, :]       # [B, W]
     blk_c = jnp.clip(blk, 0, cache.max_blocks - 1)
     pages = jnp.take_along_axis(cache.block_table[slot_ids], blk_c, axis=1)
-    safe = jnp.clip(pages, 0, cache.k_pages.shape[1] - 1)
-    k = cache.k_pages[layer][safe]             # [B, W, ps, KV, hd]
-    v = cache.v_pages[layer][safe]
+    safe = jnp.clip(pages, 0, cache.num_pages - 1)
+    if cache.fused:
+        k = cache.kv_fused[layer][safe][:, :, :, :, 0]    # [B, W, ps, KV, hd]
+        v = cache.kv_fused[layer][safe][:, :, :, :, 1]
+    else:
+        k = cache.k_pages[layer][safe]         # [B, W, ps, KV, hd]
+        v = cache.v_pages[layer][safe]
     if cache.quantized:
         k = _dequant(k, cache.k_scale[layer][safe])
         v = _dequant(v, cache.v_scale[layer][safe])
@@ -210,12 +245,18 @@ def gather_kv_window(cache: PagedKVCache, layer: jax.Array,
             kv_pos.reshape(B_, W_ * ps_))
 
 
-def gather_pages(k_pages: jax.Array, v_pages: jax.Array,
-                 block_rows: jax.Array, k_scale=None, v_scale=None):
+def gather_pages(k_pages: Optional[jax.Array], v_pages: Optional[jax.Array],
+                 block_rows: jax.Array, k_scale=None, v_scale=None,
+                 kv_fused: Optional[jax.Array] = None):
     """Materialise [B, mb*ps, KV, hd] K/V from raw page arrays through
     per-lane block-table rows (jnp reference path for the prefix-aware
     prefill; the Pallas flash-prefill kernel fuses this gather). Rows may
-    contain -1 (unassigned) — callers mask by cached length."""
+    contain -1 (unassigned) — callers mask by cached length. A fused
+    interleaved pool (``kv_fused`` [P, ps, KV, 2, hd]) is accepted in
+    place of the split pair."""
+    if kv_fused is not None:
+        k_pages = kv_fused[:, :, :, 0]
+        v_pages = kv_fused[:, :, :, 1]
     P = k_pages.shape[0]
     safe = jnp.clip(block_rows, 0, P - 1)
     k = k_pages[safe]                                     # [B, mb, ps, KV, hd]
@@ -231,9 +272,13 @@ def gather_kv(cache: PagedKVCache, layer: jax.Array, slot_ids: jax.Array):
     """Materialise [B, max_kv, KV, hd] K/V for one layer (jnp reference path;
     the Pallas `paged_attention` kernel fuses this gather)."""
     pages = cache.block_table[slot_ids]                   # [B, max_blocks]
-    safe = jnp.clip(pages, 0, cache.k_pages.shape[1] - 1)
-    k = cache.k_pages[layer][safe]                        # [B, mb, ps, KV, hd]
-    v = cache.v_pages[layer][safe]
+    safe = jnp.clip(pages, 0, cache.num_pages - 1)
+    if cache.fused:
+        k = cache.kv_fused[layer][safe][:, :, :, :, 0]    # [B, mb, ps, KV, hd]
+        v = cache.kv_fused[layer][safe][:, :, :, :, 1]
+    else:
+        k = cache.k_pages[layer][safe]                    # [B, mb, ps, KV, hd]
+        v = cache.v_pages[layer][safe]
     if cache.quantized:
         k = _dequant(k, cache.k_scale[layer][safe])
         v = _dequant(v, cache.v_scale[layer][safe])
@@ -331,7 +376,7 @@ def free_pages(alloc: PageAllocator, pages: jax.Array):
 
 def make_cache(cfg: ModelConfig, *, num_slots: int, num_pages: int,
                page_size: int, max_blocks: int, enc_len: int = 0,
-               dtype=None) -> Dict[str, Any]:
+               dtype=None, kv_fused_layout: bool = False) -> Dict[str, Any]:
     """Family-appropriate cache bundle, keyed by component."""
     from repro.models import ssm as ssm_mod  # local import to avoid cycle
 
@@ -339,7 +384,8 @@ def make_cache(cfg: ModelConfig, *, num_slots: int, num_pages: int,
     if cfg.uses_paged_kv:
         cache["kv"] = make_paged_kv_cache(
             cfg, num_slots=num_slots, num_pages=num_pages,
-            page_size=page_size, max_blocks=max_blocks, dtype=dtype)
+            page_size=page_size, max_blocks=max_blocks, dtype=dtype,
+            fused=kv_fused_layout)
     if cfg.arch_type == "ssm":  # rwkv6
         st = ssm_mod.rwkv6_init_state(cfg, num_slots)
         cache["ssm"] = jax.tree.map(

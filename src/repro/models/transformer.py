@@ -13,6 +13,7 @@ Design rules:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
@@ -287,11 +288,34 @@ def _layer_prefix(ctx: PrefillCtx, kvc, layer):
     if ctx.cached_lens is None:
         return None
     return attn_backend_lib.PagedPrefix(
-        k_pages=kvc.k_pages[layer], v_pages=kvc.v_pages[layer],
+        k_pages=None if kvc.fused else kvc.k_pages[layer],
+        v_pages=None if kvc.fused else kvc.v_pages[layer],
+        kv_fused=kvc.kv_fused[layer] if kvc.fused else None,
         block_rows=kvc.block_table[ctx.slot_ids],
         cached_lens=ctx.cached_lens,
         k_scale=kvc.k_scale[layer] if kvc.quantized else None,
         v_scale=kvc.v_scale[layer] if kvc.quantized else None)
+
+
+def _pool_writeback(kvc, layer, pools):
+    """Scatter one layer's updated pool arrays — returned by a unified
+    backend whose kernel merges new K/V in its epilogue (``writes_kv``) —
+    back into the cache at ``layer`` (a traced index inside the layer
+    scan). Pool order matches ``kernels.ragged_attention``: values first
+    (fused or split pair), then int8 scales."""
+    pools = list(pools)
+    new = {}
+    if kvc.fused:
+        new["kv_fused"] = kvc.kv_fused.at[layer].set(pools.pop(0))
+    else:
+        new["k_pages"] = kvc.k_pages.at[layer].set(pools.pop(0))
+        new["v_pages"] = kvc.v_pages.at[layer].set(pools.pop(0))
+    if kvc.quantized:
+        new["k_scale"] = kvc.k_scale.at[layer].set(
+            pools.pop(0).astype(kvc.k_scale.dtype))
+        new["v_scale"] = kvc.v_scale.at[layer].set(
+            pools.pop(0).astype(kvc.v_scale.dtype))
+    return dataclasses.replace(kvc, **new)
 
 
 def _dense_block(cfg: ModelConfig, bp: dict, x: jax.Array,
@@ -307,8 +331,13 @@ def _dense_block(cfg: ModelConfig, bp: dict, x: jax.Array,
     q, k, v = qkv_project(bp, cfg, h)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    new_pools = None
     if attend is not None:
         att = attend(cfg, q, k, v, offset, window, prefix=prefix)
+        if isinstance(att, tuple):
+            # unified writes_kv backend: the kernel epilogue already merged
+            # this layer's new K/V into the pool pages it returns
+            att, new_pools = att[0], att[1:]
     else:
         # window: runtime scalar; 0 means full. Encode as huge width.
         eff_window = jnp.where(window > 0, window, jnp.int32(2**30))
@@ -326,7 +355,7 @@ def _dense_block(cfg: ModelConfig, bp: dict, x: jax.Array,
                                         cfg.num_experts)
     else:
         y = mlp(bp, cfg, h2)
-    return x + y, aux, (k, v)
+    return x + y, aux, (k, v) if new_pools is None else new_pools
 
 
 def forward_hidden(params: dict, cfg: ModelConfig, x: jax.Array,
@@ -358,19 +387,27 @@ def forward_hidden(params: dict, cfg: ModelConfig, x: jax.Array,
     if prefill_ctx is not None:
         ctx = prefill_ctx
 
+        writes_kv = getattr(ctx.attend, "writes_kv", False)
+
         def body_write(carry, xs):
             h, aux, kvc = carry
             bp, layer, window = xs
             cached = ctx.cached_lens
-            h, a, (k, v) = _dense_block(cfg, bp, h, positions, window,
+            h, a, extras = _dense_block(cfg, bp, h, positions, window,
                                         kv_mask, attend=ctx.attend,
                                         offset=ctx.offset,
                                         prefix=_layer_prefix(ctx, kvc, layer))
-            start = -ctx.offset if cached is None else cached - ctx.offset
-            total = ctx.lengths if cached is None else ctx.lengths + cached
-            kvc = cache_lib.write_kv_layer(
-                kvc, layer, ctx.slot_ids, k, v, start_pos=start,
-                lengths=total, active=ctx.active, min_pos=cached)
+            if writes_kv:
+                # the unified kernel's epilogue merged this layer's new K/V
+                # (int8: quantised in-kernel — no float staging tensor)
+                kvc = _pool_writeback(kvc, layer, extras)
+            else:
+                k, v = extras
+                start = -ctx.offset if cached is None else cached - ctx.offset
+                total = ctx.lengths if cached is None else ctx.lengths + cached
+                kvc = cache_lib.write_kv_layer(
+                    kvc, layer, ctx.slot_ids, k, v, start_pos=start,
+                    lengths=total, active=ctx.active, min_pos=cached)
             return (h, aux + a, kvc), None
 
         fn = jax.checkpoint(body_write) if remat else body_write

@@ -616,3 +616,31 @@ def test_top_p_keeps_nucleus_only(p):
         expect = np.zeros(50, bool)
         expect[order[:k]] = True
         np.testing.assert_array_equal(kept[b], expect)
+
+
+# ---------------------------------------------------------------------------
+# Ragged attention metadata: cu-lens construction (unified kernel input)
+# ---------------------------------------------------------------------------
+
+
+@HSET
+@given(st.lists(st.tuples(st.integers(0, 16), st.integers(0, 64)),
+                min_size=1, max_size=32))
+def test_build_cu_lens_monotone_bounds(rows):
+    """``build_cu_lens`` feeds the unified kernel's scalar prefetch: both
+    prefix-sum vectors must be int32, start at 0, be monotone
+    non-decreasing, and reproduce exactly the per-row (q_len, q_len +
+    cached) spans — any slack or overlap would make the kernel read a
+    neighbour row's tokens."""
+    from repro.kernels.ragged_attention import build_cu_lens
+    q_lens = np.asarray([q for q, _ in rows], np.int32)
+    cached = np.asarray([c for _, c in rows], np.int32)
+    cu_q, cu_kv = build_cu_lens(jnp.asarray(q_lens), jnp.asarray(cached))
+    cu_q, cu_kv = np.asarray(cu_q), np.asarray(cu_kv)
+    assert cu_q.dtype == np.int32 and cu_kv.dtype == np.int32
+    assert cu_q.shape == cu_kv.shape == (len(rows) + 1,)
+    assert cu_q[0] == 0 and cu_kv[0] == 0
+    np.testing.assert_array_equal(np.diff(cu_q), q_lens)
+    np.testing.assert_array_equal(np.diff(cu_kv), q_lens + cached)
+    assert (np.diff(cu_q) <= np.diff(cu_kv)).all()
+    assert cu_q[-1] == q_lens.sum() and cu_kv[-1] == (q_lens + cached).sum()

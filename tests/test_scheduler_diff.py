@@ -137,14 +137,18 @@ def _random_trace(seed):
     return _materialize(trace, seed)
 
 
-def _run_device(serve, reqs, *, check_no_stall=False, on_step=None):
+def _run_device(serve, reqs, *, check_no_stall=False, on_step=None,
+                model=None):
     """Replay a trace through the persistent-window engine (window=1 so
     submissions land at exact step boundaries, mirroring the host's
     per-step control). Returns (outputs by request idx, final state).
     ``on_step`` (if given) observes the state after every window — the
-    telemetry differentials use it to drain the one-step counter ring."""
-    api, params = _model()
-    fn = _window_fn(serve)
+    telemetry differentials use it to drain the one-step counter ring.
+    ``model`` overrides the cached default (api, params) — the unified
+    attention legs build their own apis."""
+    api, params = model if model is not None else _model()
+    fn = _window_fn(serve) if model is None \
+        else eng.make_serve_window(api, serve)
     state = eng.init_engine_state(api, serve, seed=0)
     slot_of = {}
     arrival = 0
@@ -189,8 +193,8 @@ def _run_device(serve, reqs, *, check_no_stall=False, on_step=None):
     return outputs, state
 
 
-def _run_host(serve, reqs):
-    api, params = _model()
+def _run_host(serve, reqs, model=None):
+    api, params = model if model is not None else _model()
     host = HostEngine(api, serve, params, seed=0)
     slot_of = {}
     arrival = 0
@@ -980,3 +984,130 @@ def test_telemetry_bitwise_token_identity_on_off(seed):
     on, _ = _run_device(dataclasses.replace(MIXED, telemetry=True), reqs)
     off, _ = _run_device(MIXED, reqs)
     assert on == off
+
+
+# ---------------------------------------------------------------------------
+# Unified ragged attention dispatch (attn_unified): the same mixed-phase
+# differentials with chunk rows and decode lanes sharing ONE kernel launch
+# ---------------------------------------------------------------------------
+#
+# Legs: gather (jnp reference, pools written by write_kv_layer — the
+# bitwise oracle) and pallas (ragged kernel, pools written by the fused
+# epilogue), split and fused-interleaved pool layouts. pallas+int8 is
+# deliberately NOT token-pinned against the split engine: the split decode
+# step attends the current token AFTER it was quantised into the pool,
+# while the unified kernel attends it pre-quantisation (full precision) —
+# a fidelity improvement that can flip a near-tie argmax. Its pool bytes
+# are pinned bitwise at the kernel level (test_ragged_attention.py) and
+# its completions are asserted below.
+
+_UNI_BLOCKS = dict(prefill_block_q=8, prefill_block_k=8)
+UNIFIED_LEGS = {
+    "gather": ("gather", False, None),
+    "gather_int8": ("gather", False, "int8"),
+    "pallas": ("pallas", False, None),
+    "pallas_fused": ("pallas", True, None),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _model_u(backend, unified, fused):
+    api = make_model(TINY_ARCHS["qwen2-1.5b"], attn_backend=backend,
+                     attn_unified=unified, kv_fused_layout=fused,
+                     **_UNI_BLOCKS)
+    return api, api.init_params(jax.random.PRNGKey(0))
+
+
+def _serve_u(backend, fused, kv_dtype, *, unified=True):
+    return dataclasses.replace(
+        MIXED, attn_backend=backend, attn_unified=unified,
+        kv_fused_layout=fused, kv_cache_dtype=kv_dtype, **_UNI_BLOCKS)
+
+
+@pytest.mark.parametrize("leg", sorted(UNIFIED_LEGS))
+@pytest.mark.parametrize("seed", [70, 73])
+def test_unified_tokens_equal_split(leg, seed):
+    """Unified == split token streams, bitwise (temperatures included):
+    merging the two launches must not change a single sampled token."""
+    backend, fused, kvd = UNIFIED_LEGS[leg]
+    reqs = _random_trace(seed)
+    uni, ustate = _run_device(_serve_u(backend, fused, kvd), reqs,
+                              check_no_stall=True,
+                              model=_model_u(backend, True, fused))
+    spl, _ = _run_device(_serve_u(backend, False, kvd, unified=False), reqs,
+                         model=_model_u(backend, False, False))
+    assert uni == spl
+    ustate = eng.drain_completed(ustate)
+    assert int(ustate.alloc.top) == MIXED.num_pages
+
+
+@pytest.mark.parametrize("leg", sorted(UNIFIED_LEGS))
+@pytest.mark.parametrize("seed", [71])
+def test_unified_device_bitwise_equals_host(leg, seed):
+    """Device unified engine vs HostEngine._run_unified mirror: bitwise
+    token streams under the one-dispatch mixed step."""
+    backend, fused, kvd = UNIFIED_LEGS[leg]
+    serve = _serve_u(backend, fused, kvd)
+    model = _model_u(backend, True, fused)
+    reqs = _random_trace(seed)
+    dev, _ = _run_device(serve, reqs, model=model)
+    hst, _, _ = _run_host(serve, reqs, model=model)
+    assert dev == hst
+
+
+@pytest.mark.parametrize("seed", [74])
+def test_unified_pallas_int8_completes(seed):
+    """The not-token-pinned leg (pallas+int8, fused pool): every request
+    still drains to completion with finite outputs, and device == host
+    (both planes run the SAME kernel, so the fidelity difference vs the
+    split engine does not split device from host)."""
+    serve = _serve_u("pallas", True, "int8")
+    model = _model_u("pallas", True, True)
+    reqs = _random_trace(seed)
+    dev, _ = _run_device(serve, reqs, model=model)
+    hst, _, _ = _run_host(serve, reqs, model=model)
+    assert dev == hst
+    assert all(len(v) > 0 for v in dev.values())
+
+
+def test_unified_one_attention_dispatch():
+    """THE acceptance criterion of the unification: a traced mixed-phase
+    step dispatches exactly ONE attention pallas_call (the ragged kernel
+    serving decode lanes + prefill chunks), where the split engine
+    dispatches TWO (paged decode + flash prefill)."""
+    from repro import jaxpr_inspect as ji
+    counts = {}
+    for unified in (True, False):
+        api, params = _model_u("pallas", unified, False)
+        serve = _serve_u("pallas", False, None, unified=unified)
+        state = eng.init_engine_state(api, serve, seed=0)
+        step = eng.make_engine_step(api, serve)
+        counts[unified] = ji.count_attention_dispatches(step, params, state)
+    assert counts[True] == 1
+    assert counts[False] == 2
+
+
+def test_unified_int8_no_quantise_staging():
+    """With the fused epilogue there is NO jnp int8 staging tensor at
+    batch shape left in the traced step — quantisation happens per page
+    inside the kernel. The split trace keeps the [B, T, KV, hd] staging
+    pair (float compute -> int8 round-trip in write_kv_layer); the
+    unified trace's only int8 intermediates are pool-shaped."""
+    from repro import jaxpr_inspect as ji
+    cfg = TINY_ARCHS["qwen2-1.5b"].replace(dtype="bfloat16")
+    KV, hd, ps = cfg.num_kv_heads, cfg.resolved_head_dim, MIXED.page_size
+
+    def batch_staging(unified):
+        api = make_model(cfg, attn_backend="pallas", attn_unified=unified,
+                         **_UNI_BLOCKS)
+        serve = _serve_u("pallas", False, "int8", unified=unified)
+        state = eng.init_engine_state(api, serve, seed=0)
+        step = eng.make_engine_step(api, serve)
+        avals = ji.intermediate_avals(step, params := api.init_params(
+            jax.random.PRNGKey(0)), state)
+        return {a for a in avals
+                if len(a[0]) == 4 and a[0][2:] == (KV, hd)
+                and a[1] == "int8" and a[0][:2] != (MIXED.num_pages, ps)}
+
+    assert batch_staging(unified=True) == set()
+    assert len(batch_staging(unified=False)) > 0
