@@ -147,6 +147,38 @@ def main() -> None:
     emit(f"decode_attn_ragged_autotune_live{live}", best["ragged_us"],
          f"best_pages_per_block={best['pages_per_block']}")
 
+    # --- tensor-parallel row (model=2): the decode kernel under the same
+    # shard_map layout the SPMD engine uses — q and the page pools sharded
+    # over kv heads, block table/lens replicated. Heads are batch dims of
+    # the attention contraction, so the sharded output must be BITWISE the
+    # single-device kernel's. Skipped (with a note) on one device.
+    if jax.device_count() >= 2:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as Pspec
+        from repro.distribution.sharding import make_serve_mesh
+        mesh = make_serve_mesh(2)
+        body = shard_map(
+            lambda q_, kp_, vp_, bt_, lens_: ops.paged_attention(
+                q_, kp_, vp_, bt_, lens_, pages_per_block=2),
+            mesh=mesh,
+            in_specs=(Pspec(None, "model"), Pspec(None, None, "model"),
+                      Pspec(None, None, "model"), Pspec(), Pspec()),
+            out_specs=Pspec(None, "model"), check_rep=False)
+        base = ops.paged_attention(q, kp, vp, bt, kv_lens,
+                                   pages_per_block=2)
+        us_s, out_s = _time(body, q, kp, vp, bt, kv_lens, reps=1)
+        equal = bool((np.asarray(out_s) == np.asarray(base)).all())
+        assert equal, "sharded decode kernel diverged from single-device"
+        records.append({"kind": "decode_attn_sharded", "mesh_model": 2,
+                        "live_len": live, "max_kv": max_kv,
+                        "sharded_us": us_s, "equal_tokens": equal})
+        emit(f"decode_attn_sharded_model2_live{live}", us_s,
+             "equal_tokens=1;kv_heads_per_shard=1")
+    else:
+        emit("decode_attn_sharded_model2", 0.0,
+             "skipped=1_device;set_XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8")
+
     if os.environ.get("REPRO_BENCH_SMOKE") != "1":
         # keep the committed sweep datapoints out of CI dry runs
         with open(os.path.join(OUT_DIR, "sweep.json"), "w") as f:

@@ -38,20 +38,23 @@ from repro import jaxpr_inspect as ji
 from repro.configs.registry import TINY_ARCHS
 from repro.core import engine as eng
 from repro.core import ring_buffer as rb
+from repro.distribution import sharding
 from repro.models.api import make_model
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "unified_attn")
 
 
-def _build(unified: bool):
+def _build(unified: bool, mesh_model: int = 1):
     serve = bench_serve_config(prefill_chunk_tokens=8,
                                max_prefills_per_step=2,
                                prefill_block_q=8, prefill_block_k=8,
-                               attn_backend="pallas", attn_unified=unified)
+                               attn_backend="pallas", attn_unified=unified,
+                               mesh_model_size=mesh_model)
+    mesh = sharding.make_serve_mesh(mesh_model)
     api = make_model(TINY_ARCHS["qwen2-1.5b"], attn_backend="pallas",
                      prefill_block_q=8, prefill_block_k=8,
-                     attn_unified=unified)
+                     attn_unified=unified, mesh=mesh)
     return api, api.init_params(jax.random.PRNGKey(0)), serve
 
 
@@ -74,15 +77,22 @@ def _steps_per_s(api, params, serve, prompts, out_tokens, max_steps):
                 == rb.DECODE_COMPLETED).all():
             break
     jax.block_until_ready(state.step)
-    return n / (time.perf_counter() - t0), n
+    return n / (time.perf_counter() - t0), n, state
 
 
 def main() -> None:
     smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
     n_req, out_tokens = (3, 3) if smoke else (8, 8)
     rng = np.random.default_rng(9)
+    prompts = [rng.integers(3, 512, 12).tolist() for _ in range(n_req)]
+
+    def tokens_of(state):
+        out = np.asarray(state.ring.output_arena)[:n_req]
+        gen = np.asarray(state.ring.generated)[:n_req]
+        return [out[i, :gen[i]].tolist() for i in range(n_req)]
 
     results = {}
+    tokens = {}
     for unified in (False, True):
         api, params, serve = _build(unified)
         # the portable invariant: attention pallas_call count in the
@@ -92,12 +102,11 @@ def main() -> None:
             eng.make_engine_step(api, serve), params, state)
         assert n_disp == (1 if unified else 2), \
             f"unified={unified}: {n_disp} attention dispatches traced"
-        prompts = [rng.integers(3, api.cfg.vocab_size, 12).tolist()
-                   for _ in range(n_req)]
-        sps, steps = _steps_per_s(api, params, serve, prompts, out_tokens,
-                                  max_steps=400)
+        sps, steps, state = _steps_per_s(api, params, serve, prompts,
+                                         out_tokens, max_steps=400)
         results[unified] = {"steps_per_s": sps, "steps_to_drain": steps,
                             "attention_dispatches": n_disp}
+        tokens[unified] = tokens_of(state)
         emit(f"unified_attn_{'unified' if unified else 'split'}",
              1e6 / sps, f"attention_dispatches={n_disp};"
              f"steps_to_drain={steps}")
@@ -110,6 +119,30 @@ def main() -> None:
     # scheduler iterations — the unification changes launches, not policy
     assert (results[True]["steps_to_drain"]
             == results[False]["steps_to_drain"])
+
+    # tensor-parallel row: the same unified workload over a model=2 mesh.
+    # Still ONE traced attention dispatch (SPMD traces the shard body
+    # once), and the token streams must be BITWISE the unsharded ones.
+    if jax.device_count() >= 2:
+        api, params, serve = _build(True, mesh_model=2)
+        state = eng.init_engine_state(api, serve)
+        n_disp = ji.count_attention_dispatches(
+            eng.make_engine_step(api, serve), params, state)
+        assert n_disp == 1, f"sharded: {n_disp} attention dispatches traced"
+        sps, steps, state = _steps_per_s(api, params, serve, prompts,
+                                         out_tokens, max_steps=400)
+        assert tokens_of(state) == tokens[True], \
+            "sharded unified tokens diverged from unsharded"
+        results["sharded_model2"] = {"steps_per_s": sps,
+                                     "steps_to_drain": steps,
+                                     "attention_dispatches": n_disp}
+        emit("unified_attn_sharded_model2", 1e6 / sps,
+             f"attention_dispatches={n_disp};steps_to_drain={steps};"
+             f"equal_tokens=1")
+    else:
+        emit("unified_attn_sharded_model2", 0.0,
+             "skipped=1_device;set_XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8")
 
     if not smoke:
         os.makedirs(OUT_DIR, exist_ok=True)

@@ -298,6 +298,17 @@ class ServeConfig:
     # exporter can surface the drop. Size it at roughly
     # 6 + max_prompt_len / prefill_chunk_tokens (chunk events dominate).
     telemetry_events_per_slot: int = 16
+    # --- tensor parallelism (SPMD persistent window) ----------------------
+    # Size of the ``model`` mesh axis the persistent window runs over:
+    # attention heads and the paged KV pool are sharded across this many
+    # devices (distribution.sharding head-partition rules) while ring /
+    # allocator / scheduler / telemetry state stays replicated, so every
+    # policy decision is computed identically on all shards. 1 = the
+    # single-device engine (no mesh is built). Must divide the model's
+    # num_kv_heads (make_model validates against the concrete arch);
+    # incompatible with kv_fused_layout, whose interleaved pool has no
+    # per-shard layout.
+    mesh_model_size: int = 1
 
     def __post_init__(self):
         if self.prefill_chunk_tokens < 0:
@@ -459,6 +470,16 @@ class ServeConfig:
                     "kv_fused_layout is incompatible with slo_preempt: the "
                     "KV offload/restore path copies split k_pages/v_pages "
                     "pools host-side")
+        if self.mesh_model_size < 1:
+            raise ValueError(
+                f"mesh_model_size must be >= 1 (1 = single device), got "
+                f"{self.mesh_model_size}")
+        if self.mesh_model_size > 1 and self.kv_fused_layout:
+            raise ValueError(
+                "mesh_model_size > 1 is incompatible with kv_fused_layout: "
+                "the interleaved K/V page pool fuses the head dimension "
+                "into the page row, so it has no per-shard layout on the "
+                "model axis — use the split k_pages/v_pages pools")
 
     def deadline_steps(self, slo_class: int, max_new: int):
         """Relative deadline (engine steps from submission) for a request

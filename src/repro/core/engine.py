@@ -207,6 +207,56 @@ def _check_unified(api: ModelApi, serve: ServeConfig) -> None:
             f"kv_fused_layout=serve.kv_fused_layout)")
 
 
+def _check_mesh(api: ModelApi, serve: ServeConfig) -> None:
+    """``mesh_model_size`` selects the SPMD layout of the whole window —
+    a config/api mismatch would silently serve unsharded (or on the wrong
+    mesh), so refuse at init, same as ``_check_attn_backend``."""
+    from repro.distribution import sharding as shard_lib
+    have = shard_lib.mesh_model_size(api.mesh)
+    if serve.mesh_model_size != have:
+        raise ValueError(
+            f"ServeConfig.mesh_model_size={serve.mesh_model_size} but the "
+            f"model api was built over a model axis of size {have}; pass "
+            f"make_model(cfg, ..., mesh=sharding.make_serve_mesh("
+            f"serve.mesh_model_size))")
+
+
+def engine_state_shardings(api: ModelApi, state: "EngineState"):
+    """NamedSharding tree matching ``state`` on the api's serving mesh:
+    the paged KV pool sharded over KV heads on "model", every other leaf
+    (ring, allocator, lanes, RNG, counters, telemetry) replicated — the
+    scheduler decides identically on all shards, which is what keeps the
+    donation loop, snapshot/restore and EDF/preemption policies unchanged.
+    Used for initial placement AND re-asserted at the end of every step so
+    the donated window buffers keep one deterministic layout."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.distribution import sharding as shard_lib
+    mesh = api.mesh
+    rep = NamedSharding(mesh, PartitionSpec())
+    shardings = jax.tree.map(lambda _: rep, state)
+    kv_named = shard_lib.to_named(mesh, shard_lib.cache_pspecs(
+        api.cfg, state.cache, shard_lib.mesh_model_size(mesh),
+        data_axis=None)["kv"])
+    return dataclasses.replace(
+        shardings, cache=dict(shardings.cache, kv=kv_named))
+
+
+def _place_state(api: ModelApi, state: "EngineState") -> "EngineState":
+    """Commit every state leaf to the serving mesh (initial placement)."""
+    if api.mesh is None:
+        return state
+    return jax.tree.map(jax.device_put, state,
+                        engine_state_shardings(api, state))
+
+
+def _constrain_state(api: ModelApi, state: "EngineState") -> "EngineState":
+    """End-of-step sharding re-assert (no-op copies when already placed)."""
+    if api.mesh is None:
+        return state
+    return jax.tree.map(jax.lax.with_sharding_constraint, state,
+                        engine_state_shardings(api, state))
+
+
 def adaptive_chunk_budget(busy_lanes, decode_batch: int, floor: int,
                           ceiling: int):
     """Per-lane chunk budget for one mixed-step iteration (pure policy).
@@ -238,8 +288,9 @@ def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
     _check_prefix_cache(api, serve)
     _check_mixed_phase(api, serve)
     _check_unified(api, serve)
+    _check_mesh(api, serve)
     cache = cache_for_serve(api, serve, enc_len=enc_len)
-    return EngineState(
+    state = EngineState(
         ring=rb.make_ring(serve),
         cache=cache,
         alloc=cache_lib.make_page_allocator(serve.num_pages),
@@ -250,6 +301,7 @@ def init_engine_state(api: ModelApi, serve: ServeConfig, *, seed: int = 0,
         telemetry=tel_lib.make_telemetry_state(serve)
         if serve.telemetry else None,
     )
+    return _place_state(api, state)
 
 
 def free_done_rows(alloc, block_table, slots, done):
@@ -1002,11 +1054,12 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
                     decode_lanes=lanes,
                     chunk_dispatch=do_prefill.astype(jnp.int32),
                     free_pages=state.alloc.top))
-        return dataclasses.replace(
+        state = dataclasses.replace(
             state,
             step=state.step + 1,
             key=state.key,  # key reuse is safe: folded with (slot, step)
         )
+        return _constrain_state(api, state)
 
     def engine_step_mixed(params, state: EngineState) -> EngineState:
         if serve.telemetry:
@@ -1146,11 +1199,12 @@ def make_engine_step(api: ModelApi, serve: ServeConfig,
                     decode_lanes=jnp.sum(decode_active.astype(jnp.int32)),
                     chunk_dispatch=do_chunk.astype(jnp.int32),
                     free_pages=state.alloc.top))
-        return dataclasses.replace(
+        state = dataclasses.replace(
             state,
             step=state.step + 1,
             key=state.key,  # key reuse is safe: folded with (slot, step)
         )
+        return _constrain_state(api, state)
 
     return engine_step_mixed if mixed else engine_step_exclusive
 

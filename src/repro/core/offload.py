@@ -45,6 +45,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -147,6 +148,14 @@ def service_overload(state, buf: KVOffloadBuffer, serve: ServeConfig
     frontend uses "drop" to surface the PREEMPTED terminal status."""
     ring, alloc = state.ring, state.alloc
     kvc = state.cache["kv"]
+    # device placements of the incoming leaves: the eager spill/restore
+    # scatters below run computation-follows-data, but their OUTPUT
+    # placement is a compiler choice — on a tensor-parallel window
+    # (sharded KV pool, mesh-replicated ring/allocator) the updated leaves
+    # must land back on the exact same shardings or the next window's
+    # donation layout flaps. np.asarray/device_get on the sharded pool is
+    # safe as-is: a fully-addressable sharded leaf assembles byte-exact.
+    in_shardings = jax.tree.map(lambda x: x.sharding, (ring, alloc, kvc))
     ps = serve.page_size
     step_now = int(state.step)
     events: List[Tuple[str, int, int]] = []
@@ -276,6 +285,8 @@ def service_overload(state, buf: KVOffloadBuffer, serve: ServeConfig
         buf.restores += 1
         events.append(("restore", entry.request_id, slot))
 
+    ring, alloc, kvc = jax.tree.map(
+        jax.device_put, (ring, alloc, kvc), in_shardings)
     state = dataclasses.replace(
         state, ring=ring, alloc=alloc,
         cache=dict(state.cache, kv=kvc))

@@ -63,6 +63,13 @@ class EngineSnapshot:
     treedef: Any                       # pytree structure to rebuild with
     step: int                          # boundary step (for bookkeeping)
     offload: Optional[KVOffloadBuffer]  # deep copy of the spill buffer
+    # per-leaf device shardings of the snapshotted state (None for
+    # snapshots taken before this field existed). A tensor-parallel window
+    # (ServeConfig.mesh_model_size > 1) keeps its KV pool sharded over the
+    # model mesh; restoring those leaves as plain single-device arrays
+    # would silently demote the engine to one device AND poison the next
+    # window's donation layout — restore re-applies the recorded sharding.
+    shardings: Optional[List[Any]] = None
 
     @property
     def nbytes(self) -> int:
@@ -77,13 +84,18 @@ def snapshot_engine(state, offload_buf: Optional[KVOffloadBuffer] = None
     """Copy every ``EngineState`` leaf (ring, allocator, KV pages, lanes,
     RNG key, counters) to host memory, byte-exact, plus a deep copy of the
     host-side offload buffer. Call ONLY at a window boundary — mid-window
-    there is no host rendezvous to snapshot at."""
+    there is no host rendezvous to snapshot at.
+
+    ``jax.device_get`` on a sharded-but-fully-addressable leaf assembles
+    the full logical array (byte-exact), so the host image is layout-free;
+    the leaf's sharding is recorded separately for restore."""
     leaves, treedef = jax.tree_util.tree_flatten(state)
     host = [np.array(jax.device_get(x), copy=True) for x in leaves]
+    shardings = [getattr(x, "sharding", None) for x in leaves]
     return EngineSnapshot(
         leaves=host, treedef=treedef, step=int(state.step),
         offload=copy.deepcopy(offload_buf) if offload_buf is not None
-        else None)
+        else None, shardings=shardings)
 
 
 def restore_engine(snap: EngineSnapshot):
@@ -91,8 +103,14 @@ def restore_engine(snap: EngineSnapshot):
     Returns ``(state, offload_buf)`` — the buffer is a fresh deep copy, so
     one snapshot can seed several restores (each kill gets pristine
     state). The dtypes of every leaf round-trip exactly (the host copies
-    keep them), so the restored run is bit-for-bit the original."""
-    leaves = [jnp.asarray(x) for x in snap.leaves]
+    keep them), and each leaf lands back on the device placement it was
+    snapshotted with (sharded pools stay sharded), so the restored run is
+    bit-for-bit the original."""
+    if snap.shardings is not None:
+        leaves = [jnp.asarray(x) if s is None else jax.device_put(x, s)
+                  for x, s in zip(snap.leaves, snap.shardings)]
+    else:
+        leaves = [jnp.asarray(x) for x in snap.leaves]
     state = jax.tree_util.tree_unflatten(snap.treedef, leaves)
     buf = copy.deepcopy(snap.offload) if snap.offload is not None else None
     return state, buf

@@ -177,3 +177,87 @@ def batch_axes(mesh: Mesh):
     """Data-parallel axes: ("pod","data") on a multi-pod mesh else "data"."""
     names = mesh.axis_names
     return ("pod", "data") if "pod" in names else "data"
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel serving mesh (``ServeConfig.mesh_model_size``)
+# ---------------------------------------------------------------------------
+#
+# The persistent window runs SPMD over a 1-D ("model",) mesh: attention
+# heads and the paged KV pool are sharded, ring/allocator/scheduler/
+# telemetry state is replicated. Bitwise identity with the single-device
+# engine is the acceptance criterion, so only reduction-order-free work is
+# genuinely distributed (attention heads are batch dims of every einsum);
+# dense projections are STORED sharded per the rules above but gathered at
+# use, keeping each output element's contraction on one device.
+
+
+def head_partition(num_heads: int, model_size: int):
+    """Contiguous ``(start, stop)`` head ranges, one per model shard.
+
+    The partition is an exact cover: every head appears in exactly one
+    range (the property suite pins this). GQA group alignment follows for
+    free: with ``H = KV * G`` and both H and KV divisible by
+    ``model_size``, shard i holds q heads ``[i*H/n, (i+1)*H/n)`` and kv
+    heads ``[i*KV/n, (i+1)*KV/n)``, and ``h // G`` maps a local q head to
+    its local kv head exactly as it does globally."""
+    if model_size < 1:
+        raise ValueError(f"model_size must be >= 1, got {model_size}")
+    if num_heads % model_size != 0:
+        raise ValueError(
+            f"cannot shard {num_heads} heads over model={model_size}: "
+            f"head counts must divide evenly (no ragged shards)")
+    per = num_heads // model_size
+    return [(i * per, (i + 1) * per) for i in range(model_size)]
+
+
+def validate_head_sharding(cfg: ModelConfig, model_size: int) -> None:
+    """Model-build-time validation of ``mesh_model_size`` against the
+    concrete arch — a bad mesh must fail at ``make_model``, not as a
+    shape error deep inside the first jitted window."""
+    if model_size < 1:
+        raise ValueError(
+            f"mesh model size must be >= 1, got {model_size}")
+    if model_size == 1:
+        return
+    if cfg.arch_type not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"mesh_model_size > 1 requires a paged-KV decoder-only arch "
+            f"(dense/moe/vlm), got arch_type={cfg.arch_type!r}: SSM/"
+            f"hybrid recurrent state and enc-dec cross-KV have no model-"
+            f"axis layout yet")
+    if cfg.num_kv_heads % model_size != 0:
+        raise ValueError(
+            f"mesh_model_size={model_size} does not divide num_kv_heads="
+            f"{cfg.num_kv_heads} ({cfg.name}): the paged KV pool shards "
+            f"whole KV heads over the model axis")
+    if cfg.num_heads % model_size != 0:
+        raise ValueError(
+            f"mesh_model_size={model_size} does not divide num_heads="
+            f"{cfg.num_heads} ({cfg.name}): query heads shard in whole "
+            f"GQA groups over the model axis")
+
+
+def make_serve_mesh(model_size: int, *, devices=None) -> Optional[Mesh]:
+    """1-D ``("model",)`` serving mesh over the first ``model_size``
+    devices, or None for the single-device engine (no mesh is built —
+    every code path stays exactly the seed single-device program)."""
+    if model_size < 1:
+        raise ValueError(f"mesh model size must be >= 1, got {model_size}")
+    if model_size == 1:
+        return None
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) < model_size:
+        raise ValueError(
+            f"mesh_model_size={model_size} needs at least that many "
+            f"devices, have {len(devices)} (on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return Mesh(np.asarray(devices[:model_size]), ("model",))
+
+
+def mesh_model_size(mesh: Optional[Mesh]) -> int:
+    """Size of the mesh's "model" axis (1 for no mesh / no model axis)."""
+    if mesh is None:
+        return 1
+    return int(dict(zip(mesh.axis_names, mesh.devices.shape)
+                    ).get("model", 1))

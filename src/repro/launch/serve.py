@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.configs.registry import get_config
+from repro.distribution import sharding
 from repro.frontend.server import BlinkServer
 from repro.models.api import make_model
 
@@ -101,6 +102,12 @@ def main():
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome-trace/Perfetto JSON of request "
                          "spans here at exit (implies --telemetry)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="tensor-parallel model-axis size: shard attention "
+                         "heads + the paged KV pool over this many devices "
+                         "(must divide the arch's KV head count; on CPU "
+                         "set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -136,13 +143,19 @@ def main():
                         watchdog_steps=args.watchdog_steps,
                         snapshot_every_steps=args.snapshot_every_steps,
                         telemetry=(args.telemetry or bool(args.metrics_out)
-                                   or bool(args.trace_out)))
+                                   or bool(args.trace_out)),
+                        mesh_model_size=args.mesh_model)
+    mesh = sharding.make_serve_mesh(serve.mesh_model_size)
     api = make_model(cfg, attn_backend=serve.attn_backend,
                      attn_pages_per_block=serve.attn_pages_per_block,
                      prefill_block_q=serve.prefill_block_q,
                      prefill_block_k=serve.prefill_block_k,
                      attn_unified=serve.attn_unified,
-                     kv_fused_layout=serve.kv_fused_layout)
+                     kv_fused_layout=serve.kv_fused_layout,
+                     mesh=mesh)
+    if mesh is not None:
+        print(f"tensor-parallel window: model={serve.mesh_model_size} over "
+              f"{[d.id for d in mesh.devices.flat]}")
     params = api.init_params(jax.random.PRNGKey(0))
     jitter = None
     if args.interfere:

@@ -47,6 +47,11 @@ class ModelApi(NamedTuple):
     # (cached prefix + completed chunks). None for families that cannot
     # suspend prefill mid-prompt (SSM/hybrid recurrence, enc-dec cross-KV).
     prefill_batched: Optional[Callable[..., Any]] = None
+    # Tensor-parallel serving mesh (("model",) axis) the attention backends
+    # are shard_mapped over and the KV pool is placed on; None = the
+    # single-device engine. The engine refuses a
+    # ``ServeConfig.mesh_model_size`` mismatch at init.
+    mesh: Optional[Any] = None
 
 
 def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
@@ -54,7 +59,8 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
                prefill_block_q: int = 128,
                prefill_block_k: int = 128,
                attn_unified: bool = False,
-               kv_fused_layout: bool = False) -> ModelApi:
+               kv_fused_layout: bool = False,
+               mesh: Optional[Any] = None) -> ModelApi:
     """Build the opaque model API.
 
     ``attn_backend`` selects the attention implementation for BOTH serving
@@ -77,46 +83,93 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
     ever calls ``prefill_batched``. ``kv_fused_layout`` makes
     ``make_cache`` allocate the interleaved K/V page pool the unified
     kernel fetches with one copy per page.
+
+    ``mesh`` (a 1-D ``("model",)`` ``jax.sharding.Mesh``) makes the whole
+    API tensor-parallel: the attention backends become shard_map regions
+    over heads, ``init_params`` places weights sharded per
+    ``distribution.sharding.param_pspecs``, and every serving entry point
+    gathers weights at use (exact all-gather) so all dense contractions
+    keep the single-device reduction order — the sharded engine is
+    bitwise-identical to the unsharded one by construction. Head
+    divisibility is validated here, at model-build time.
     """
     from repro.kernels import ops as ops_lib
     ops_lib.validate_compiled_tiling(
         head_dim=cfg.resolved_head_dim, block_q=prefill_block_q,
         block_k=prefill_block_k, pages_per_block=attn_pages_per_block,
         where="make_model")
+    if mesh is not None:
+        from repro.distribution import sharding as shard_lib
+        if shard_lib.mesh_model_size(mesh) <= 1:
+            mesh = None                       # trivial mesh: seed program
+    if mesh is not None:
+        shard_lib.validate_head_sharding(
+            cfg, shard_lib.mesh_model_size(mesh))
+        if kv_fused_layout:
+            raise ValueError(
+                "a model mesh is incompatible with kv_fused_layout: the "
+                "interleaved K/V pool has no per-shard head slice")
     attend = attn_backend_lib.get_backend(
-        attn_backend, pages_per_block=attn_pages_per_block)
+        attn_backend, pages_per_block=attn_pages_per_block, mesh=mesh)
     pre_attend = attn_backend_lib.get_prefill_backend(
-        attn_backend, block_q=prefill_block_q, block_k=prefill_block_k)
+        attn_backend, block_q=prefill_block_q, block_k=prefill_block_k,
+        mesh=mesh)
     if attn_unified and cfg.arch_type not in ("dense", "moe", "vlm"):
         raise ValueError(
             f"attn_unified requires a paged-KV decoder-only arch "
             f"(dense/moe/vlm), got arch_type={cfg.arch_type!r}")
     if kv_fused_layout and not attn_unified:
         raise ValueError("kv_fused_layout requires attn_unified")
+
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+
+        def gather_params(params):
+            # exact: replicating a sharded weight is a pure all-gather, so
+            # every contraction below runs on full operands in the same
+            # order as the single-device program
+            return jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(x, rep), params)
+    else:
+        gather_params = lambda params: params
+
     chunked = batched = None
     if cfg.is_encoder_decoder:
         train = lambda params, batch, **kw: encdec_lib.train_loss(
             params, cfg, batch, **kw)
         pre = lambda params, *a, **kw: encdec_lib.prefill(
-            params, cfg, *a, prefill_attend=pre_attend, **kw)
+            gather_params(params), cfg, *a, prefill_attend=pre_attend, **kw)
     else:
         train = lambda params, batch, **kw: tf_lib.train_loss(
             params, cfg, batch, **kw)
         pre = lambda params, *a, **kw: tf_lib.prefill(
-            params, cfg, *a, prefill_attend=pre_attend, **kw)
+            gather_params(params), cfg, *a, prefill_attend=pre_attend, **kw)
         if cfg.arch_type in ("dense", "moe", "vlm"):
             chunked = lambda params, *a, **kw: tf_lib.chunked_prefill(
-                params, cfg, *a, prefill_attend=pre_attend, **kw)
+                gather_params(params), cfg, *a, prefill_attend=pre_attend,
+                **kw)
             batched_attend = pre_attend
             if attn_unified:
                 batched_attend = attn_backend_lib.get_unified_backend(
                     attn_backend, block_q=prefill_block_q,
-                    pages_per_block=attn_pages_per_block)
+                    pages_per_block=attn_pages_per_block, mesh=mesh)
             batched = lambda params, *a, **kw: tf_lib.prefill_batched(
-                params, cfg, *a, prefill_attend=batched_attend, **kw)
+                gather_params(params), cfg, *a,
+                prefill_attend=batched_attend, **kw)
 
     dec = lambda params, *a, **kw: tf_lib.decode(
-        params, cfg, *a, attend=attend, **kw)
+        gather_params(params), cfg, *a, attend=attend, **kw)
+
+    def init_params(key):
+        params = tf_lib.init_params(key, cfg)
+        if mesh is not None:
+            from repro.distribution import sharding as shard_lib
+            specs = shard_lib.param_pspecs(
+                cfg, model_size=shard_lib.mesh_model_size(mesh))
+            params = jax.device_put(params,
+                                    shard_lib.to_named(mesh, specs))
+        return params
 
     def mk_cache(*, num_slots: int, num_pages: int, page_size: int,
                  max_blocks: int, enc_len: int = 0, dtype=None):
@@ -127,7 +180,7 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
 
     return ModelApi(
         cfg=cfg,
-        init_params=lambda key: tf_lib.init_params(key, cfg),
+        init_params=init_params,
         param_specs=lambda: tf_lib.param_specs(cfg),
         train_loss=train,
         prefill=pre,
@@ -137,6 +190,7 @@ def make_model(cfg: ModelConfig, *, attn_backend: Optional[str] = None,
         attn_unified=attn_unified,
         prefill_chunked=chunked,
         prefill_batched=batched,
+        mesh=mesh,
     )
 
 

@@ -127,11 +127,162 @@ def _resolve(name: Optional[str], registry: Dict[str, Callable]) -> str:
     return resolved
 
 
+# ---------------------------------------------------------------------------
+# Tensor parallelism: shard_map wrapping over attention heads
+# ---------------------------------------------------------------------------
+#
+# With a ("model",)-axis mesh, every backend body above runs unchanged as a
+# shard_map region over the HEAD dims: q/k/v activations and the paged
+# pools slice into contiguous per-shard head ranges (whole GQA groups —
+# ``distribution.sharding.head_partition``), everything else (block
+# tables, positions, windows, traced layer index) is replicated. Heads are
+# batch dims of every einsum in every body, so the per-shard math is the
+# SAME floating-point program as the single-device kernel on a head slice
+# — concatenating shard outputs over heads is bitwise-identical to the
+# unsharded dispatch, which is what lets the sharded engine stay a
+# drop-in replacement under the bitwise differential harness. The
+# attention output is constrained back to replicated before it returns to
+# the transformer: the wo projection contracts over heads, and keeping
+# that contraction on gathered (full-head) operands preserves the
+# single-device reduction order exactly.
+
+def _head_specs():
+    from jax.sharding import PartitionSpec as P
+    heads = P(None, None, "model", None)     # [B, T, H|KV, hd] activations
+    decode_pool = {                          # PagedKVCache leaves, by ndim
+        5: P(None, None, None, "model", None),   # [L, P, ps, KV, hd]
+        4: P(None, None, None, "model"),         # [L, P, ps, KV] scales
+    }
+    prefix_pool = {                          # PagedPrefix leaves, by ndim
+        4: P(None, None, "model", None),         # [P, ps, KV, hd] (layer)
+        3: P(None, None, "model"),               # [P, ps, KV] scales
+    }
+    return heads, decode_pool, prefix_pool, P
+
+
+def _tree_specs(tree, by_ndim, P):
+    """Spec tree matching ``tree``: head-sharded pools by ndim (the leaf
+    ranks are disjoint per container), everything else replicated."""
+    return jax.tree.map(lambda x: by_ndim.get(jnp.ndim(x), P()), tree)
+
+
+def _refuse_fused_sharded(fused_leaf):
+    if fused_leaf is not None:
+        raise ValueError(
+            "mesh_model_size > 1 does not read the fused interleaved KV "
+            "layout: kv_fused pages carry K and V of every head in one "
+            "row, which has no per-shard slice on the model axis")
+
+
+def _shard_decode(fn, mesh) -> DecodeAttend:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding
+    heads, decode_pool, _, P = _head_specs()
+    rep = NamedSharding(mesh, P())
+
+    def sharded_attend(cfg, q, kvc, layer, slot_ids, pos, window):
+        _refuse_fused_sharded(kvc.kv_fused)
+
+        def body(q_, kvc_, layer_, slots_, pos_, win_):
+            return fn(cfg, q_, kvc_, layer_, slots_, pos_, win_)
+
+        att = shard_map(
+            body, mesh,
+            in_specs=(heads, _tree_specs(kvc, decode_pool, P),
+                      P(), P(), P(), P()),
+            out_specs=heads, check_rep=False,
+        )(q, kvc, layer, slot_ids, pos, window)
+        # gather heads BEFORE the wo contraction (exact: pure concat)
+        return jax.lax.with_sharding_constraint(att, rep)
+
+    return sharded_attend
+
+
+def _shard_prefill(fn, mesh) -> PrefillAttend:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding
+    heads, _, prefix_pool, P = _head_specs()
+    rep = NamedSharding(mesh, P())
+
+    def sharded_prefill(cfg, q, k, v, offset, window, prefix=None):
+        if prefix is None:
+            def body(q_, k_, v_, off_, win_):
+                return fn(cfg, q_, k_, v_, off_, win_, prefix=None)
+            in_specs = (heads, heads, heads, P(), P())
+            args = (q, k, v, offset, window)
+        else:
+            _refuse_fused_sharded(prefix.kv_fused)
+
+            def body(q_, k_, v_, off_, win_, pre_):
+                return fn(cfg, q_, k_, v_, off_, win_, prefix=pre_)
+            in_specs = (heads, heads, heads, P(), P(),
+                        _tree_specs(prefix, prefix_pool, P))
+            args = (q, k, v, offset, window, prefix)
+        att = shard_map(body, mesh, in_specs=in_specs, out_specs=heads,
+                        check_rep=False)(*args)
+        return jax.lax.with_sharding_constraint(att, rep)
+
+    return sharded_prefill
+
+
+def _shard_unified(fn, mesh) -> PrefillAttend:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding
+    heads, _, prefix_pool, P = _head_specs()
+    rep = NamedSharding(mesh, P())
+    writes_kv = fn.writes_kv
+
+    def sharded_unified(cfg, q, k, v, offset, window, prefix=None):
+        if prefix is None:
+            raise ValueError("unified attention always attends against the "
+                             "paged pool; prefix is mandatory")
+        _refuse_fused_sharded(prefix.kv_fused)
+
+        def body(q_, k_, v_, off_, win_, pre_):
+            return fn(cfg, q_, k_, v_, off_, win_, prefix=pre_)
+
+        in_specs = (heads, heads, heads, P(), P(),
+                    _tree_specs(prefix, prefix_pool, P))
+        if writes_kv:
+            # (att, k_pages', v_pages'[, k_scale', v_scale']): the kernel
+            # epilogue writes each shard's OWN head slice of the pool, so
+            # the updated pools come back still sharded on heads
+            out_specs = (heads, prefix_pool[4], prefix_pool[4])
+            if prefix.k_scale is not None:
+                out_specs += (prefix_pool[3], prefix_pool[3])
+        else:
+            out_specs = heads
+        res = shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs,
+                        check_rep=False)(q, k, v, offset, window, prefix)
+        if writes_kv:
+            return (jax.lax.with_sharding_constraint(res[0], rep),) \
+                + tuple(res[1:])
+        return jax.lax.with_sharding_constraint(res, rep)
+
+    sharded_unified.writes_kv = writes_kv
+    return sharded_unified
+
+
+def _maybe_shard(fn, mesh, wrapper):
+    """Wrap ``fn`` in ``wrapper`` when the mesh actually shards (model
+    axis size > 1); a trivial mesh keeps the exact single-device callable."""
+    if mesh is None:
+        return fn
+    from repro.distribution.sharding import mesh_model_size
+    if mesh_model_size(mesh) <= 1:
+        return fn
+    wrapped = wrapper(fn, mesh)
+    return wrapped
+
+
 def get_backend(name: Optional[str] = None, *,
-                pages_per_block: int = 1) -> DecodeAttend:
-    """Resolve a decode-attention backend by name (see ``_resolve``)."""
+                pages_per_block: int = 1, mesh=None) -> DecodeAttend:
+    """Resolve a decode-attention backend by name (see ``_resolve``).
+    ``mesh``: optional ("model",) serving mesh — the body runs as a
+    per-shard shard_map region over attention heads."""
     resolved = _resolve(name, _REGISTRY)
     fn = _REGISTRY[resolved](pages_per_block=pages_per_block)
+    fn = _maybe_shard(fn, mesh, _shard_decode)
     fn.backend_name = resolved
     return fn
 
@@ -152,13 +303,15 @@ def validate_prefill_tiles(block_q: int, block_k: int) -> None:
 
 def get_prefill_backend(name: Optional[str] = None, *,
                         block_q: int = 128,
-                        block_k: int = 128) -> PrefillAttend:
+                        block_k: int = 128, mesh=None) -> PrefillAttend:
     """Resolve a prefill-attention backend by name (same resolution and
     names as ``get_backend`` — one ``ServeConfig.attn_backend`` selects
-    both phases)."""
+    both phases). ``mesh`` shards the body over heads as in
+    ``get_backend``."""
     resolved = _resolve(name, _PREFILL_REGISTRY)
     validate_prefill_tiles(block_q, block_k)
     fn = _PREFILL_REGISTRY[resolved](block_q=block_q, block_k=block_k)
+    fn = _maybe_shard(fn, mesh, _shard_prefill)
     fn.backend_name = resolved
     return fn
 
@@ -201,9 +354,11 @@ def _make_pallas(*, pages_per_block: int = 1) -> DecodeAttend:
                 "the split pallas decode backend does not read the fused "
                 "interleaved KV layout; kv_fused_layout requires "
                 "attn_unified (one ragged dispatch) or the gather backend")
-        B = q.shape[0]
-        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-        G = cfg.num_heads // KV
+        # head counts come from the ARRAYS, not cfg: inside a shard_map
+        # body this callable sees the per-shard head slice
+        B, H = q.shape[0], q.shape[2]
+        KV, hd = kvc.k_pages.shape[3], kvc.k_pages.shape[4]
+        G = H // KV
         # gqa_attend groups head h under kv head h // G — same layout here
         qg = q[:, 0].reshape(B, KV, G, hd)
         quant = {}
@@ -216,7 +371,7 @@ def _make_pallas(*, pages_per_block: int = 1) -> DecodeAttend:
             window=jnp.maximum(window, 0).astype(jnp.int32),
             softcap=float(cfg.attn_softcap or 0.0),
             pages_per_block=pages_per_block, **quant)
-        return att.reshape(B, 1, cfg.num_heads, hd).astype(q.dtype)
+        return att.reshape(B, 1, H, hd).astype(q.dtype)
 
     return pallas_attend
 
@@ -324,10 +479,14 @@ def _make_pallas_prefill(*, block_q: int = 128,
 
 def get_unified_backend(name: Optional[str] = None, *,
                         block_q: int = 128,
-                        pages_per_block: int = 1) -> PrefillAttend:
+                        pages_per_block: int = 1,
+                        mesh=None) -> PrefillAttend:
     """Resolve a unified-attention backend by name (same resolution and
     names as ``get_backend`` — one ``ServeConfig.attn_backend`` selects
-    the implementation; ``attn_unified`` selects the dispatch shape)."""
+    the implementation; ``attn_unified`` selects the dispatch shape).
+    ``mesh`` shards the ragged body over heads as in ``get_backend`` —
+    still ONE attention dispatch per mixed step (the shard_map body
+    traces once; every shard runs the same program)."""
     resolved = _resolve(name, _UNIFIED_REGISTRY)
     if not isinstance(block_q, int) or block_q <= 0 or block_q % 8 != 0:
         raise ValueError("unified attention block_q (prefill_block_q) must "
@@ -337,6 +496,7 @@ def get_unified_backend(name: Optional[str] = None, *,
                          f"got {pages_per_block!r}")
     fn = _UNIFIED_REGISTRY[resolved](block_q=block_q,
                                      pages_per_block=pages_per_block)
+    fn = _maybe_shard(fn, mesh, _shard_unified)
     fn.backend_name = resolved
     return fn
 

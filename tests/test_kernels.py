@@ -299,3 +299,75 @@ def test_flash_prefill_fully_padded_lane_is_finite():
     np.testing.assert_allclose(np.asarray(out[0]), 0.0, atol=1e-6)
     expect = ref.flash_prefill_ref(q, k, v, offs)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+# --- tensor-parallel head slicing: per-shard kernels == full kernel ---------
+#
+# The SPMD engine (ServeConfig.mesh_model_size > 1) runs these kernels
+# inside shard_map bodies on contiguous head slices from
+# distribution.sharding.head_partition. Heads are batch dimensions of
+# every contraction, so each shard's math IS the single-device kernel on
+# its slice — concatenating shard outputs over the head axis must be
+# BITWISE equal to the full-width kernel. No mesh needed: the per-shard
+# body is plain slicing, so this pins the engine's correctness argument
+# on one device.
+
+from repro.distribution.sharding import head_partition  # noqa: E402
+
+
+@pytest.mark.parametrize("model_size", [2, 4])
+@pytest.mark.parametrize("window,quant", [(0, False), (9, False), (0, True)])
+def test_paged_attention_head_shards_concat_bitwise(model_size, window,
+                                                    quant):
+    B, KV, G, hd, P, ps, mb = 3, 4, 2, 32, 16, 8, 4
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(keys[0], (B, KV, G, hd), jnp.float32)
+    kp = jax.random.normal(keys[1], (P, ps, KV, hd), jnp.float32)
+    vp = jax.random.normal(keys[2], (P, ps, KV, hd), jnp.float32)
+    bt = jax.random.permutation(keys[3], P)[: B * mb].reshape(B, mb)
+    kv_lens = jnp.array([3, 17, 32])
+    scales = {}
+    if quant:
+        rng = np.random.default_rng(3)
+        scales = dict(
+            k_scale=jnp.asarray(
+                np.abs(rng.standard_normal((P, ps, KV))) / 30 + 1e-3,
+                jnp.bfloat16),
+            v_scale=jnp.asarray(
+                np.abs(rng.standard_normal((P, ps, KV))) / 30 + 1e-3,
+                jnp.bfloat16))
+        kp = jnp.asarray(np.clip(np.round(np.asarray(kp) * 30),
+                                 -127, 127), jnp.int8)
+        vp = jnp.asarray(np.clip(np.round(np.asarray(vp) * 30),
+                                 -127, 127), jnp.int8)
+    full = ops.paged_attention(q, kp, vp, bt, kv_lens, window=window,
+                               **scales)
+    parts = []
+    for lo, hi in head_partition(KV, model_size):
+        sub = {k2: v2[:, :, lo:hi] for k2, v2 in scales.items()}
+        parts.append(ops.paged_attention(
+            q[:, lo:hi], kp[:, :, lo:hi], vp[:, :, lo:hi], bt, kv_lens,
+            window=window, **sub))
+    got = jnp.concatenate(parts, axis=1)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(got))
+
+
+@pytest.mark.parametrize("model_size", [2])
+@pytest.mark.parametrize("window", [0, 9])
+def test_flash_prefill_head_shards_concat_bitwise(model_size, window):
+    B, T, KV, G, hd = 3, 24, 2, 3, 32
+    keys = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(keys[0], (B, T, KV * G, hd), jnp.float32)
+    k = jax.random.normal(keys[1], (B, T, KV, hd), jnp.float32)
+    v = jax.random.normal(keys[2], (B, T, KV, hd), jnp.float32)
+    offs = jnp.asarray(np.random.default_rng(1).integers(0, T, B), jnp.int32)
+    full = ops.flash_prefill_attention(q, k, v, offs, window=window,
+                                       block_q=8, block_k=8)
+    qparts = head_partition(KV * G, model_size)
+    kparts = head_partition(KV, model_size)
+    parts = [ops.flash_prefill_attention(
+        q[:, :, qlo:qhi], k[:, :, klo:khi], v[:, :, klo:khi], offs,
+        window=window, block_q=8, block_k=8)
+        for (qlo, qhi), (klo, khi) in zip(qparts, kparts)]
+    got = jnp.concatenate(parts, axis=2)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(got))

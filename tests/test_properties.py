@@ -619,6 +619,80 @@ def test_top_p_keeps_nucleus_only(p):
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel head partition: exact cover, GQA alignment, rejection
+# ---------------------------------------------------------------------------
+
+
+@HSET
+@given(st.integers(1, 16), st.integers(1, 8), st.integers(1, 8))
+def test_head_partition_exact_cover(kv_heads, group, model_size):
+    """Over random (kv_heads, q_heads = kv_heads * group, mesh_model_size)
+    tuples: when the split divides, ``head_partition`` is an EXACT cover —
+    contiguous equal ranges, every head in exactly one shard, and each
+    shard's q range maps onto its kv range in whole GQA groups (``h // G``
+    is the same local->kv map on every shard). When it does not divide,
+    partitioning and model validation both reject with a clear error."""
+    from repro.distribution import sharding as shard_lib
+    q_heads = kv_heads * group
+    if kv_heads % model_size == 0:
+        for num in (kv_heads, q_heads):
+            parts = shard_lib.head_partition(num, model_size)
+            assert len(parts) == model_size
+            per = num // model_size
+            covered = []
+            for i, (lo, hi) in enumerate(parts):
+                assert (lo, hi) == (i * per, (i + 1) * per)
+                covered.extend(range(lo, hi))
+            assert covered == list(range(num))       # exact cover, ordered
+        # GQA alignment: shard i's q heads use exactly shard i's kv heads
+        qparts = shard_lib.head_partition(q_heads, model_size)
+        kparts = shard_lib.head_partition(kv_heads, model_size)
+        for (qlo, qhi), (klo, khi) in zip(qparts, kparts):
+            assert {h // group for h in range(qlo, qhi)} == \
+                set(range(klo, khi))
+    else:
+        with pytest.raises(ValueError, match="no ragged shards"):
+            shard_lib.head_partition(kv_heads, model_size)
+
+
+@HSET
+@given(st.integers(1, 16), st.integers(1, 8), st.integers(2, 8))
+def test_head_sharding_validation_matches_partition(kv_heads, group,
+                                                    model_size):
+    """``validate_head_sharding`` (the make_model gate) accepts exactly
+    the tuples ``head_partition`` can cover: divisibility of BOTH head
+    counts, rejected with an error naming the offending count."""
+    from repro.configs.registry import TINY_ARCHS
+    from repro.distribution import sharding as shard_lib
+    cfg = TINY_ARCHS["qwen2-1.5b"].replace(
+        num_heads=kv_heads * group, num_kv_heads=kv_heads)
+    divides = kv_heads % model_size == 0 and \
+        (kv_heads * group) % model_size == 0
+    if divides:
+        shard_lib.validate_head_sharding(cfg, model_size)
+    else:
+        with pytest.raises(ValueError, match="does not divide"):
+            shard_lib.validate_head_sharding(cfg, model_size)
+
+
+def test_mesh_model_size_config_validation():
+    """ServeConfig rejects a non-positive mesh and the fused-layout
+    combination at construction (the pool has no per-shard layout);
+    make_model-level rejection covers SSM archs and bad head counts."""
+    from repro.configs.registry import TINY_ARCHS
+    from repro.distribution import sharding as shard_lib
+    with pytest.raises(ValueError, match="mesh_model_size must be >= 1"):
+        ServeConfig(mesh_model_size=0)
+    with pytest.raises(ValueError, match="kv_fused_layout"):
+        ServeConfig(prefill_chunk_tokens=8, attn_unified=True,
+                    kv_fused_layout=True, mesh_model_size=2)
+    with pytest.raises(ValueError, match="decoder-only"):
+        shard_lib.validate_head_sharding(TINY_ARCHS["rwkv6-7b"], 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        shard_lib.head_partition(4, 0)
+
+
+# ---------------------------------------------------------------------------
 # Ragged attention metadata: cu-lens construction (unified kernel input)
 # ---------------------------------------------------------------------------
 

@@ -329,3 +329,48 @@ def test_make_model_rejects_fused_without_unified():
     from repro.models.api import make_model
     with pytest.raises(ValueError, match="kv_fused_layout"):
         make_model(TINY_ARCHS["qwen2-1.5b"], kv_fused_layout=True)
+
+
+# --- tensor-parallel head slicing: per-shard ragged == full ragged ----------
+#
+# The SPMD unified step (ServeConfig.mesh_model_size > 1) runs THIS kernel
+# inside a shard_map body on contiguous head slices. Heads are batch dims
+# of every contraction, so concatenating per-shard outputs (and, with
+# writes_kv, per-shard updated pools) over the head axis must be BITWISE
+# equal to the full-width kernel — the single-device proof of the sharded
+# engine's correctness argument, int8 and sliding-window included.
+
+
+@pytest.mark.parametrize("name", ["mixed", "decode_only"])
+@pytest.mark.parametrize("window,quant", [(0, False), (6, False), (0, True)])
+def test_ragged_head_shards_concat_bitwise(name, window, quant):
+    from repro.distribution.sharding import head_partition
+    model_size = 2                     # KV = 2 here: one kv head per shard
+    q_lens, cached = SCENARIOS[name]
+    args, pools = _make_batch(hash(name) % 997, q_lens, cached, quant=quant)
+    q, k, v, cu_q, cu_kv, bt = args
+    full = ops.ragged_attention(*args, window=window, block_q=4,
+                                pages_per_block=2, writes_kv=True, **pools)
+    att_parts, pool_parts = [], []
+    qparts = head_partition(KV * G, model_size)
+    kparts = head_partition(KV, model_size)
+    for (qlo, qhi), (klo, khi) in zip(qparts, kparts):
+        sub = {n: p[:, :, klo:khi] for n, p in pools.items()}
+        res = ops.ragged_attention(
+            q[:, :, qlo:qhi], k[:, :, klo:khi], v[:, :, klo:khi],
+            cu_q, cu_kv, bt, window=window, block_q=4, pages_per_block=2,
+            writes_kv=True, **sub)
+        att_parts.append(res[0])
+        pool_parts.append(res[1:])
+    np.testing.assert_array_equal(
+        np.asarray(full[0]), np.asarray(jnp.concatenate(att_parts, axis=2)))
+    # updated pools (and int8 scales) reassemble bitwise over the kv axis
+    for i, full_pool in enumerate(full[1:]):
+        got = jnp.concatenate([p[i] for p in pool_parts], axis=2)
+        if str(np.asarray(full_pool).dtype) == "bfloat16":  # int8 scales
+            np.testing.assert_array_equal(
+                np.asarray(got).view(np.uint16),
+                np.asarray(full_pool).view(np.uint16))
+        else:
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(full_pool))

@@ -1,0 +1,676 @@
+"""Tensor-parallel persistent window: the multi-device differential harness.
+
+``ServeConfig.mesh_model_size > 1`` runs the SAME persistent window SPMD
+over a ``("model",)`` mesh: attention heads and the paged KV pool are
+sharded over the axis (per-shard kernel bodies under ``shard_map``), while
+the ring, scheduler, allocator and telemetry state stay replicated and
+parameters are storage-sharded but gathered at use. The contract this
+module enforces is the strongest one the design admits: sharding is
+INVISIBLE in every observable stream. Concretely, for model in {1, 2, 4}:
+
+  * token streams are BITWISE identical to the unsharded engine — greedy
+    AND temperature > 0 (the sampling key folds (slot, step), so any
+    scheduling or numeric divergence flips tokens);
+  * the ``HostEngine`` mirror (always unsharded — the oracle never grows
+    a mesh) still matches bitwise, including the ordered overload event
+    stream (cancel / preempt / offload / restore through a SHARDED pool)
+    and seeded ``FaultInjector`` quarantine traces;
+  * kill-and-restore on a sharded window is token-identical, and the
+    restored leaves land back on their recorded shardings;
+  * pages and lanes are conserved at drain, exactly as on one device.
+
+Every test here needs forced host devices::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+The module self-skips below 2 devices so the plain single-device tier-1
+run is unaffected; CI runs it in the dedicated ``sharded-smoke`` job.
+"""
+import dataclasses
+import functools
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import TINY_ARCHS
+from repro.core import engine as eng
+from repro.core import offload as offload_lib
+from repro.core import recovery as rec
+from repro.core import ring_buffer as rb
+from repro.core.host_engine import HostEngine
+from repro.distribution import sharding as shard_lib
+from repro.frontend.server import BlinkServer
+from repro.models.api import make_model
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="tensor-parallel differentials need >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+needs4 = pytest.mark.skipif(jax.device_count() < 4,
+                            reason="model=4 leg needs >= 4 devices")
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _no_ambient_backend():
+    """Pin the module to the backends it builds explicitly: the CI
+    matrix's REPRO_ATTN_BACKEND leak must not reach the cached builders
+    (the sharded-vs-unsharded pairs must run the SAME backend)."""
+    prev = os.environ.pop("REPRO_ATTN_BACKEND", None)
+    yield
+    if prev is not None:
+        os.environ["REPRO_ATTN_BACKEND"] = prev
+
+
+# GQA arch for model=2 (kv=2, q=6: shards carry whole head GROUPS);
+# kv=4 arch for the model=4 leg
+ARCH = "qwen2-1.5b"
+ARCH4 = "olmo-1b"
+
+# tiny flash/ragged tiles so the pallas legs accept 24-token prompts
+_BLOCKS = dict(prefill_block_q=8, prefill_block_k=8)
+
+# same scarce-pool mixed config as test_scheduler_diff: page backpressure
+# and admission deferral are part of the sharded differential too
+MIXED = ServeConfig(num_slots=8, max_prompt_len=24, max_new_tokens=8,
+                    decode_batch=4, window=1, admit_per_step=2,
+                    page_size=4, num_pages=28, eos_token=-1,
+                    prefill_chunk_tokens=8, max_prefills_per_step=1,
+                    **_BLOCKS)
+
+# overload config known (seed 41) to fire cancel+preempt+offload+restore
+OVERLOAD = dataclasses.replace(
+    MIXED, decode_batch=2, num_pages=24, slo_classes=2, slo_preempt=True,
+    deadline_policy="e2e", slo_ttft_steps=(5, 60), slo_tpot_steps=(2, 12))
+
+FAULT_MIXED = dataclasses.replace(MIXED, watchdog_steps=4)
+
+MAX_STEPS = 250
+_TERMINAL = (rb.DECODE_COMPLETED, rb.CANCELLED, rb.FAULTED)
+
+
+def _serve(n, base=MIXED, *, backend="gather", unified=False):
+    return dataclasses.replace(base, mesh_model_size=n,
+                               attn_backend=backend, attn_unified=unified)
+
+
+@functools.lru_cache(maxsize=None)
+def _model(arch, n, backend="gather", unified=False):
+    """(api, params) for one (arch, mesh size, backend) leg. Params are
+    initialised from the same PRNGKey on every leg — the sharded init
+    stores them under ``param_pspecs`` but their BYTES must equal the
+    unsharded init's (asserted below), so every leg is the same model."""
+    mesh = shard_lib.make_serve_mesh(n)
+    api = make_model(TINY_ARCHS[arch], attn_backend=backend,
+                     attn_unified=unified, mesh=mesh, **_BLOCKS)
+    return api, api.init_params(jax.random.PRNGKey(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _window(arch, serve):
+    api, _ = _model(arch, serve.mesh_model_size, serve.attn_backend,
+                    serve.attn_unified)
+    return eng.make_serve_window(api, serve)
+
+
+def _vocab(arch):
+    return TINY_ARCHS[arch].vocab_size
+
+
+# test_scheduler_diff's trace space, byte-for-byte (same rng consumption
+# order) — the "known-firing" overload/fault seeds below are cited FROM
+# that module's sweeps and only fire on the identical draw sequence
+_PREFIX_POOL = np.arange(100, 124).tolist()
+
+
+def _materialize(trace, seed):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for arrival, plen, max_new, temp, share in trace:
+        if share:
+            shared = min(plen - 1, 8)
+            toks = _PREFIX_POOL[:shared] + \
+                rng.integers(3, 512, plen - shared).tolist()
+        else:
+            toks = rng.integers(3, 512, plen).tolist()
+        reqs.append((arrival, toks, max_new, temp))
+    return reqs
+
+
+def _random_trace(seed):
+    rng = np.random.default_rng(seed)
+    trace = [(int(rng.integers(0, 11)),                  # arrival step
+              int(rng.integers(2, 25)),                  # prompt len
+              int(rng.integers(1, 9)),                   # max_new
+              float(rng.choice([0.0, 0.0, 0.8, 1.4])),   # temperature
+              bool(rng.integers(0, 2)))                  # shared prefix
+             for _ in range(int(rng.integers(1, 6)))]
+    return _materialize(trace, seed)
+
+
+def _run_device(arch, serve, reqs):
+    """Replay a trace through the (possibly sharded) persistent window at
+    window=1. Returns (outputs by request idx, drained-check state)."""
+    api, params = _model(arch, serve.mesh_model_size, serve.attn_backend,
+                         serve.attn_unified)
+    fn = _window(arch, serve)
+    state = eng.init_engine_state(api, serve, seed=0)
+    slot_of = {}
+    arrival = 0
+    for step in range(MAX_STEPS):
+        ring = state.ring
+        states_np = np.asarray(ring.slot_state)
+        for i, (arr, toks, max_new, temp) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            empties = np.where(states_np == rb.EMPTY)[0]
+            if not len(empties):
+                continue                     # ring full: retry next step
+            slot = int(empties[0])
+            ring = rb.submit_request(ring, slot, tokens=toks, request_id=i,
+                                     max_new=max_new, arrival=arrival,
+                                     temperature=temp, step=step)
+            states_np = np.asarray(ring.slot_state)
+            slot_of[i] = slot
+            arrival += 1
+        state = dataclasses.replace(state, ring=ring)
+        state = fn(params, state)
+        states_np = np.asarray(state.ring.slot_state)
+        if len(slot_of) == len(reqs) and all(
+                states_np[s] == rb.DECODE_COMPLETED
+                for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("trace did not drain")
+    out = np.asarray(state.ring.output_arena)
+    gen = np.asarray(state.ring.generated)
+    return {i: out[s, :gen[s]].tolist() for i, s in slot_of.items()}, state
+
+
+def _assert_conserved(serve, state):
+    """Page + lane conservation at drain on the sharded plane."""
+    state = eng.drain_completed(state)
+    assert int(state.alloc.top) == serve.num_pages
+    free = np.asarray(state.alloc.free_stack)[:int(state.alloc.top)]
+    assert sorted(free.tolist()) == list(range(serve.num_pages))
+    assert (np.asarray(state.lane_slot) == -1).all()
+
+
+def _assert_pool_sharded(state, n):
+    """The differential is only a differential if the pool is genuinely
+    sharded: the KV leaves must carry a NamedSharding over ``model``."""
+    kvc = state.cache["kv"]
+    spec = kvc.k_pages.sharding.spec
+    assert "model" in spec, spec
+    assert kvc.k_pages.sharding.mesh.shape["model"] == n
+
+
+# --- bitwise token identity: sharded == unsharded, every backend leg --------
+
+
+LEGS = {"gather_split": ("gather", False),
+        "gather_unified": ("gather", True),
+        "pallas_split": ("pallas", False),
+        "pallas_unified": ("pallas", True)}
+
+
+@pytest.mark.parametrize("leg", sorted(LEGS))
+@pytest.mark.parametrize("seed", [0, 3])
+def test_sharded_tokens_bitwise_equal_unsharded(leg, seed):
+    """model=2 == model=1, bitwise, greedy AND temperature > 0, on both
+    attention backends with and without the unified dispatch — sharding
+    the heads and the pool must not move a single sampled token."""
+    backend, unified = LEGS[leg]
+    reqs = _random_trace(seed)
+    base, _ = _run_device(ARCH, _serve(1, backend=backend, unified=unified),
+                          reqs)
+    serve2 = _serve(2, backend=backend, unified=unified)
+    shrd, state = _run_device(ARCH, serve2, reqs)
+    assert base == shrd
+    _assert_pool_sharded(state, 2)
+    _assert_conserved(serve2, state)
+
+
+@needs4
+@pytest.mark.parametrize("seed", [1])
+def test_sharded_tokens_bitwise_equal_model4(seed):
+    """The 4-way split (kv=4 arch): model=1 == model=2 == model=4."""
+    reqs = _random_trace(seed)
+    outs = {}
+    for n in (1, 2, 4):
+        outs[n], state = _run_device(ARCH4, _serve(n), reqs)
+        if n > 1:
+            _assert_pool_sharded(state, n)
+    assert outs[1] == outs[2] == outs[4]
+
+
+def test_sharded_params_bitwise_equal_unsharded():
+    """Storage-sharded parameter init is byte-identical to single-device
+    init: ``init_params`` shards placement, never values."""
+    _, p1 = _model(ARCH, 1)
+    _, p2 = _model(ARCH, 2)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), p1, p2)
+
+
+# --- sharded device vs HostEngine oracle ------------------------------------
+
+
+def _run_host(arch, serve, reqs):
+    """The HostEngine mirror NEVER shards — it is the numpy oracle the
+    sharded window must match bitwise (built from the unsharded api;
+    params are byte-identical across mesh sizes)."""
+    api, params = _model(arch, 1, serve.attn_backend, serve.attn_unified)
+    host = HostEngine(api, dataclasses.replace(serve, mesh_model_size=1),
+                      params, seed=0)
+    slot_of = {}
+    arrival = 0
+    for step in range(MAX_STEPS):
+        for i, (arr, toks, max_new, temp) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            s = host.submit(toks, max_new=max_new, temperature=temp,
+                            arrival=arrival)
+            if s < 0:
+                continue
+            slot_of[i] = s
+            arrival += 1
+        host.step()
+        if len(slot_of) == len(reqs) and all(
+                host.slot_state[s] == rb.DECODE_COMPLETED
+                for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("trace did not drain (host)")
+    return {i: list(host.outputs[s]) for i, s in slot_of.items()}, host
+
+
+@pytest.mark.parametrize("seed", [5, 8])
+def test_sharded_device_bitwise_equals_host(seed):
+    reqs = _random_trace(seed)
+    serve = _serve(2)
+    dev, state = _run_device(ARCH, serve, reqs)
+    hst, host = _run_host(ARCH, serve, reqs)
+    assert dev == hst
+    _assert_conserved(serve, state)
+    assert len(host.free_pages) == serve.num_pages
+
+
+# --- overload through a sharded pool ----------------------------------------
+
+
+def _random_overload_trace(seed):
+    rng = np.random.default_rng(seed)
+    trace = [(int(rng.integers(0, 14)),                  # arrival step
+              int(rng.integers(2, 25)),                  # prompt len
+              int(rng.integers(1, 9)),                   # max_new
+              float(rng.choice([0.0, 0.0, 0.8, 1.4])),   # temperature
+              bool(rng.integers(0, 2)))                  # shared prefix
+             for _ in range(int(rng.integers(2, 7)))]
+    reqs = _materialize(trace, seed)
+    slo = rng.integers(0, 2, len(reqs))
+    slo[int(rng.integers(0, len(reqs)))] = 1             # >=1 batch-class
+    return [(a, t, m, temp, int(s))
+            for (a, t, m, temp), s in zip(reqs, slo)]
+
+
+def _run_device_overload(arch, serve, reqs):
+    """test_scheduler_diff's overload driver on the sharded window:
+    ``service_overload`` spills FROM and restores INTO a model-sharded KV
+    pool at every boundary."""
+    api, params = _model(arch, serve.mesh_model_size, serve.attn_backend,
+                         serve.attn_unified)
+    fn = _window(arch, serve)
+    state = eng.init_engine_state(api, serve, seed=0)
+    buf = offload_lib.KVOffloadBuffer()
+    events = []
+    slot_of = {}
+    arrival = 0
+    for step in range(MAX_STEPS):
+        ring = state.ring
+        states_np = np.asarray(ring.slot_state)
+        for i, (arr, toks, max_new, temp, slo) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            empties = np.where(states_np == rb.EMPTY)[0]
+            if not len(empties):
+                continue
+            slot = int(empties[0])
+            rel = serve.deadline_steps(slo, max_new)
+            ring = rb.submit_request(
+                ring, slot, tokens=toks, request_id=i, max_new=max_new,
+                arrival=arrival, temperature=temp, step=step, slo_class=slo,
+                deadline=None if rel is None else step + rel)
+            states_np = np.asarray(ring.slot_state)
+            slot_of[i] = slot
+            arrival += 1
+        pre = np.asarray(ring.slot_state).copy()
+        state = dataclasses.replace(state, ring=ring)
+        state = fn(params, state)
+        post = np.asarray(state.ring.slot_state)
+        rid = np.asarray(state.ring.request_id)
+        for s in np.flatnonzero((post == rb.CANCELLED)
+                                & (pre != rb.CANCELLED)):
+            events.append(("cancel", int(rid[s]), int(s)))
+        for s in np.flatnonzero((post == rb.PREEMPTED)
+                                & (pre != rb.PREEMPTED)):
+            events.append(("preempt", int(rid[s]), int(s)))
+        state, ev = offload_lib.service_overload(state, buf, serve)
+        events.extend(ev)
+        states_np = np.asarray(state.ring.slot_state)
+        if len(slot_of) == len(reqs) and not buf.entries and all(
+                states_np[s] in _TERMINAL for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("overload trace did not drain")
+    out = np.asarray(state.ring.output_arena)
+    gen = np.asarray(state.ring.generated)
+    outputs = {i: out[s, :gen[s]].tolist() for i, s in slot_of.items()}
+    return outputs, state, events, buf
+
+
+def _run_host_overload(serve, reqs):
+    api, params = _model(ARCH, 1, serve.attn_backend, serve.attn_unified)
+    host = HostEngine(api, dataclasses.replace(serve, mesh_model_size=1),
+                      params, seed=0)
+    slot_of = {}
+    arrival = 0
+    for step in range(MAX_STEPS):
+        for i, (arr, toks, max_new, temp, slo) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            rel = serve.deadline_steps(slo, max_new)
+            s = host.submit(toks, max_new=max_new, temperature=temp,
+                            arrival=arrival, slo_class=slo,
+                            deadline=None if rel is None else step + rel,
+                            request_id=i)
+            if s < 0:
+                continue
+            slot_of[i] = s
+            arrival += 1
+        host.step()
+        if len(slot_of) == len(reqs) and not host.offload and all(
+                host.slot_state[s] in _TERMINAL
+                for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("overload trace did not drain (host)")
+    return {i: list(host.outputs[s]) for i, s in slot_of.items()}, host
+
+
+@pytest.mark.parametrize("seed", [41, 44])
+def test_sharded_overload_device_bitwise_equals_host(seed):
+    """Known-firing overload seeds (from test_scheduler_diff's sweep):
+    the sharded engine's token streams AND ordered decision-event streams
+    match the unsharded host oracle, the spill buffer drains, and the
+    pool comes back out of offload/restore still model-sharded."""
+    serve = _serve(2, base=OVERLOAD)
+    reqs = _random_overload_trace(seed)
+    dev, state, dev_events, buf = _run_device_overload(ARCH, serve, reqs)
+    hst, host = _run_host_overload(serve, reqs)
+    assert dev == hst
+    assert dev_events == host.events
+    assert dev_events, "trace exercised no overload decisions — vacuous"
+    assert not buf.entries and not host.offload
+    # eager host round-trips must not demote the pool to one device
+    _assert_pool_sharded(state, 2)
+    _assert_conserved(serve, state)
+    assert len(host.free_pages) == serve.num_pages
+
+
+def test_sharded_overload_covers_restore():
+    """The (config, seed) pairs above must actually exercise the
+    offload -> restore path through the sharded pool; if the trace space
+    drifts, this trips instead of the differential silently thinning."""
+    kinds = set()
+    for seed in (41, 44):
+        _, _, ev, _ = _run_device_overload(
+            ARCH, _serve(2, base=OVERLOAD), _random_overload_trace(seed))
+        kinds |= {k for k, _r, _s in ev}
+    assert {"preempt", "offload", "restore"} <= kinds, kinds
+
+
+# --- scripted ingress faults on a sharded window ----------------------------
+
+
+def _random_fault_trace(seed):
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(0, 11)),
+             rng.integers(3, _vocab(ARCH),
+                          int(rng.integers(2, 25))).tolist(),
+             int(rng.integers(1, 9)), 0.0)
+            for _ in range(int(rng.integers(2, 6)))]
+
+
+def _run_device_faulty(arch, serve, reqs, inj):
+    api, params = _model(arch, serve.mesh_model_size, serve.attn_backend,
+                         serve.attn_unified)
+    fn = _window(arch, serve)
+    plan = inj.plan(len(reqs))
+    state = eng.init_engine_state(api, serve, seed=0)
+    slot_of = {}
+    events = []
+    issued = []
+    arrival = 0
+    for step in range(MAX_STEPS):
+        ring = state.ring
+        states_np = np.asarray(ring.slot_state)
+        for i, (arr, toks, max_new, temp) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            empties = np.where(states_np == rb.EMPTY)[0]
+            if not len(empties):
+                continue
+            slot = int(empties[0])
+            fault = inj.resolve(i, plan[i], tokens=toks, max_new=max_new,
+                                temperature=temp, issued_seqs=issued)
+            ring = rec.faulty_submit_device(ring, slot, fault,
+                                            request_id=i, arrival=arrival,
+                                            step=step)
+            issued.append(int(ring.seq[slot]))
+            states_np = np.asarray(ring.slot_state)
+            slot_of[i] = slot
+            arrival += 1
+        pre = np.asarray(ring.slot_state).copy()
+        state = dataclasses.replace(state, ring=ring)
+        state = fn(params, state)
+        post = np.asarray(state.ring.slot_state)
+        rid = np.asarray(state.ring.request_id)
+        for s in np.flatnonzero((post == rb.FAULTED) & (pre != rb.FAULTED)):
+            events.append(("fault", int(rid[s]), int(s)))
+        if len(slot_of) == len(reqs) and all(
+                post[s] in _TERMINAL for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("fault trace did not drain (device)")
+    out = np.asarray(state.ring.output_arena)
+    gen = np.asarray(state.ring.generated)
+    outputs = {i: out[s, :gen[s]].tolist() for i, s in slot_of.items()}
+    final = {i: int(post[s]) for i, s in slot_of.items()}
+    return outputs, final, events, state
+
+
+def _run_host_faulty(serve, reqs, inj):
+    api, params = _model(ARCH, 1, serve.attn_backend, serve.attn_unified)
+    plan = inj.plan(len(reqs))
+    host = HostEngine(api, dataclasses.replace(serve, mesh_model_size=1),
+                      params, seed=0)
+    slot_of = {}
+    issued = []
+    arrival = 0
+    for step in range(MAX_STEPS):
+        for i, (arr, toks, max_new, temp) in enumerate(reqs):
+            if arr > step or i in slot_of:
+                continue
+            fault = inj.resolve(i, plan[i], tokens=toks, max_new=max_new,
+                                temperature=temp, issued_seqs=issued)
+            s = rec.faulty_submit_host(host, fault, request_id=i,
+                                       arrival=arrival)
+            if s < 0:
+                continue
+            issued.append(int(host.seq[s]))
+            slot_of[i] = s
+            arrival += 1
+        host.step()
+        if len(slot_of) == len(reqs) and all(
+                host.slot_state[s] in _TERMINAL
+                for s in slot_of.values()):
+            break
+    else:
+        raise AssertionError("fault trace did not drain (host)")
+    outputs = {i: list(host.outputs[s]) for i, s in slot_of.items()}
+    final = {i: int(host.slot_state[s]) for i, s in slot_of.items()}
+    return outputs, final, [e for e in host.events if e[0] == "fault"], host
+
+
+@pytest.mark.parametrize("seed", [46, 49])
+def test_sharded_fault_device_bitwise_equals_host(seed):
+    """Seeded FaultInjector traces (known to quarantine): the sharded
+    window's fault-event stream, terminal states and survivor token
+    streams all match the unsharded host mirror; quarantine releases
+    every page and lane on the sharded plane too."""
+    serve = _serve(2, base=FAULT_MIXED)
+    reqs = _random_fault_trace(seed)
+    dev, dev_final, dev_ev, state = _run_device_faulty(
+        ARCH, serve, reqs, rec.FaultInjector(seed=seed * 31 + 7, vocab=512))
+    hst, hst_final, hst_ev, host = _run_host_faulty(
+        serve, reqs, rec.FaultInjector(seed=seed * 31 + 7, vocab=512))
+    assert dev_final == hst_final
+    assert dev == hst
+    assert dev_ev == hst_ev
+    assert rb.FAULTED in dev_final.values(), "no quarantine fired — vacuous"
+    _assert_conserved(serve, state)
+    assert len(host.free_pages) == serve.num_pages
+
+
+# --- crash recovery on a sharded window -------------------------------------
+
+
+def test_sharded_kill_and_restore_token_identity():
+    """Kill the SHARDED window at a scripted boundary, restore the
+    snapshot, run to idle: streams bit-identical to the unkilled sharded
+    run AND to the unsharded reference — the snapshot round-trips the
+    model-sharded pool byte-exactly and re-applies its sharding."""
+    serve = _serve(2, base=dataclasses.replace(
+        MIXED, num_pages=48, window=2, snapshot_every_steps=2))
+    api, params = _model(ARCH, 2)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(3, _vocab(ARCH),
+                            int(rng.integers(4, 20))).tolist()
+               for _ in range(5)]
+
+    def run(kill_at):
+        srv = BlinkServer(api, serve, params)
+        ids = [srv.submit(p, max_new=8) for p in prompts]
+        if kill_at:
+            for _ in range(kill_at):
+                srv.run_window()
+            assert srv.snapshot is not None
+            srv.restore_snapshot()          # the "crash"
+            _assert_pool_sharded(srv.state, 2)
+        srv.run_until_idle(max_windows=200)
+        return {r: tuple(srv.frontend.done[r].output) for r in ids}
+
+    ref = run(kill_at=0)
+    assert all(len(v) == 8 for v in ref.values())
+    inj = rec.FaultInjector(seed=23, vocab=512)
+    got = run(kill_at=inj.kill_window(6))
+    assert list(ref.values()) == list(got.values())
+    # and the unsharded engine agrees token-for-token
+    api1, params1 = _model(ARCH, 1)
+    srv1 = BlinkServer(api1, dataclasses.replace(serve, mesh_model_size=1),
+                       params1)
+    ids1 = [srv1.submit(p, max_new=8) for p in prompts]
+    srv1.run_until_idle(max_windows=200)
+    assert list(ref.values()) == \
+        [tuple(srv1.frontend.done[r].output) for r in ids1]
+
+
+def test_sharded_snapshot_roundtrip_byte_exact():
+    """snapshot_engine/restore_engine on a mid-serve sharded state: every
+    leaf round-trips byte-exactly AND lands back on its recorded device
+    sharding (the latent assumption the audit closed: a restore that
+    re-materialised leaves with ``jnp.asarray`` would silently demote the
+    pool to one device and poison the next window's donation layout)."""
+    serve = _serve(2)
+    api, params = _model(ARCH, 2)
+    fn = _window(ARCH, serve)
+    state = eng.init_engine_state(api, serve, seed=0)
+    ring = state.ring
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        ring = rb.submit_request(
+            ring, i, tokens=rng.integers(3, _vocab(ARCH), 10).tolist(),
+            request_id=i, max_new=6, arrival=i, temperature=0.0, step=0)
+    state = dataclasses.replace(state, ring=ring)
+    for _ in range(5):                       # mid-serve: pool is populated
+        state = fn(params, state)
+    snap = rec.snapshot_engine(state)
+    restored, _ = rec.restore_engine(snap)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, restored)
+    orig = jax.tree_util.tree_leaves(state)
+    back = jax.tree_util.tree_leaves(restored)
+    for a, b in zip(orig, back):
+        assert a.sharding == b.sharding, (a.sharding, b.sharding)
+    _assert_pool_sharded(restored, 2)
+
+
+def test_sharded_offload_restore_roundtrip_keeps_sharding():
+    """Direct regression for the offload audit: ``service_overload``'s
+    host round-trip (spill out, restore in) must hand back ring/alloc/KV
+    leaves on their ORIGINAL shardings, byte-exact — asserted on a real
+    preempt->offload->restore trace rather than the no-op path."""
+    serve = _serve(2, base=dataclasses.replace(
+        MIXED, decode_batch=2, num_pages=40, slo_classes=2,
+        slo_preempt=True))
+    rng = np.random.default_rng(99)
+    reqs = [
+        (0, rng.integers(3, _vocab(ARCH), 12).tolist(), 8, 0.0, 1),
+        (0, rng.integers(3, _vocab(ARCH), 12).tolist(), 8, 0.0, 1),
+        (8, rng.integers(3, _vocab(ARCH), 10).tolist(), 4, 0.0, 0),
+    ]
+    dev, state, events, buf = _run_device_overload(ARCH, serve, reqs)
+    kinds = [k for k, _r, _s in events]
+    assert "offload" in kinds and "restore" in kinds, kinds
+    assert buf.restores == buf.offloads and buf.offloads >= 1
+    _assert_pool_sharded(state, 2)
+    # token identity vs the same trace served without preemption
+    base = _serve(2, base=dataclasses.replace(
+        MIXED, decode_batch=2, num_pages=40))
+    out_b, _ = _run_device(ARCH, base,
+                           [(a, t, m, temp) for a, t, m, temp, _ in reqs])
+    assert dev == out_b
+
+
+# --- the traced step is genuinely SPMD --------------------------------------
+
+
+def test_sharded_unified_step_one_dispatch_one_shard_map():
+    """The sharded mixed step still traces to exactly ONE attention
+    pallas_call — inside exactly ONE shard_map (SPMD traces the per-shard
+    body once; a per-shard Python loop would show N dispatches)."""
+    from repro import jaxpr_inspect as ji
+    serve = _serve(2, backend="pallas", unified=True)
+    api, params = _model(ARCH, 2, "pallas", True)
+    state = eng.init_engine_state(api, serve, seed=0)
+    step = eng.make_engine_step(api, serve)
+    assert ji.count_attention_dispatches(step, params, state) == 1
+    counts = ji.count_primitives(step, params, state, names=("shard_map",))
+    assert counts["shard_map"] == 1, counts
+
+
+def test_mesh_size_mismatch_refused():
+    """make_engine_step refuses an api/serve mesh-size disagreement (the
+    silent failure mode: a replicated window quietly serving a config
+    that promised tensor parallelism)."""
+    api, _ = _model(ARCH, 2)
+    with pytest.raises(ValueError, match="mesh_model_size"):
+        eng.init_engine_state(api, _serve(1), seed=0)
+    api1, _ = _model(ARCH, 1)
+    with pytest.raises(ValueError, match="mesh_model_size"):
+        eng.init_engine_state(api1, _serve(2), seed=0)
